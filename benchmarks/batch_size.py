@@ -1,0 +1,39 @@
+"""Fig 6: batch-size (B') sensitivity — runtime vs peak queued memory.
+
+The paper's trade-off: small B' starves parallelism/raises round counts;
+large B' raises the bounded queue memory.  We sweep B' and report runtime,
+rounds, and the exact peak queued-tuple bound m*B (Lemma 3.1)."""
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import query as Q
+from repro.core.bigjoin import (BigJoinConfig, build_indices, run_bigjoin,
+                                seed_tuples_for)
+from repro.core.csr import Graph
+from repro.core.plan import make_plan
+from repro.data.synthetic import rmat_graph
+
+
+def main(scale=11, edge_factor=8):
+    g = Graph.from_edges(rmat_graph(scale, edge_factor, 2)).degree_relabel()
+    q = Q.triangle(symmetric=True)
+    plan = make_plan(q)
+    rels = {Q.EDGE: g.edges}
+    idx = build_indices(plan, rels)
+    seed = seed_tuples_for(plan, rels)
+    base_count = None
+    for bp in (64, 256, 1024, 4096, 16384):
+        cfg = BigJoinConfig(batch=bp, seed_chunk=bp, mode="count")
+        t, res = timeit(
+            lambda cfg=cfg: run_bigjoin(plan, idx, seed, cfg=cfg), repeat=1)
+        if base_count is None:
+            base_count = res.count
+        assert res.count == base_count
+        queue_bound_tuples = (q.num_attrs - 2) * 2 * bp + bp
+        row("fig6_batch_size", f"bprime_{bp}", t,
+            f"rounds={res.steps};queued_bound={queue_bound_tuples};"
+            f"count={res.count}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Shared benchmark helpers.  Every benchmark prints CSV rows:
+``table,name,us_per_call,derived`` (derived = the paper-figure quantity)."""
+import time
+
+
+def timeit(fn, *args, repeat=3, **kw):
+    """Median wall time of fn (first call excluded when it jit-compiles)."""
+    fn(*args, **kw)  # warm
+    times = []
+    for _ in range(repeat):
+        t0 = time.time()
+        out = fn(*args, **kw)
+        times.append(time.time() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def row(table, name, seconds, derived=""):
+    print(f"{table},{name},{seconds * 1e6:.0f},{derived}", flush=True)

@@ -1,0 +1,55 @@
+"""Fig 4 (COST): optimized single-thread triangle counting vs BiGJoin vs
+Delta-BiGJoin.  The paper's COST metric = cores a parallel system needs to
+beat one good thread; here we report the single-core ratio directly (this
+container has one core, so ratio < ~#cores is the 'small COST' signal)."""
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import query as Q
+from repro.core.bigjoin import (BigJoinConfig, build_indices, run_bigjoin,
+                                seed_tuples_for)
+from repro.core.delta import DeltaBigJoin
+from repro.core.generic_join import fast_triangle_count
+from repro.core.plan import make_plan
+from repro.data.synthetic import rmat_graph
+
+
+def main(scale=12, edge_factor=8):
+    edges = rmat_graph(scale, edge_factor, seed=0)
+    from repro.core.csr import Graph
+    g = Graph.from_edges(edges).degree_relabel()
+    q = Q.triangle(symmetric=True)
+    plan = make_plan(q)
+    rels = {Q.EDGE: g.edges}
+
+    t_single, n_single = timeit(fast_triangle_count, g.edges, repeat=3)
+    row("fig4_cost", "single_thread", t_single, n_single)
+
+    cfg = BigJoinConfig(batch=8192, seed_chunk=8192, mode="count")
+    idx = build_indices(plan, rels)
+    seed = seed_tuples_for(plan, rels)
+    t_big, res = timeit(
+        lambda: run_bigjoin(plan, idx, seed, cfg=cfg), repeat=3)
+    assert res.count == n_single, (res.count, n_single)
+    row("fig4_cost", "bigjoin_w1", t_big,
+        f"cost_ratio={t_big / t_single:.2f}")
+
+    # Delta-BiGJoin finding all triangles by streaming the edges in
+    def delta_all():
+        eng = DeltaBigJoin(q, g.edges[:0],
+                           cfg=BigJoinConfig(batch=8192, seed_chunk=8192,
+                                             mode="count", out_capacity=1))
+        total = 0
+        B = max(g.num_edges // 4, 1)
+        for lo in range(0, g.num_edges, B):
+            total += eng.apply(g.edges[lo:lo + B]).count_delta
+        return total
+
+    t_delta, n_delta = timeit(delta_all, repeat=1)
+    assert n_delta == n_single
+    row("fig4_cost", "delta_bigjoin_w1", t_delta,
+        f"cost_ratio={t_delta / t_single:.2f}")
+
+
+if __name__ == "__main__":
+    main()

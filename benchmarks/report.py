@@ -1,0 +1,69 @@
+"""Render dry-run JSONL records into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.report \
+        benchmarks/results/dryrun_single.jsonl
+"""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def ms(s):
+    return f"{s * 1e3:.2f}"
+
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def terms(r):
+    """(Re)derive roofline terms from the recorded raw fields, so older
+    records get the structural memory-term definition uniformly."""
+    pd = r["per_device"]
+    live = (pd["argument_bytes"] or 0) + (pd["temp_bytes"] or 0)
+    compute_s = r["hlo_flops_per_device"] / PEAK
+    memory_s = 2.0 * live / HBM
+    nofusion_s = r["hlo_bytes_per_device"] / HBM
+    coll_s = r["collectives"]["total_wire_bytes"] / ICI
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])[0]
+    bound = max(compute_s, memory_s, coll_s)
+    useful = r["roofline"]["useful_flops_ratio"]
+    # roofline fraction: useful-compute time / bound time
+    model_s = r["roofline"]["model_flops_total"] / r["chips"] / PEAK
+    frac = model_s / bound if bound > 0 else 0.0
+    return compute_s, memory_s, nofusion_s, coll_s, dom, useful, frac
+
+
+def render(path):
+    recs = [json.loads(l) for l in open(path)]
+    print("| arch | shape | mesh | args GiB | temp GiB | compute ms | "
+          "memory ms | collective ms | dominant | useful | roofline frac |")
+    print("|" + "---|" * 11)
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"SKIPPED ({r['skip_reason'][:48]}…) "
+                  f"| | | | | | | |")
+            continue
+        if r["status"] == "error":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"ERROR: {r['error'][:60]} | | | | | | | |")
+            continue
+        pd = r["per_device"]
+        c, m, nf, co, dom, useful, frac = terms(r)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_bytes(pd['argument_bytes'])} "
+              f"| {fmt_bytes(pd['temp_bytes'])} "
+              f"| {ms(c)} | {ms(m)} | {ms(co)} | {dom} "
+              f"| {useful:.2f} | {frac:.3f} |")
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        print(f"\n### {p}\n")
+        render(p)

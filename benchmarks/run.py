@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig4,...]``
+prints ``table,name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4")
+    args = ap.parse_args()
+
+    from benchmarks import (baseline_compare, batch_size, cost_table,
+                            optimizations, scaling, throughput)
+    table = {
+        "fig4": cost_table.main,
+        "tab2_3": baseline_compare.main,
+        "fig5": scaling.main,
+        "fig6": batch_size.main,
+        "tab5": optimizations.main,
+        "tab4": throughput.main,
+    }
+    picks = list(table) if args.only == "all" else args.only.split(",")
+    print("table,name,us_per_call,derived")
+    failures = 0
+    for name in picks:
+        t0 = time.time()
+        try:
+            table[name]()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            print(f"{name},FAILED,0,", flush=True)
+        print(f"# {name} finished in {time.time() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark groups failed")
+
+
+if __name__ == '__main__':
+    main()

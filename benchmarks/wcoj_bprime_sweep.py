@@ -1,0 +1,46 @@
+"""Hillclimb cell #3 (wcoj triangle_static): B' sweep on the production
+mesh.  The join's per-round roofline terms are fixed costs amortized over
+w*B' proposals; throughput = w*B' / max(term).  Run:
+
+    PYTHONPATH=src python benchmarks/wcoj_bprime_sweep.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+import json
+import sys
+
+import numpy as np
+
+
+def main():
+    import repro.configs.wcoj as W
+    from repro.launch import dryrun as D
+
+    results = []
+    for bp in (1024, 4096, 16384, 65536):
+        W.SHAPES["triangle_static"]["batch"] = bp
+        # rebuild the cell with the new batch
+        from repro.configs.base import Cell
+        cell = Cell("triangle_static", "join",
+                    W._build_cell(W.SHAPES["triangle_static"]))
+        from repro.configs import registry
+        spec = registry.get_arch("wcoj-subgraph")
+        object.__setattr__(spec, "cells",
+                           {**spec.cells, "triangle_static": cell})
+        rec = D.run_cell("wcoj-subgraph", "triangle_static", False,
+                         verbose=False)
+        rf = rec["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        thru = 512 * bp / bound
+        results.append((bp, rf, thru))
+        print(f"B'={bp:6d}: compute {rf['compute_s']*1e3:.3f}ms "
+              f"mem {rf['memory_s']*1e3:.3f}ms "
+              f"coll {rf['collective_s']*1e3:.3f}ms -> "
+              f"{thru/1e9:.2f}G proposals/s "
+              f"(dominant {rf['dominant']})", flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end serving driver: continuous subgraph-query monitoring.
+
+This is the paper's deployment scenario (§5.3): load a large graph, then
+*monitor* motif counts as edge updates stream in — Delta-BiGJoin evaluates
+only the delta queries, never recomputing from scratch.  Mixed
+insert/delete batches exercise the multi-version LSM index.
+
+    PYTHONPATH=src python examples/incremental_motifs.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.bigjoin import BigJoinConfig
+from repro.core.delta import DeltaBigJoin
+from repro.core.csr import Graph
+from repro.data.synthetic import rmat_graph
+
+
+def main(scale=11, edge_factor=8, batches=6, batch_size=800):
+    g = Graph.from_edges(rmat_graph(scale, edge_factor, seed=7))
+    n0 = g.num_edges - batches * batch_size
+    print(f"loading {n0:,} edges; monitoring triangle + diamond under "
+          f"{batches} update batches of {batch_size}")
+
+    monitors = {
+        name: DeltaBigJoin(Q.PAPER_QUERIES[name](), g.edges[:n0],
+                           cfg=BigJoinConfig(batch=8192, seed_chunk=8192,
+                                             mode="collect",
+                                             out_capacity=1 << 22))
+        for name in ("triangle", "diamond")
+    }
+    totals = {name: 0 for name in monitors}
+    rng = np.random.default_rng(0)
+    live = g.edges[:n0].copy()
+
+    for i in range(batches):
+        lo = n0 + i * batch_size
+        ins = g.edges[lo:lo + batch_size]
+        # delete a few random live edges too (mixed workload)
+        dels = live[rng.choice(live.shape[0], size=batch_size // 8,
+                               replace=False)]
+        batch = np.concatenate([ins, dels])
+        weights = np.concatenate([
+            np.ones(len(ins), np.int32), -np.ones(len(dels), np.int32)])
+        line = [f"batch {i}:"]
+        for name, eng in monitors.items():
+            t0 = time.time()
+            res = eng.apply(batch, weights)
+            dt = time.time() - t0
+            totals[name] += res.count_delta
+            changes = 0 if res.weights is None else int(
+                np.abs(res.weights).sum())
+            line.append(f"{name} {res.count_delta:+,} "
+                        f"({changes / dt:,.0f} changes/s)")
+        print("  " + "  ".join(line))
+        live = monitors["triangle"].edges  # engine tracks the live set
+
+    # verify the maintained totals against full recomputation
+    from repro.core.generic_join import generic_join
+    for name, eng in monitors.items():
+        _, ref = generic_join(Q.PAPER_QUERIES[name](), {Q.EDGE: live},
+                              enumerate_results=False)
+        _, ref0 = generic_join(Q.PAPER_QUERIES[name](),
+                               {Q.EDGE: g.edges[:n0]},
+                               enumerate_results=False)
+        assert totals[name] == ref - ref0, (name, totals[name], ref - ref0)
+        print(f"{name}: maintained total change {totals[name]:+,} == "
+              f"recompute diff ✓ (now {ref:,} instances)")
+
+
+if __name__ == "__main__":
+    main()

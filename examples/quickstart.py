@@ -1,0 +1,45 @@
+"""Quickstart: count and enumerate triangles with the BiGJoin dataflow.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.bigjoin import (BigJoinConfig, build_indices, run_bigjoin,
+                                seed_tuples_for)
+from repro.core.csr import Graph
+from repro.core.generic_join import generic_join
+from repro.core.plan import make_plan
+from repro.data.synthetic import rmat_graph
+
+
+def main():
+    # a skewed power-law graph — the regime the paper targets
+    g = Graph.from_edges(rmat_graph(scale=11, edge_factor=8, seed=0))
+    print(f"graph: {g.num_vertices:,} vertices, {g.num_edges:,} edges, "
+          f"max out-degree {np.bincount(g.edges[:, 0]).max():,}")
+
+    # triangles via the worst-case-optimal dataflow
+    q = Q.triangle()
+    plan = make_plan(q)  # count-min -> propose -> intersect levels
+    print(f"attribute order: {plan.attr_order}; "
+          f"{len(plan.levels)} extension level(s)")
+
+    idx = build_indices(plan, {Q.EDGE: g.edges})
+    cfg = BigJoinConfig(batch=4096, seed_chunk=4096, mode="collect",
+                        out_capacity=1 << 22)
+    res = run_bigjoin(plan, idx, seed_tuples_for(plan, {Q.EDGE: g.edges}),
+                      cfg=cfg)
+    print(f"BiGJoin: {res.count:,} triangles in {res.steps} rounds "
+          f"({res.proposals:,} proposals, {res.intersections:,} "
+          f"intersections)")
+    print(f"first 3: {res.tuples[:3].tolist()}")
+
+    # cross-check against the serial Generic Join oracle
+    _, ref = generic_join(q, {Q.EDGE: g.edges}, enumerate_results=False)
+    assert res.count == ref, (res.count, ref)
+    print(f"matches serial GJ oracle ({ref:,}) ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""GNN training with WCOJ motif features: the paper's engine as a
+first-class data-pipeline stage (DESIGN.md §4).
+
+Task: predict whether a vertex participates in an above-median number of
+triangles, from local features.  A GatedGCN *with* BiGJoin-computed motif
+features solves this much better than one without — demonstrating the
+join engine feeding the learning stack.
+
+    PYTHONPATH=src python examples/train_gnn_with_motifs.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gnn_family import make_train_step
+from repro.core.csr import Graph
+from repro.data.motifs import motif_features
+from repro.data.synthetic import rmat_graph
+from repro.models import gnn as G
+from repro.optim import adamw_init
+
+
+def run(with_motifs: bool, graph, feats_rand, labels, steps=60):
+    feats = feats_rand
+    if with_motifs:
+        motifs = motif_features(graph, ("triangle",))
+        feats = np.concatenate([feats_rand, motifs], 1)
+    cfg = G.GNNConfig("demo", "gatedgcn", n_layers=3, d_hidden=32,
+                      d_in=feats.shape[1], d_out=2, task="node_class")
+    params = G.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg), donate_argnums=(0, 1))
+    e = graph.edges
+    batch = {
+        "feats": jnp.asarray(feats),
+        "edge_src": jnp.asarray(e[:, 0]), "edge_dst": jnp.asarray(e[:, 1]),
+        "edge_mask": jnp.ones(e.shape[0], bool),
+        "edge_feats": jnp.ones((e.shape[0], 1), jnp.float32),
+        "labels": jnp.asarray(labels),
+        "label_mask": jnp.ones(labels.shape[0], bool),
+    }
+    for _ in range(steps):
+        params, opt, m = step_fn(params, opt, batch)
+    return float(m["acc"])
+
+
+def main():
+    graph = Graph.from_edges(rmat_graph(10, 8, seed=1))
+    rng = np.random.default_rng(0)
+    feats_rand = rng.normal(size=(graph.num_vertices, 8)).astype(np.float32)
+    tri = motif_features(graph, ("triangle",))[:, 0]
+    labels = (tri > np.median(tri)).astype(np.int32)
+
+    acc_plain = run(False, graph, feats_rand, labels)
+    acc_motif = run(True, graph, feats_rand, labels)
+    print(f"accuracy without motif features: {acc_plain:.3f}")
+    print(f"accuracy with  WCOJ motif features: {acc_motif:.3f}")
+    assert acc_motif > acc_plain + 0.1, "motif features should dominate"
+    print("WCOJ features lift accuracy ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Train a ~100M-parameter LM for a few hundred steps on CPU.
+
+Exercises the full training substrate end-to-end: model, AdamW + cosine
+schedule, deterministic restartable data pipeline, atomic checkpoints.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.lm_family import make_train_step
+from repro.data import TokenStream
+from repro.models.transformer import TransformerConfig, init
+from repro.optim import adamw_init, cosine_decay
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    # ~100M params: 8L x 512d x 8H, 32k vocab (tied embeddings)
+    cfg = TransformerConfig(
+        "lm-100m", num_layers=8, d_model=768, n_heads=12, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab=32768,
+        param_dtype=jnp.float32, act_dtype=jnp.float32, remat=False)
+    params = init(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n / 1e6:.1f}M params")
+
+    opt = adamw_init(params)
+    sched = cosine_decay(3e-4, 20, args.steps)
+    step_fn = jax.jit(make_train_step(cfg, schedule=sched),
+                      donate_argnums=(0, 1))
+    ts = TokenStream(cfg.vocab, args.batch, args.seq, seed=0)
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=2)
+
+    t0, losses = time.time(), []
+    for s in range(args.steps):
+        b = ts.batch_at(s)
+        batch = {"tokens": jnp.asarray(b[:, :-1]),
+                 "labels": jnp.asarray(b[:, 1:])}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if (s + 1) % 20 == 0:
+            dt = time.time() - t0
+            print(f"step {s + 1:4d} loss {losses[-1]:.4f} "
+                  f"({args.batch * args.seq * 20 / dt:,.0f} tok/s)")
+            t0 = time.time()
+        if (s + 1) % 100 == 0:
+            mgr.save({"params": params, "opt": opt}, s + 1)
+    first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved ✓' if last < first else 'no improvement ✗'})")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: worst-case optimal low-memory dataflows (BiGJoin) in JAX.
+
+x64 is enabled globally: the join engine packs 2-column index keys into
+int64.  All model code uses explicit dtypes (bf16/f32/int32) so this does not
+change numeric behaviour elsewhere.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,44 @@
+"""Config system: every architecture is an ArchSpec with
+  * the exact assigned full config (dry-run only: abstract, never allocated)
+  * a reduced smoke config (CPU-runnable: one real train step in tests)
+  * its input-shape set, each cell exposing
+      - abstract_inputs / abstract_state  (ShapeDtypeStructs)
+      - logical axes for both             (sharding)
+      - step(cfg) -> the jittable function the dry-run lowers
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (architecture x input-shape) dry-run cell."""
+
+    shape_name: str
+    kind: str  # train | prefill | decode | serve | retrieval | join | delta
+    # () -> (step_fn, abstract_args pytree, logical_axes pytree (or None),
+    #        donate_argnums)
+    build: Callable[[], Tuple[Callable, Tuple, Any, Tuple[int, ...]]]
+    skip_reason: Optional[str] = None
+    # depth probing for exact HLO cost extrapolation (scan bodies are
+    # counted once by XLA cost analysis): probe(mesh, depth) builds the same
+    # cell at a reduced, fully-unrolled layer depth.
+    probe: Optional[Callable] = None
+    probe_depths: Tuple[int, int] = (1, 2)
+    full_depth: int = 0
+    probe_scale: float = 1.0  # full-cell cost / probe cost (batch ratio)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str  # lm | gnn | recsys | wcoj
+    describe: str
+    full_config: Any
+    smoke_config: Any
+    cells: Dict[str, Cell]
+    # smoke_run(cfg) -> metrics dict; runs a real reduced-config step on CPU
+    smoke_run: Callable[[Any], Dict[str, float]]
+    model_flops: Callable[[str], float]  # analytic 6*N*D-style FLOPs/step

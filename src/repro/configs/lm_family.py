@@ -1,0 +1,195 @@
+"""LM-family ArchSpec builder: train / prefill / decode / long-context cells.
+
+The dry-run lowers the *full* update step for training cells (fwd + bwd +
+AdamW, params/opt donated) and the cache-carrying decode step for serving
+cells — the complete memory story, not just a forward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec, Cell
+from repro.models import transformer as T
+from repro.optim import adamw_init, adamw_update, cosine_decay
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256, microbatches=8),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, shard_seq=True),
+}
+
+
+def _batch_axes(pure_dp=False):
+    name = "batch_dp3" if pure_dp else "batch"
+    return {"tokens": (name, None), "labels": (name, None)}
+
+
+def _opt_axes(params_axes):
+    from repro.optim.adamw import AdamWState
+    return AdamWState((), params_axes, params_axes)
+
+
+def make_train_step(cfg: T.TransformerConfig, schedule=None,
+                    microbatches: int = 1):
+    """Full update step.  ``microbatches`` > 1 runs gradient accumulation:
+    activations scale with B/M while the optimizer still sees the global
+    batch (the paper's low-memory batching discipline applied to training —
+    DESIGN.md §4)."""
+    sched = schedule or cosine_decay(3e-4, 2000, 100_000)
+
+    def train_step(params, opt, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                T.loss_fn, has_aux=True)(params, batch, cfg)
+        else:
+            M = microbatches
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(
+                    T.loss_fn, has_aux=True)(params, mb, cfg)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (g0, jnp.float32(0.0)), mbs,
+                unroll=cfg.scan_unroll)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss / M
+            metrics = {}
+        params, opt, gnorm = adamw_update(params, grads, opt,
+                                          lr=sched(opt.step))
+        return params, opt, {"loss": loss, "gnorm": gnorm, **metrics}
+
+    return train_step
+
+
+def lm_arch(arch_id: str, describe: str, full: T.TransformerConfig,
+            smoke: T.TransformerConfig,
+            long_ok: Optional[bool] = None) -> ArchSpec:
+    long_ok = full.sub_quadratic if long_ok is None else long_ok
+
+    def build_train(shape, cfg_override=None):
+        def build(mesh=None):
+            cfg = cfg_override or full
+            # §Perf iter A3: dense train cells run pure-DP (ZeRO-3), no
+            # microbatching needed (per-chip activations are 1/|mesh|).
+            # MoE keeps EP + microbatching: full-DP expert gathers measured
+            # WORSE (B2 refuted — the dispatch scatter dominates either way
+            # and full gathers blow the temp footprint).
+            import dataclasses as _d
+            pure = not cfg.is_moe
+            cfg = _d.replace(cfg, pure_dp=pure)
+            M = 1 if pure else shape.get("microbatches", 1)
+            params = T.abstract_params(cfg)
+            opt = jax.eval_shape(adamw_init, params)
+            B, S = shape["batch"], shape["seq"]
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            p_ax = T.logical_axes(cfg)
+            axes = (p_ax, _opt_axes(p_ax), _batch_axes(pure))
+            step = make_train_step(cfg, microbatches=M)
+            return step, (params, opt, batch), axes, (0, 1)
+        return build
+
+    def build_prefill(shape, cfg_override=None):
+        def build(mesh=None):
+            cfg = cfg_override or full
+            params = T.abstract_params(cfg)
+            B, S = shape["batch"], shape["seq"]
+            tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            axes = (T.logical_axes(cfg), ("batch", None))
+            step = functools.partial(T.prefill, cfg=cfg)
+            return step, (params, tokens), axes, ()
+        return build
+
+    def build_decode(shape, cfg_override=None):
+        def build(mesh=None):
+            cfg = cfg_override or full
+            params = T.abstract_params(cfg)
+            B, S = shape["batch"], shape["seq"]
+            cache = T.abstract_cache(cfg, B, S)
+            tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            axes = (T.logical_axes(cfg), T.cache_logical_axes(cfg),
+                    ("batch", None), ())
+            step = functools.partial(T.decode_step, cfg=cfg)
+            return step, (params, cache, tokens, pos), axes, (1,)
+        return build
+
+    import dataclasses as _dc
+
+    cells: Dict[str, Cell] = {}
+    period = max(full.local_global_period, 1)
+    for name, shape in SHAPES.items():
+        kind = shape["kind"]
+        skip = None
+        if name == "long_500k" and not long_ok:
+            skip = ("pure full-attention architecture: 524k dense attention "
+                    "is out of assignment scope (see DESIGN.md §4)")
+        maker = {"train": build_train, "prefill": build_prefill,
+                 "decode": build_decode}[kind]
+
+        # probes: unrolled layer scan at two depths; train probes drop
+        # microbatching but keep the full batch (one fwd+bwd over B tokens
+        # equals the M-microbatch total, and per-chip sharding matches)
+        pshape = dict(shape)
+        scale = 1.0
+        if kind == "train":
+            pshape["microbatches"] = 1
+
+        def probe(mesh, depth, maker=maker, pshape=pshape):
+            cfg2 = _dc.replace(full, num_layers=depth, scan_unroll=True)
+            return maker(pshape, cfg2)(mesh)
+
+        cells[name] = Cell(name, kind, maker(shape), skip, probe,
+                           (period, 2 * period), full.num_layers, scale)
+
+    def smoke_run(cfg=None):
+        cfg = cfg or smoke
+        from repro.data import TokenStream
+        rng = jax.random.PRNGKey(0)
+        params = T.init(rng, cfg)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg))
+        ts = TokenStream(cfg.vocab, 2, 32, seed=0)
+        losses = []
+        for s in range(2):
+            b = ts.batch_at(s)
+            batch = {"tokens": jnp.asarray(b[:, :-1]),
+                     "labels": jnp.asarray(b[:, 1:])}
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(l) for l in losses), losses
+        # decode path shape check
+        cache = T.make_cache(cfg, 1, 16)
+        lg, cache = jax.jit(functools.partial(T.decode_step, cfg=cfg))(
+            params, cache, jnp.zeros((1, 1), jnp.int32),
+            jnp.asarray(0, jnp.int32))
+        assert lg.shape == (1, cfg.vocab)
+        assert np.isfinite(np.asarray(lg, np.float32)).all()
+        return {"loss_first": losses[0], "loss_last": losses[-1]}
+
+    def model_flops(shape_name: str) -> float:
+        shape = SHAPES[shape_name]
+        n_active = full.active_param_count()
+        tokens = shape["batch"] * (shape["seq"]
+                                   if shape["kind"] != "decode" else 1)
+        factor = 6.0 if shape["kind"] == "train" else 2.0
+        return factor * n_active * tokens
+
+    return ArchSpec(arch_id, "lm", describe, full, smoke, cells, smoke_run,
+                    model_flops)

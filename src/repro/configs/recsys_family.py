@@ -1,0 +1,147 @@
+"""Two-tower recsys ArchSpec: train / online / bulk / retrieval cells."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec, Cell
+from repro.models import recsys as R
+from repro.optim import adamw_init, adamw_update, cosine_decay
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000),
+}
+
+
+def _feat_specs(cfg: R.TwoTowerConfig, B: int):
+    feats = {name: jax.ShapeDtypeStruct((B, cfg.multi_hot), jnp.int32)
+             for name, _ in cfg.user_tables}
+    axes = {name: ("batch", None) for name, _ in cfg.user_tables}
+    return feats, axes
+
+
+def make_train_step(cfg: R.TwoTowerConfig, schedule=None):
+    sched = schedule or cosine_decay(1e-3, 500, 50_000)
+
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            R.loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt, gnorm = adamw_update(params, grads, opt,
+                                          lr=sched(opt.step),
+                                          weight_decay=0.0)
+        return params, opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def recsys_arch(arch_id: str, describe: str, full: R.TwoTowerConfig,
+                smoke: R.TwoTowerConfig) -> ArchSpec:
+    cells: Dict[str, Cell] = {}
+
+    def build_train(mesh=None):
+        cfg = full
+        params = R.abstract_params(cfg)
+        opt = jax.eval_shape(adamw_init, params)
+        B = SHAPES["train_batch"]["batch"]
+        feats, faxes = _feat_specs(cfg, B)
+        batch = {"feats": feats,
+                 "item_ids": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        baxes = {"feats": faxes, "item_ids": ("batch",)}
+        p_ax = R.logical_axes(cfg)
+        from repro.optim.adamw import AdamWState
+        axes = (p_ax, AdamWState((), p_ax, p_ax), baxes)
+        return make_train_step(cfg), (params, opt, batch), axes, (0, 1)
+
+    def build_serve(B):
+        def build(mesh=None):
+            cfg = full
+            params = R.abstract_params(cfg)
+            feats, faxes = _feat_specs(cfg, B)
+            items = jax.ShapeDtypeStruct((B,), jnp.int32)
+            axes = (R.logical_axes(cfg), faxes, ("batch",))
+            step = functools.partial(R.serve_scores, cfg=cfg)
+            return step, (params, feats, items), axes, ()
+        return build
+
+    def build_retrieval(mesh=None):
+        cfg = full
+        params = R.abstract_params(cfg)
+        C = SHAPES["retrieval_cand"]["n_candidates"]
+        feats, faxes = _feat_specs(cfg, 1)
+        cands = jax.ShapeDtypeStruct((C,), jnp.int32)
+        axes = (R.logical_axes(cfg), faxes, ("candidates",))
+        step = functools.partial(R.retrieval_topk, cfg=cfg)
+        return step, (params, feats, cands), axes, ()
+
+    cells["train_batch"] = Cell("train_batch", "train", build_train)
+    cells["serve_p99"] = Cell("serve_p99", "serve", build_serve(512))
+    cells["serve_bulk"] = Cell("serve_bulk", "serve", build_serve(262_144))
+    cells["retrieval_cand"] = Cell("retrieval_cand", "retrieval",
+                                   build_retrieval)
+
+    def smoke_run(cfg=None):
+        cfg = cfg or smoke
+        from repro.data.synthetic import recsys_events
+        params = R.init(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg))
+        losses = []
+        for s in range(3):
+            feats, items, _ = recsys_events(
+                1000, cfg.num_items, 64, s,
+                tuple(r for _, r in cfg.user_tables),
+                multi_hot=cfg.multi_hot)
+            feats = {name: jnp.asarray(feats[f"table_{i}"] % rows)
+                     for i, (name, rows) in enumerate(cfg.user_tables)}
+            batch = {"feats": feats, "item_ids": jnp.asarray(items)}
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(l) for l in losses)
+        # retrieval path
+        vals, idx = R.retrieval_topk(
+            params, {k: v[:1] for k, v in feats.items()},
+            jnp.arange(cfg.num_items, dtype=jnp.int32), cfg, k=10)
+        assert np.isfinite(np.asarray(vals)).all()
+        return {"loss_first": losses[0], "loss_last": losses[-1]}
+
+    def model_flops(shape_name: str) -> float:
+        cfg = full
+        shape = SHAPES[shape_name]
+        din_u = cfg.embed_dim * len(cfg.user_tables)
+        mlp_u = sum(a * b for a, b in zip(
+            (din_u,) + cfg.tower_mlp[:-1], cfg.tower_mlp))
+        mlp_i = sum(a * b for a, b in zip(
+            (cfg.embed_dim,) + cfg.tower_mlp[:-1], cfg.tower_mlp))
+        if shape_name == "train_batch":
+            B = shape["batch"]
+            score = B * cfg.num_negatives * cfg.tower_mlp[-1]
+            return 6.0 * (B * (mlp_u + mlp_i) + score)
+        if shape_name == "retrieval_cand":
+            C = shape["n_candidates"]
+            return 2.0 * (mlp_u + C * mlp_i + C * cfg.tower_mlp[-1])
+        B = shape["batch"]
+        return 2.0 * B * (mlp_u + mlp_i + cfg.tower_mlp[-1])
+
+    return ArchSpec(arch_id, "recsys", describe, full, smoke, cells,
+                    smoke_run, model_flops)
+
+
+TWO_TOWER = recsys_arch(
+    "two-tower-retrieval",
+    "embed 256, towers 1024-512-256, dot interaction, sampled softmax "
+    "[RecSys'19 (YouTube); unverified]",
+    R.TwoTowerConfig(),
+    R.TwoTowerConfig(name="two-tower-smoke",
+                     user_tables=(("user_id", 1000), ("hist_items", 500),
+                                  ("context", 100)),
+                     num_items=2000, embed_dim=32, tower_mlp=(64, 32, 16),
+                     num_negatives=32))

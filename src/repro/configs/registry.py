@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchSpec
+
+
+def _all() -> Dict[str, ArchSpec]:
+    from repro.configs import lm_archs as lm
+    from repro.configs.gnn_family import EGNN, GAT_CORA, GATEDGCN, GRAPHCAST
+    from repro.configs.recsys_family import TWO_TOWER
+    from repro.configs.wcoj import WCOJ
+    specs = [
+        lm.LLAMA4_SCOUT, lm.MIXTRAL_8X7B, lm.YI_34B, lm.GEMMA_7B,
+        lm.GEMMA2_2B,
+        EGNN, GRAPHCAST, GATEDGCN, GAT_CORA,
+        TWO_TOWER,
+        WCOJ,
+    ]
+    return {s.arch_id: s for s in specs}
+
+
+def list_archs() -> List[str]:
+    return list(_all().keys())
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    table = _all()
+    if arch_id not in table:
+        raise KeyError(f"unknown arch {arch_id!r}; known: "
+                       f"{', '.join(table)}")
+    return table[arch_id]

@@ -1,0 +1,135 @@
+"""The paper's own workload as an architecture: distributed WCOJ subgraph
+queries on the production mesh (every chip = one dataflow worker).
+
+Cells lower the full SPMD join program (seed -> while(extend) -> psum) with
+hash-partitioned index shards as inputs.  ``*_delta`` cells lower the same
+program against a three-region multi-version index (one dQ_i of
+Delta-BiGJoin) seeded by an update batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchSpec, Cell
+from repro.core import query as Q
+from repro.core.bigjoin import BigJoinConfig
+from repro.core.distributed import DistConfig, build_per_worker
+from repro.core.plan import make_delta_plan, make_plan
+from repro.core.query import delta_queries
+
+SHAPES = {
+    # IN = edge count; B' = per-worker proposal budget
+    "triangle_static": dict(kind="join", query="triangle", edges=1 << 26,
+                            batch=4096),
+    "fourclique_static": dict(kind="join", query="4-clique", edges=1 << 24,
+                              batch=4096),
+    "triangle_delta_1m": dict(kind="delta", query="triangle",
+                              edges=1 << 26, delta=1_000_000, batch=4096),
+    "diamond_delta_1m": dict(kind="delta", query="diamond", edges=1 << 26,
+                             delta=1_000_000, batch=4096),
+}
+
+
+def _abstract_indices(plan, edges: int, w: int, delta: int = 0):
+    """SDS stand-ins for hash-partitioned index shards [w, cap]."""
+    from repro.core.dataflow_index import VersionedIndex
+    cap = int(np.ceil(edges / w * 1.3))
+    dcap = max(int(np.ceil(delta / w * 2.0)), 1)
+
+    def sds_region(c):
+        from repro.core.csr import IndexData
+        return IndexData(
+            jax.ShapeDtypeStruct((w, c), jnp.int32),
+            jax.ShapeDtypeStruct((w, c), jnp.int32),
+            jax.ShapeDtypeStruct((w,), jnp.int32))
+
+    out = {}
+    for index_id, rel, key_pos, ext_pos, version in plan.index_ids():
+        if version == "static":
+            out[index_id] = VersionedIndex((sds_region(cap),), ())
+        elif version == "old":
+            out[index_id] = VersionedIndex(
+                (sds_region(cap), sds_region(dcap)), (sds_region(dcap),))
+        else:  # new
+            out[index_id] = VersionedIndex(
+                (sds_region(cap), sds_region(dcap), sds_region(dcap)),
+                (sds_region(dcap), sds_region(dcap)))
+    return out
+
+
+def _build_cell(shape: Dict):
+    def build(mesh=None):
+        assert mesh is not None, "wcoj cells lower under an explicit mesh"
+        w = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        axis = tuple(mesh.axis_names)
+        q = Q.PAPER_QUERIES[shape["query"]]()
+        if shape["kind"] == "join":
+            plan = make_plan(q)
+            seed_total = shape["edges"]
+        else:
+            plan = make_delta_plan(delta_queries(q)[0])
+            seed_total = shape["delta"]
+        B = shape["batch"]
+        dcfg = DistConfig(
+            BigJoinConfig(batch=B, mode="count"), w,
+            route_capacity=max(4 * B // w, 16), aggregate=True, axis=axis)
+        per_worker = build_per_worker(plan, dcfg)
+        indices = _abstract_indices(plan, shape["edges"], w,
+                                    shape.get("delta", 0))
+        S = int(np.ceil(seed_total / w))
+        seed = jax.ShapeDtypeStruct((w, S, 2), jnp.int32)
+        seed_n = jax.ShapeDtypeStruct((w,), jnp.int32)
+
+        specs = (jax.tree.map(lambda _: P(axis), indices,
+                              is_leaf=lambda x: isinstance(
+                                  x, jax.ShapeDtypeStruct)),
+                 P(axis), P(axis))
+        fn = jax.shard_map(per_worker, mesh=mesh, in_specs=specs,
+                           out_specs=(P(),) * 7, check_vma=False)
+        return fn, (indices, seed, seed_n), None, ()
+    return build
+
+
+def _smoke_run(_cfg=None):
+    """Reduced config: real distributed join on the 1-device mesh."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import distributed_join
+    from repro.core.generic_join import generic_join
+    from repro.data.synthetic import rmat_graph
+    e = rmat_graph(9, 4, seed=3)
+    q = Q.triangle()
+    plan = make_plan(q)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("workers",))
+    cfg = DistConfig(BigJoinConfig(batch=512, mode="count"), 1,
+                     route_capacity=512)
+    res = distributed_join(plan, {Q.EDGE: e}, mesh=mesh, cfg=cfg)
+    _, ref = generic_join(q, {Q.EDGE: e}, plan=plan)
+    assert res.count == ref, (res.count, ref)
+    return {"count": float(res.count), "steps": float(res.steps)}
+
+
+def _model_flops(shape_name: str) -> float:
+    """Useful work PER ROUND (the wcoj cells lower a while-loop program and
+    their HLO costs are per dataflow round): w*B' proposals, each probed
+    against ~n_atoms binary-search indices of depth log2(IN/w)."""
+    shape = SHAPES[shape_name]
+    q = Q.PAPER_QUERIES[shape["query"]]()
+    w, B = 512.0, float(shape["batch"])
+    depth = np.log2(max(shape["edges"] / w, 2.0))
+    return w * B * q.num_atoms * 8.0 * depth
+
+
+WCOJ = ArchSpec(
+    "wcoj-subgraph", "wcoj",
+    "the paper's contribution: BiGJoin/Delta-BiGJoin distributed WCOJ "
+    "dataflow, every chip a worker",
+    None, None,
+    {name: Cell(name, shape["kind"], _build_cell(shape))
+     for name, shape in SHAPES.items()},
+    _smoke_run, _model_flops)

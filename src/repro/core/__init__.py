@@ -1,0 +1,11 @@
+"""The paper's primary contribution: worst-case optimal join dataflows.
+
+- query/plan: conjunctive queries + GJ attribute-order planning
+- csr/dataflow_index: sorted-array extension indices (static + multiversion)
+- generic_join: serial numpy oracle (COST baseline)
+- bigjoin: the batched dataflow primitive + static-join driver
+- delta: Delta-GJ / Delta-BiGJoin incremental maintenance
+- distributed: shard_map multi-worker dataflow (hash-routed)
+- balance: BiGJoin-S skew-resilient operators
+- optimizations: §5.4 symmetry breaking / triangle indexing / factorization
+"""

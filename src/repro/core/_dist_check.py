@@ -1,0 +1,82 @@
+"""Multi-device distributed-join correctness harness.
+
+Run as a subprocess so the XLA host-platform device-count override applies
+before jax initializes (tests and benches must keep seeing 1 device):
+
+    python -m repro.core._dist_check --workers 8 --query triangle ...
+
+Prints one JSON line with counts from the distributed engine and the oracle.
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--query", default="triangle")
+    ap.add_argument("--nv", type=int, default=60)
+    ap.add_argument("--ne", type=int, default=500)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skew", action="store_true")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--route-capacity", type=int, default=64)
+    ap.add_argument("--no-aggregate", action="store_true")
+    ap.add_argument("--balance", action="store_true")
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.workers}")
+
+    import json
+
+    import numpy as np
+
+    from repro.core import query as Q
+    from repro.core.bigjoin import BigJoinConfig
+    from repro.core.distributed import DistConfig, distributed_join
+    from repro.core.generic_join import generic_join
+    from repro.core.plan import make_plan
+
+    rng = np.random.default_rng(args.seed)
+    if args.skew:
+        u = (rng.zipf(1.4, args.ne) % args.nv).astype(np.int64)
+        v = rng.integers(0, args.nv, args.ne)
+    else:
+        u = rng.integers(0, args.nv, args.ne)
+        v = rng.integers(0, args.nv, args.ne)
+    keep = u != v
+    e = np.unique(np.stack([u[keep], v[keep]], 1).astype(np.int32), axis=0)
+
+    q = Q.PAPER_QUERIES[args.query]()
+    plan = make_plan(q)
+    rels = {Q.EDGE: e}
+    base = BigJoinConfig(batch=args.batch, mode="collect",
+                         out_capacity=1 << 18)
+    cfg = DistConfig(base, args.workers, route_capacity=args.route_capacity,
+                     aggregate=not args.no_aggregate, balance=args.balance)
+    import time
+    t0 = time.time()
+    res = distributed_join(plan, rels, cfg=cfg)
+    elapsed = time.time() - t0
+    # second run = warm jit cache: the steady-state number
+    t0 = time.time()
+    res = distributed_join(plan, rels, cfg=cfg)
+    warm = time.time() - t0
+    ref, cnt = generic_join(q, rels, plan=plan)
+    got = (np.unique(res.tuples, axis=0) if res.tuples is not None
+           and res.tuples.size else np.zeros((0, q.num_attrs)))
+    exact = bool(got.shape[0] == cnt
+                 and (cnt == 0
+                      or np.array_equal(got, np.unique(ref, axis=0))))
+    print(json.dumps({
+        "query": args.query, "workers": args.workers,
+        "dist_count": res.count, "oracle_count": cnt,
+        "tuples_exact": exact, "steps": res.steps,
+        "proposals": res.proposals, "max_load": res.max_load,
+        "mean_load": res.mean_load, "edges": int(e.shape[0]),
+        "elapsed_s": round(elapsed, 3), "warm_s": round(warm, 3),
+    }))
+    sys.exit(0 if (res.count == cnt and exact) else 1)

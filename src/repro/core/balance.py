@@ -1,0 +1,340 @@
+"""BiGJoin-S (§3.4): the Balance operator and piece-draining dataflow.
+
+The skew problem: after count-minimization a few prefixes may own almost all
+candidate extensions (a celebrity vertex's adjacency list), so the worker
+holding them does almost all proposal/intersection work.  BiGJoin-S fixes
+this by splitting each prefix's extension range into (p, min-i, start, end)
+quadruples and dealing equal *work* (not equal prefix counts) to every
+worker.
+
+Our deterministic split is the paper's (§3.4.2): each worker divides its
+local proposal work T_l into w contiguous chunks of C_l = ceil(T_l/w) and
+sends chunk j to worker j.  Every receiver thus gets Σ_l C_l ≈ T/w (±1 per
+sender) work.  A chunk intersects at most C_l + 1 prefix rows, so the
+per-peer piece capacity is the *static* bound B'//w + 2 and the exchange can
+never overflow — the balance guarantee holds deterministically, not just
+w.h.p. (the w.h.p. part of Thm 3.4 concerns the hashed index lookups, which
+the aggregation in distributed.py addresses).
+
+Received quadruples land in a per-level *piece queue*, drained before any
+new balance round fires (scheduling priority: deeper level first; within a
+level, pieces before prefixes), which bounds the piece queue at one round's
+worth: w · (B'//w + 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bigjoin import (BigJoinState, LevelQueue, _binding_key,
+                                _compact, _pack_cols, _scatter_append)
+from repro.core.distributed import (AXIS, DistConfig, _remote_count,
+                                    _remote_member, _remote_resolve,
+                                    owner_of)
+from repro.core.plan import Plan
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PieceQueue:
+    """(p, min-i, [kcur, kend), weight) quadruple queue for one level."""
+
+    prefix: jax.Array  # [cap, width] int32
+    mini: jax.Array  # [cap] int32
+    kcur: jax.Array  # [cap] int32
+    kend: jax.Array  # [cap] int32
+    weight: jax.Array  # [cap] int32
+    size: jax.Array  # [] int32
+
+    def tree_flatten(self):
+        return (self.prefix, self.mini, self.kcur, self.kend, self.weight,
+                self.size), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def piece_caps(dcfg: DistConfig) -> Tuple[int, int]:
+    """(per-peer-pair send capacity, piece queue capacity)."""
+    w, B = dcfg.num_workers, dcfg.base.batch
+    cap_pair = B // w + 2
+    return cap_pair, 2 * w * cap_pair
+
+
+def make_piece_queues(plan: Plan, dcfg: DistConfig) -> Tuple[PieceQueue, ...]:
+    _, qcap = piece_caps(dcfg)
+    out = []
+    for lv in plan.levels:
+        width = len(lv.bound_attrs)
+        out.append(PieceQueue(
+            jnp.zeros((qcap, width), jnp.int32),
+            jnp.zeros(qcap, jnp.int32),
+            jnp.zeros(qcap, jnp.int32),
+            jnp.zeros(qcap, jnp.int32),
+            jnp.zeros(qcap, jnp.int32),
+            jnp.asarray(0, jnp.int32)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# prefix branch with Balance (replaces proposal/intersect by piece routing)
+# ---------------------------------------------------------------------------
+
+def _build_balance_prefix_branch(plan: Plan, dcfg: DistConfig, li: int):
+    lv = plan.levels[li]
+    w, cap, B = dcfg.num_workers, dcfg.route_capacity, dcfg.base.batch
+    cap_pair, _ = piece_caps(dcfg)
+    width = len(lv.bound_attrs)
+
+    def branch(carry, indices):
+        state, pieces = carry
+        qu = state.queues[li]
+        W = min(B, qu.prefix.shape[0])
+        wprefix, wk, wweight = qu.prefix[:W], qu.k[:W], qu.weight[:W]
+        valid = jnp.arange(W, dtype=jnp.int32) < qu.size
+
+        # remote count minimization (identical to the unbalanced branch)
+        cnts, count_ok = [], valid
+        recv_load = state.recv_load
+        for b in lv.bindings:
+            idx = indices[b.index_id]
+            qk = _binding_key(wprefix, lv.bound_attrs, b.key_attrs, idx)
+            cnt, ok, load = _remote_count(idx, qk, owner_of(qk, w), valid, w,
+                                          cap, dcfg.aggregate, dcfg.axis)
+            cnts.append(cnt)
+            count_ok = count_ok & ok
+            recv_load = recv_load + load
+        tot = jnp.stack(cnts, -1)
+        min_i = jnp.argmin(tot, -1).astype(jnp.int32)
+        min_c = tot.min(-1)
+
+        remaining = jnp.where(valid & count_ok,
+                              jnp.maximum(min_c - wk, 0), 0)
+        acum = jnp.cumsum(remaining, dtype=jnp.int32)
+        allowed = jnp.clip(B - (acum - remaining), 0, remaining
+                           ).astype(jnp.int32)
+        aacum = jnp.cumsum(allowed, dtype=jnp.int32)  # end offsets
+        loff = aacum - allowed  # start offsets
+        T_l = aacum[-1]
+        C = (T_l + w - 1) // w  # my chunk size (work per receiver)
+
+        # ---- Balance (§3.4.2): chunk j of my work goes to worker j --------
+        j = jnp.arange(w, dtype=jnp.int32)[:, None]  # [w, 1]
+        p = jnp.arange(cap_pair, dtype=jnp.int32)[None, :]  # [1, cap_pair]
+        chunk_lo = j * C
+        chunk_hi = jnp.minimum(chunk_lo + C, T_l)
+        rfirst = jnp.searchsorted(aacum, chunk_lo[:, 0], side="right"
+                                  ).astype(jnp.int32)[:, None]
+        row = jnp.clip(rfirst + p, 0, W - 1)  # [w, cap_pair]
+        pstart = jnp.maximum(loff[row], chunk_lo)
+        pend = jnp.minimum(aacum[row], chunk_hi)
+        pvalid = ((rfirst + p) < W) & (pstart < pend) & (chunk_lo < T_l)
+        kstart = wk[row] + (pstart - loff[row])
+        kend = kstart + (pend - pstart)
+
+        def a2a(x):
+            return jax.lax.all_to_all(x, dcfg.axis, 0, 0, tiled=False)
+
+        r_prefix = a2a(wprefix[row])  # [w, cap_pair, width]
+        r_mini = a2a(min_i[row])
+        r_kcur = a2a(jnp.where(pvalid, kstart, 0))
+        r_kend = a2a(jnp.where(pvalid, kend, 0))
+        r_weight = a2a(wweight[row])
+        r_valid = a2a(pvalid.astype(jnp.int32)) > 0
+
+        # append received pieces to my piece queue for this level
+        pq = pieces[li]
+        flat_valid = r_valid.reshape(-1)
+        npfx, n_new, ovf = _scatter_append(
+            pq.prefix, pq.size, r_prefix.reshape(-1, width), flat_valid)
+        nmini, _, _ = _scatter_append(pq.mini, pq.size, r_mini.reshape(-1),
+                                      flat_valid)
+        nkcur, _, _ = _scatter_append(pq.kcur, pq.size, r_kcur.reshape(-1),
+                                      flat_valid)
+        nkend, _, _ = _scatter_append(pq.kend, pq.size, r_kend.reshape(-1),
+                                      flat_valid)
+        nwt, _, _ = _scatter_append(pq.weight, pq.size,
+                                    r_weight.reshape(-1), flat_valid)
+        pieces = list(pieces)
+        pieces[li] = PieceQueue(
+            npfx, nmini, nkcur, nkend, nwt,
+            jnp.minimum(pq.size + n_new, jnp.int32(pq.prefix.shape[0])))
+
+        # retire consumed prefixes (their balanced work is now owned by the
+        # receivers; count_ok deferral still applies)
+        consumed = valid & count_ok & ((wk + allowed) >= min_c)
+        kfull = qu.k.at[:W].set(wk + allowed)
+        live_row = jnp.arange(qu.prefix.shape[0], dtype=jnp.int32) < qu.size
+        keep_rows = live_row & ~jnp.pad(consumed,
+                                        (0, qu.prefix.shape[0] - W))
+        (pfx, kk, ww), nsz = _compact([qu.prefix, kfull, qu.weight],
+                                      keep_rows)
+        queues = list(state.queues)
+        queues[li] = LevelQueue(pfx, kk, ww, nsz)
+        state = dataclasses.replace(
+            state, queues=tuple(queues), overflow=state.overflow | ovf,
+            recv_load=recv_load)
+        return state, tuple(pieces)
+
+    return branch
+
+
+# ---------------------------------------------------------------------------
+# piece-draining branch: Extension-Resolve + Intersect on balanced ranges
+# ---------------------------------------------------------------------------
+
+def _build_piece_branch(plan: Plan, dcfg: DistConfig, li: int):
+    lv = plan.levels[li]
+    w, cap, B = dcfg.num_workers, dcfg.route_capacity, dcfg.base.batch
+    is_last = li == len(plan.levels) - 1
+    new_bound = lv.bound_attrs + (lv.ext_attr,)
+    INF = jnp.int32(np.iinfo(np.int32).max)
+
+    def branch(carry, indices):
+        state, pieces = carry
+        pq = pieces[li]
+        W = min(B, pq.prefix.shape[0])
+        wprefix = pq.prefix[:W]
+        wmini, wkcur = pq.mini[:W], pq.kcur[:W]
+        wkend, wweight = pq.kend[:W], pq.weight[:W]
+        valid = jnp.arange(W, dtype=jnp.int32) < pq.size
+        recv_load = state.recv_load
+
+        remaining = jnp.where(valid, jnp.maximum(wkend - wkcur, 0), 0)
+        acum = jnp.cumsum(remaining, dtype=jnp.int32)
+        allowed = jnp.clip(B - (acum - remaining), 0, remaining
+                           ).astype(jnp.int32)
+        aacum = jnp.cumsum(allowed, dtype=jnp.int32)
+        t = jnp.arange(B, dtype=jnp.int32)
+        pvalid = t < aacum[-1]
+        r = jnp.clip(jnp.searchsorted(aacum, t, side="right"), 0, W - 1)
+        r = r.astype(jnp.int32)
+        k_off = t - (aacum[r] - allowed[r]) + wkcur[r]
+
+        # Extension-Resolve (Fig 3)
+        qks = []
+        for b in lv.bindings:
+            idx = indices[b.index_id]
+            qks.append(_binding_key(wprefix, lv.bound_attrs, b.key_attrs,
+                                    idx))
+        cand = jnp.zeros(B, jnp.int32)
+        incomplete = jnp.zeros(B, bool)
+        for bi, b in enumerate(lv.bindings):
+            idx = indices[b.index_id]
+            qk_r = qks[bi][r]
+            mask = pvalid & (wmini[r] == bi)
+            val, ok, load = _remote_resolve(idx, qk_r, k_off,
+                                            owner_of(qk_r, w), mask, w, cap,
+                                            dcfg.axis)
+            cand = jnp.where(mask, val, cand)
+            incomplete = incomplete | (mask & ~ok)
+            recv_load = recv_load + load
+
+        new_prefix = jnp.concatenate([wprefix[r], cand[:, None]], axis=1)
+        weight = wweight[r]
+        alive = pvalid
+        n_isect = jnp.asarray(0, jnp.int64)
+
+        # Intersect (Fig 3) — aggregated lookups
+        for bi, b in enumerate(lv.bindings):
+            idx = indices[b.index_id]
+            pos = [list(new_bound).index(a) for a in b.key_attrs]
+            qk = _pack_cols(new_prefix, pos, idx.pos[0].key.dtype)
+            mem, dele, ok, load = _remote_member(
+                idx, qk, cand, owner_of(qk, w), pvalid, w, cap,
+                dcfg.aggregate, dcfg.axis)
+            recv_load = recv_load + load
+            is_min = wmini[r] == bi
+            keep = jnp.where(is_min, ~dele, mem)
+            n_isect = n_isect + (alive & ~is_min).sum().astype(jnp.int64)
+            alive = alive & (keep | ~ok)
+            incomplete = incomplete | (pvalid & ~ok)
+        for f in lv.filters:
+            lo = new_prefix[:, list(new_bound).index(f.lo)]
+            hi = new_prefix[:, list(new_bound).index(f.hi)]
+            alive = alive & (lo < hi)
+
+        inc_off = jnp.where(incomplete, k_off, INF)
+        first_inc = jax.ops.segment_min(inc_off, r, num_segments=W)
+        advance = jnp.clip(jnp.minimum(first_inc, wkcur + allowed) - wkcur,
+                           0, allowed)
+        consumed = valid & ((wkcur + advance) >= wkend)
+        alive = alive & (k_off < first_inc[r])
+        n_proposed = (pvalid & (k_off < first_inc[r])).sum()
+
+        kfull = pq.kcur.at[:W].set(wkcur + advance)
+        live_row = jnp.arange(pq.prefix.shape[0], dtype=jnp.int32) < pq.size
+        keep_rows = live_row & ~jnp.pad(consumed,
+                                        (0, pq.prefix.shape[0] - W))
+        (pfx, mini2, kc2, ke2, ww2), nsz = _compact(
+            [pq.prefix, pq.mini, kfull, pq.kend, pq.weight], keep_rows)
+        pieces = list(pieces)
+        pieces[li] = PieceQueue(pfx, mini2, kc2, ke2, ww2, nsz)
+
+        out_buf, out_weight = state.out_buf, state.out_weight
+        out_n, out_count = state.out_n, state.out_count
+        overflow = state.overflow
+        queues = list(state.queues)
+        if is_last:
+            out_count = out_count + (weight * alive).sum().astype(jnp.int64)
+            if dcfg.base.mode == "collect":
+                perm = np.argsort(np.asarray(plan.attr_order))
+                out_buf, n_new, ovf1 = _scatter_append(
+                    out_buf, out_n, new_prefix[:, perm], alive)
+                out_weight, _, _ = _scatter_append(
+                    out_weight, out_n, weight, alive)
+                out_n = jnp.minimum(out_n + n_new,
+                                    jnp.int32(out_buf.shape[0]))
+                overflow = overflow | ovf1
+        else:
+            nxt = queues[li + 1]
+            npfx, n_new, ovf1 = _scatter_append(
+                nxt.prefix, nxt.size, new_prefix, alive)
+            nk, _, _ = _scatter_append(
+                nxt.k, nxt.size, jnp.zeros(B, jnp.int32), alive)
+            nw, _, _ = _scatter_append(nxt.weight, nxt.size, weight, alive)
+            queues[li + 1] = LevelQueue(
+                npfx, nk, nw,
+                jnp.minimum(nxt.size + n_new,
+                            jnp.int32(nxt.prefix.shape[0])))
+            overflow = overflow | ovf1
+
+        state = BigJoinState(
+            tuple(queues), out_buf, out_weight, out_n, out_count, overflow,
+            state.proposals + n_proposed.astype(jnp.int64),
+            state.intersections + n_isect, recv_load)
+        return state, tuple(pieces)
+
+    return branch
+
+
+def build_balanced_step(plan: Plan, dcfg: DistConfig):
+    """Priority: deepest level first; within a level pieces before prefixes.
+
+    Branch order: [piece_{L-1}, prefix_{L-1}, ..., piece_0, prefix_0].
+    """
+    L = len(plan.levels)
+    branches, order = [], []
+    for li in reversed(range(L)):
+        branches.append(_build_piece_branch(plan, dcfg, li))
+        order.append(("piece", li))
+        branches.append(_build_balance_prefix_branch(plan, dcfg, li))
+        order.append(("prefix", li))
+
+    def step(carry, indices):
+        state, pieces = carry
+        sizes = []
+        for kind, li in order:
+            sizes.append(pieces[li].size if kind == "piece"
+                         else state.queues[li].size)
+        gsizes = jax.lax.psum(jnp.stack(sizes), dcfg.axis)
+        sel = jnp.argmax(gsizes > 0).astype(jnp.int32)
+        sel = jnp.clip(sel, 0, len(branches) - 1)
+        return jax.lax.switch(sel, branches, carry, indices)
+
+    return step

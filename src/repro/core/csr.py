@@ -1,0 +1,224 @@
+"""Sorted-array extension indices (the TPU-native ``Ext``, §2.2).
+
+The paper requires, for each relation/bound-prefix pair, an index exposing:
+  (i)   |Ext(p)|            -- count          (O(1) in the paper)
+  (ii)  contents of Ext(p)  -- slice          (O(|Ext(p)|))
+  (iii) e in Ext(p)         -- membership     (O(1) in the paper)
+
+Hash tables give these on CPUs; on TPUs pointer-chasing is hostile, so we use
+*sorted dual arrays*: a packed 64-bit key column (the bound prefix) and a
+32-bit value column (the extension), sorted lexicographically.  Counts and
+slices come from two ``searchsorted`` probes; membership is a fixed-depth
+binary search over the (key,val) pairs — O(log IN) instead of O(1), the same
+trade EmptyHeaded makes with its sorted set layouts.
+
+Everything here is a pytree of jnp arrays, so indices shard with
+``jax.device_put`` / ``shard_map`` like any other model state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel keys larger than any real key (vertex ids < 2^31 - 1).
+SENTINEL = np.int64(2**62)
+SENTINEL32 = np.int32(2**31 - 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IndexData:
+    """One sorted (key, val) extension index.
+
+    key: [N] int64, nondecreasing (packed bound-prefix values)
+    val: [N] int32, nondecreasing within equal keys
+    n:   [] int32, number of live entries (rest is sentinel padding)
+    """
+
+    key: jax.Array
+    val: jax.Array
+    n: jax.Array
+
+    def tree_flatten(self):
+        return (self.key, self.val, self.n), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.key.shape[0]
+
+
+def pack_key(cols: Tuple[np.ndarray, ...] | Tuple[jax.Array, ...]):
+    """Pack 1 or 2 non-negative int32 columns into an int64 key."""
+    xp = jnp if isinstance(cols[0], jax.Array) else np
+    if len(cols) == 1:
+        return cols[0].astype(xp.int64)
+    if len(cols) == 2:
+        return (cols[0].astype(xp.int64) << 32) | cols[1].astype(xp.int64)
+    raise NotImplementedError(
+        "indices with >2 bound attributes are not needed by paper queries; "
+        "extend pack_key with multi-probe search to support them")
+
+
+def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
+                capacity: int | None = None) -> IndexData:
+    """Build an IndexData from relation tuples [T, arity] (numpy, host).
+
+    Projects to (key columns, ext column), dedups, sorts.  ``capacity``
+    (>= live size) allows preallocating room for future deltas.
+    """
+    tuples = np.asarray(tuples)
+    if tuples.ndim != 2:
+        raise ValueError("tuples must be [T, arity]")
+    key = pack_key(tuple(tuples[:, p].astype(np.int32) for p in key_pos)) \
+        if key_pos else np.zeros(tuples.shape[0], np.int64)
+    val = tuples[:, ext_pos].astype(np.int32)
+    kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
+    key, val = kv[:, 0], kv[:, 1].astype(np.int32)
+    n = key.shape[0]
+    cap = max(int(capacity or n), n, 1)
+    # single-column keys fit int32 -> halve index bytes (perf: HBM traffic)
+    narrow = len(key_pos) <= 1 and (n == 0 or key.max() < SENTINEL32)
+    kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
+    out_k = np.full(cap, sent, kdt)
+    out_v = np.zeros(cap, np.int32)
+    out_k[:n] = key.astype(kdt)
+    out_v[:n] = val
+    return IndexData(jnp.asarray(out_k), jnp.asarray(out_v),
+                     jnp.asarray(n, jnp.int32))
+
+
+def empty_index(capacity: int = 1, narrow: bool = True) -> IndexData:
+    kdt, sent = (jnp.int32, SENTINEL32) if narrow else (jnp.int64, SENTINEL)
+    return IndexData(jnp.full(capacity, sent, kdt),
+                     jnp.zeros(capacity, jnp.int32),
+                     jnp.asarray(0, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Queries (jnp, vectorized over a batch of probes).
+# ---------------------------------------------------------------------------
+
+def index_range(idx: IndexData, qkey: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(start, count) of the extension list for each packed key [B]."""
+    start = jnp.searchsorted(idx.key, qkey, side="left")
+    end = jnp.searchsorted(idx.key, qkey, side="right")
+    return start.astype(jnp.int32), (end - start).astype(jnp.int32)
+
+
+def index_count(idx: IndexData, qkey: jax.Array) -> jax.Array:
+    return index_range(idx, qkey)[1]
+
+
+def index_kth(idx: IndexData, start: jax.Array, k: jax.Array) -> jax.Array:
+    """k-th extension given the range start (no bounds check: caller masks)."""
+    pos = jnp.clip(start + k, 0, idx.capacity - 1)
+    return idx.val[pos]
+
+
+def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
+                     qk: jax.Array, qv: jax.Array) -> jax.Array:
+    """Lower bound of (qk,qv) in the lexicographically sorted (key,val) pairs.
+
+    Fixed-depth binary search (depth = ceil(log2 capacity)), vectorized over
+    the query batch; this is the pure-jnp oracle mirrored by the Pallas
+    ``intersect`` kernel.
+    """
+    cap = key.shape[0]
+    # +1: an interval of length 1 still needs one comparison to collapse
+    depth = max(int(np.ceil(np.log2(max(cap, 2)))), 1) + 1
+    lo = jnp.zeros(qk.shape, jnp.int32)
+    hi = jnp.broadcast_to(jnp.minimum(jnp.int32(cap), n.astype(jnp.int32)),
+                          qk.shape)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        mk = key[jnp.clip(mid, 0, cap - 1)]
+        mv = val[jnp.clip(mid, 0, cap - 1)]
+        less = (mk < qk) | ((mk == qk) & (mv < qv))
+        lo = jnp.where(less & (lo < hi), mid + 1, lo)
+        hi = jnp.where(~less & (lo < hi), mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, depth, body, (lo, hi))
+    return lo
+
+
+def index_member(idx: IndexData, qkey: jax.Array, qval: jax.Array,
+                 use_kernel: bool = False) -> jax.Array:
+    """Membership (qkey, qval) in the index, [B] bool.
+
+    ``use_kernel`` routes through the Pallas intersect kernel (ops.py); the
+    default pure-jnp path is the oracle.
+    """
+    if use_kernel:
+        from repro.kernels.intersect.ops import member as member_kernel
+        return member_kernel(idx.key, idx.val, idx.n, qkey,
+                             qval.astype(jnp.int32))
+    pos = lex_searchsorted(idx.key, idx.val, idx.n, qkey,
+                           qval.astype(jnp.int32))
+    pos_c = jnp.clip(pos, 0, idx.capacity - 1)
+    hit = (idx.key[pos_c] == qkey) & (idx.val[pos_c] == qval.astype(jnp.int32))
+    return hit & (pos < idx.n)
+
+
+# ---------------------------------------------------------------------------
+# Graph convenience: the dual-CSR edge index.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Graph:
+    """A directed graph as an edge list (numpy host container)."""
+
+    edges: np.ndarray  # [E, 2] int32 (src, dst), deduped
+    num_vertices: int
+
+    @classmethod
+    def from_edges(cls, edges: np.ndarray, num_vertices: int | None = None,
+                   dedup: bool = True) -> "Graph":
+        edges = np.asarray(edges, np.int32).reshape(-1, 2)
+        if dedup and edges.size:
+            edges = np.unique(edges, axis=0)
+        nv = int(num_vertices if num_vertices is not None
+                 else (edges.max() + 1 if edges.size else 0))
+        return cls(edges, nv)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    def forward(self, capacity: int | None = None) -> IndexData:
+        """src -> dst (out-neighbour) index."""
+        return build_index(self.edges, (0,), 1, capacity)
+
+    def reverse(self, capacity: int | None = None) -> IndexData:
+        """dst -> src (in-neighbour) index."""
+        return build_index(self.edges, (1,), 0, capacity)
+
+    def undirected(self) -> "Graph":
+        e = np.concatenate([self.edges, self.edges[:, ::-1]], axis=0)
+        return Graph.from_edges(e, self.num_vertices)
+
+    def degree_relabel(self) -> "Graph":
+        """Symmetry-breaking preprocessing (§5.4): relabel vertices by
+        (degree, id) ascending and keep edges oriented low->high id."""
+        deg = np.zeros(self.num_vertices, np.int64)
+        np.add.at(deg, self.edges[:, 0], 1)
+        np.add.at(deg, self.edges[:, 1], 1)
+        order = np.lexsort((np.arange(self.num_vertices), deg))
+        rank = np.empty(self.num_vertices, np.int32)
+        rank[order] = np.arange(self.num_vertices, dtype=np.int32)
+        e = rank[self.edges]
+        lo = np.minimum(e[:, 0], e[:, 1])
+        hi = np.maximum(e[:, 0], e[:, 1])
+        keep = lo != hi
+        return Graph.from_edges(np.stack([lo[keep], hi[keep]], 1),
+                                self.num_vertices)

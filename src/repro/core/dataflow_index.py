@@ -1,0 +1,98 @@
+"""Versioned extension indices for the BiGJoin dataflow.
+
+A :class:`VersionedIndex` is the multi-region structure of §4.3 flattened to
+arrays: *positive* regions contribute extensions (compacted base, committed
+inserts, uncommitted inserts) and *negative* regions subtract membership
+(committed / uncommitted deletes).  The three logical versions map to region
+subsets:
+
+    static:  pos=(base,)                 neg=()
+    old:     pos=(base, cins)            neg=(cdel,)
+    new:     pos=(base, cins, uins)      neg=(cdel, udel)
+
+Counts and proposals come from positive regions only; deletions are applied
+as a post-filter on proposals and as signed membership.  Update application
+(`delta.py`) maintains the invariant that inserts are new edges and deletes
+target live edges, so positive regions never contain duplicates and the
+signed membership is exact 0/1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import IndexData, index_member, index_range
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class VersionedIndex:
+    pos: Tuple[IndexData, ...]
+    neg: Tuple[IndexData, ...]
+
+    def tree_flatten(self):
+        return (self.pos, self.neg), (len(self.pos), len(self.neg))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children[0]), tuple(children[1]))
+
+    @classmethod
+    def static(cls, data: IndexData) -> "VersionedIndex":
+        return cls((data,), ())
+
+    @property
+    def num_regions(self) -> int:
+        return len(self.pos)
+
+    # ---- queries (vectorized over probe batch [B]) ------------------------
+
+    def ranges(self, qkey: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(starts [B,R], counts [B,R]) over positive regions."""
+        ss, cs = [], []
+        for reg in self.pos:
+            s, c = index_range(reg, qkey)
+            ss.append(s)
+            cs.append(c)
+        return jnp.stack(ss, -1), jnp.stack(cs, -1)
+
+    def count(self, qkey: jax.Array) -> jax.Array:
+        """Positive-region extension count [B] (exact when no deletions)."""
+        _, c = self.ranges(qkey)
+        return c.sum(-1)
+
+    def gather(self, starts: jax.Array, counts: jax.Array,
+               k: jax.Array) -> jax.Array:
+        """k-th extension across concatenated positive regions.
+
+        starts/counts: [B, R] rows already gathered per probe; k: [B].
+        """
+        val = jnp.zeros(k.shape, jnp.int32)
+        off = k
+        for r, reg in enumerate(self.pos):
+            in_r = (off >= 0) & (off < counts[..., r])
+            pos = jnp.clip(starts[..., r] + off, 0, reg.capacity - 1)
+            val = jnp.where(in_r, reg.val[pos], val)
+            off = off - counts[..., r]
+        return val
+
+    def member(self, qkey: jax.Array, qval: jax.Array,
+               use_kernel: bool = False) -> jax.Array:
+        w = jnp.zeros(qkey.shape, jnp.int32)
+        for reg in self.pos:
+            w = w + index_member(reg, qkey, qval, use_kernel).astype(jnp.int32)
+        for reg in self.neg:
+            w = w - index_member(reg, qkey, qval, use_kernel).astype(jnp.int32)
+        return w > 0
+
+    def deleted(self, qkey: jax.Array, qval: jax.Array,
+                use_kernel: bool = False) -> jax.Array:
+        if not self.neg:
+            return jnp.zeros(qkey.shape, bool)
+        d = jnp.zeros(qkey.shape, bool)
+        for reg in self.neg:
+            d = d | index_member(reg, qkey, qval, use_kernel)
+        return d

@@ -1,0 +1,267 @@
+"""Delta-GJ / Delta-BiGJoin (§3.3): incremental maintenance of join queries.
+
+For each update batch dR (signed edge tuples) the engine runs the n delta
+queries
+
+    dQ_i :- R'_1, ..., R'_{i-1}, dR_i, R_{i+1}, ..., R_n
+
+each through the *same* BiGJoin dataflow (bigjoin.py), seeded with dR_i and
+planned with an attribute order that begins with R_i's attributes (Thm 3.2).
+Atoms left of the seed read the NEW version, atoms right of it the OLD
+version — the logical sequencing that makes simultaneous updates correct.
+
+The multi-version index is the paper's three-region LSM structure (§4.3):
+
+    base   — compacted committed state (large, device-resident)
+    cins/cdel — uncompacted committed inserts/deletes since last compaction
+    uins/udel — the current (uncommitted) batch
+
+OLD = base + cins - cdel;   NEW = OLD + uins - udel.
+
+Commit folds uins/udel into cins/cdel with cancellation, keeping the
+invariants  cins ∩ base = ∅,  cdel ⊆ base,  cins ∩ cdel = ∅  so positive
+regions never hold duplicates.  Compaction (merge committed into base) runs
+when the committed regions exceed ``compact_ratio`` × |base| — and eagerly in
+the rare re-insertion-of-committed-delete case, which would otherwise create
+a positive/negative overlap (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bigjoin import (BigJoinConfig, Indices, JoinResult,
+                                run_bigjoin)
+from repro.core.csr import IndexData, build_index
+from repro.core.dataflow_index import VersionedIndex
+from repro.core.plan import Plan, make_delta_plan
+from repro.core.query import Query, delta_queries
+
+Projection = Tuple[str, Tuple[int, ...], int]  # (rel, key_pos, ext_pos)
+
+
+def _pack2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return (a.astype(np.int64) << 32) | b.astype(np.int64)
+
+
+def _pow2(n: int) -> int:
+    """Index capacities rounded up to powers of two: stable shapes across
+    update batches keep the jitted dataflow's compilation cache warm."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class _Regions:
+    """Host-truth + device mirrors of one projection's regions."""
+
+    key_pos: Tuple[int, ...]
+    ext_pos: int
+    base: np.ndarray  # [Nb, arity] tuples
+    cins: np.ndarray
+    cdel: np.ndarray
+    d_base: IndexData = None
+    d_cins: IndexData = None
+    d_cdel: IndexData = None
+    d_uins: IndexData = None
+    d_udel: IndexData = None
+
+    def refresh(self, which=("base", "cins", "cdel")):
+        for name in which:
+            tup = getattr(self, name)
+            setattr(self, "d_" + name,
+                    build_index(tup.reshape(-1, self.arity),
+                                self.key_pos, self.ext_pos,
+                                capacity=_pow2(tup.shape[0])))
+
+    @property
+    def arity(self) -> int:
+        return max(max(self.key_pos, default=0), self.ext_pos) + 1
+
+    def set_uncommitted(self, uins: np.ndarray, udel: np.ndarray):
+        self.d_uins = build_index(uins.reshape(-1, self.arity),
+                                  self.key_pos, self.ext_pos,
+                                  capacity=_pow2(uins.shape[0]))
+        self.d_udel = build_index(udel.reshape(-1, self.arity),
+                                  self.key_pos, self.ext_pos,
+                                  capacity=_pow2(udel.shape[0]))
+
+    def versioned(self, version: str) -> VersionedIndex:
+        if version == "old":
+            return VersionedIndex((self.d_base, self.d_cins), (self.d_cdel,))
+        if version == "new":
+            return VersionedIndex((self.d_base, self.d_cins, self.d_uins),
+                                  (self.d_cdel, self.d_udel))
+        if version == "static":
+            return VersionedIndex((self.d_base,), ())
+        raise ValueError(version)
+
+
+def _diff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Rows of a not in b (both [N,2] int)."""
+    if a.size == 0 or b.size == 0:
+        return a
+    pa, pb = _pack2(a[:, 0], a[:, 1]), _pack2(b[:, 0], b[:, 1])
+    return a[~np.isin(pa, pb)]
+
+
+def _inter_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    if a.size == 0 or b.size == 0:
+        return a[:0]
+    pa, pb = _pack2(a[:, 0], a[:, 1]), _pack2(b[:, 0], b[:, 1])
+    return a[np.isin(pa, pb)]
+
+
+@dataclasses.dataclass
+class DeltaResult:
+    count_delta: int
+    tuples: Optional[np.ndarray]
+    weights: Optional[np.ndarray]
+    per_dq: List[JoinResult]
+
+
+class DeltaBigJoin:
+    """Incremental maintenance of one query over one dynamic edge relation.
+
+    General n-ary dynamic relations follow the same structure; the engine is
+    specialized (as the paper's implementation is, §4) to graph workloads
+    where every atom reads the single ``edge`` relation.
+    """
+
+    def __init__(self, query: Query, initial_edges: np.ndarray,
+                 cfg: BigJoinConfig = BigJoinConfig(mode="collect"),
+                 compact_ratio: float = 0.5):
+        self.query = query
+        self.cfg = cfg
+        self.compact_ratio = compact_ratio
+        self.plans: List[Plan] = [make_delta_plan(dq)
+                                  for dq in delta_queries(query)]
+        edges = np.unique(np.asarray(initial_edges, np.int32).reshape(-1, 2),
+                          axis=0)
+        self.edges = edges  # live edge set, host truth
+
+        # one region set per distinct projection used by any delta plan
+        self.projections: Dict[Projection, _Regions] = {}
+        for plan in self.plans:
+            for _id, rel, key_pos, ext_pos, _v in plan.index_ids():
+                if rel != "edge":
+                    raise NotImplementedError(
+                        "dynamic non-edge relations: extend _Regions storage")
+                proj = (rel, key_pos, ext_pos)
+                if proj not in self.projections:
+                    empty = edges[:0]
+                    self.projections[proj] = _Regions(
+                        key_pos, ext_pos, edges, empty, empty)
+        for reg in self.projections.values():
+            reg.refresh()
+            reg.set_uncommitted(edges[:0], edges[:0])
+
+    # ------------------------------------------------------------------
+    def normalize(self, updates: np.ndarray, weights: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Net out a batch against the live edge set: returns (ins, del)."""
+        updates = np.asarray(updates, np.int32).reshape(-1, 2)
+        weights = np.asarray(weights, np.int32)
+        keep = updates[:, 0] != updates[:, 1]
+        updates, weights = updates[keep], weights[keep]
+        packed = _pack2(updates[:, 0], updates[:, 1])
+        uniq, inv = np.unique(packed, return_inverse=True)
+        net = np.zeros(uniq.shape[0], np.int64)
+        np.add.at(net, inv, weights)
+        rows = np.stack([(uniq >> 32).astype(np.int32),
+                         (uniq & 0xFFFFFFFF).astype(np.int32)], 1)
+        live = _pack2(self.edges[:, 0], self.edges[:, 1]) if \
+            self.edges.size else np.zeros(0, np.int64)
+        exists = np.isin(uniq, live)
+        ins = rows[(net > 0) & ~exists]
+        dels = rows[(net < 0) & exists]
+        return ins.astype(np.int32), dels.astype(np.int32)
+
+    def _maybe_compact(self, force: bool = False):
+        for reg in self.projections.values():
+            committed = reg.cins.shape[0] + reg.cdel.shape[0]
+            if force or committed > self.compact_ratio * max(
+                    reg.base.shape[0], 1):
+                reg.base = np.unique(np.concatenate(
+                    [_diff_rows(reg.base, reg.cdel), reg.cins]), axis=0) \
+                    if (reg.cins.size or reg.cdel.size) else reg.base
+                reg.cins = reg.cins[:0]
+                reg.cdel = reg.cdel[:0]
+                reg.refresh()
+
+    def apply(self, updates: np.ndarray,
+              weights: Optional[np.ndarray] = None) -> DeltaResult:
+        """Process one update batch: emit output changes, then commit."""
+        updates = np.asarray(updates, np.int32).reshape(-1, 2)
+        if weights is None:
+            weights = np.ones(updates.shape[0], np.int32)
+        ins, dels = self.normalize(updates, weights)
+
+        # eager compaction iff a committed delete is being re-inserted
+        # (would create a positive/negative region overlap, DESIGN.md §2)
+        need = any(_inter_rows(ins, reg.cdel).size
+                   for reg in self.projections.values())
+        self._maybe_compact(force=bool(need))
+
+        for reg in self.projections.values():
+            reg.set_uncommitted(ins, dels)
+
+        delta_edges = np.concatenate([ins, dels], axis=0)
+        delta_w = np.concatenate([
+            np.ones(ins.shape[0], np.int32),
+            -np.ones(dels.shape[0], np.int32)])
+
+        per_dq: List[JoinResult] = []
+        total = 0
+        tuples, wts = [], []
+        for plan in self.plans:
+            if delta_edges.size == 0:
+                break
+            indices: Indices = {}
+            for _id, rel, key_pos, ext_pos, version in plan.index_ids():
+                reg = self.projections[(rel, key_pos, ext_pos)]
+                indices[_id] = reg.versioned(version)
+            seed = delta_edges[:, list(plan.seed_cols)]
+            res = run_bigjoin(plan, indices, seed, delta_w, cfg=self.cfg)
+            per_dq.append(res)
+            total += res.count
+            if res.tuples is not None and res.tuples.size:
+                tuples.append(res.tuples)
+                wts.append(res.weights)
+
+        # ---- commit uins/udel into the committed regions -----------------
+        for reg in self.projections.values():
+            cins = np.unique(np.concatenate(
+                [_diff_rows(reg.cins, dels), _diff_rows(ins, reg.cdel)]),
+                axis=0) if (ins.size or reg.cins.size) else reg.cins
+            cdel = np.unique(np.concatenate(
+                [reg.cdel, _inter_rows(dels, reg.base)]), axis=0) \
+                if (dels.size or reg.cdel.size) else reg.cdel
+            reg.cins, reg.cdel = cins, cdel
+            reg.refresh(("cins", "cdel"))
+            reg.set_uncommitted(ins[:0], dels[:0])
+        if ins.size:
+            self.edges = np.unique(np.concatenate([self.edges, ins]), axis=0)
+        if dels.size:
+            self.edges = _diff_rows(self.edges, dels)
+        self._maybe_compact()
+
+        out_t = np.concatenate(tuples) if tuples else None
+        out_w = np.concatenate(wts) if wts else None
+        return DeltaResult(total, out_t, out_w, per_dq)
+
+
+def delta_oracle(query: Query, edges_before: np.ndarray,
+                 edges_after: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Ground truth: signed difference of full recomputation."""
+    from repro.core.generic_join import generic_join
+    a, _ = generic_join(query, {"edge": edges_before})
+    b, _ = generic_join(query, {"edge": edges_after})
+    pa = set(map(tuple, a.tolist()))
+    pb = set(map(tuple, b.tolist()))
+    added = sorted(pb - pa)
+    removed = sorted(pa - pb)
+    t = np.array(added + removed, np.int32).reshape(-1, query.num_attrs)
+    w = np.array([1] * len(added) + [-1] * len(removed), np.int32)
+    return t, w

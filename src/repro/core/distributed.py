@@ -1,0 +1,556 @@
+"""Distributed BiGJoin over a device mesh via shard_map (§3.2 / §3.4).
+
+Workers are the devices of one mesh axis.  Every extension index is
+hash-partitioned by its packed key (``owner_of``), so the cluster-wide memory
+is O(IN) — each edge is stored by exactly one worker per direction, the
+paper's linear-memory property.
+
+Lookups are *request/response*: a worker keeps its popped prefixes and sends
+(key) / (key,k) / (key,val) requests to the owners — precisely the three
+distributed index services of BiGJoin-S (§3.4.1):
+
+    count     C(p)          key        -> |Ext(p)|
+    resolve   Ext-Res(p,k)  (key,k)    -> k-th extension
+    member    Ext(p·e)      (key,val)  -> membership / deletion bits
+
+Requests travel through a fixed-capacity bucketed ``all_to_all``
+(``route_capacity`` slots per peer pair).  Overflowing requests are *not*
+dropped: the affected prefix simply does not advance its rem-ext cursor this
+round and is retried — backpressure instead of failure, the static-shape
+analogue of the paper's Faucet-style flow control [33].  With BiGJoin-S
+aggregation (``aggregate=True``, request dedup per key) the balls-into-bins
+bound of Thm 3.4 makes overflow improbable at capacity O(B'/w · polylog).
+
+Outputs stay on the producing worker (the paper assumes outputs leave the
+cluster); counts/counters are psum-reduced at the end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import csr
+from repro.core.bigjoin import BigJoinConfig
+from repro.core.dataflow_index import VersionedIndex
+from repro.core.plan import Plan
+
+AXIS = "workers"
+
+
+# ---------------------------------------------------------------------------
+# hashing / partitioning
+# ---------------------------------------------------------------------------
+
+_MIX = 0x9E3779B97F4A7C15
+
+
+def owner_of_np(key: np.ndarray, w: int) -> np.ndarray:
+    h = (key.astype(np.uint64) * np.uint64(_MIX)) >> np.uint64(33)
+    return (h % np.uint64(w)).astype(np.int32)
+
+
+def owner_of(key: jax.Array, w: int) -> jax.Array:
+    h = (key.astype(jnp.uint64) * jnp.uint64(_MIX)) >> jnp.uint64(33)
+    return (h % jnp.uint64(w)).astype(jnp.int32)
+
+
+def _stack_index(datas) -> csr.IndexData:
+    """Stack per-worker IndexData into one [w, cap] pytree (pad w/ sentinel)."""
+    cap = max(d.key.shape[0] for d in datas)
+    ks, vs, ns = [], [], []
+    for d in datas:
+        pad = cap - d.key.shape[0]
+        sent = (csr.SENTINEL32 if d.key.dtype == jnp.int32 else csr.SENTINEL)
+        ks.append(np.pad(np.asarray(d.key), (0, pad), constant_values=sent))
+        vs.append(np.pad(np.asarray(d.val), (0, pad)))
+        ns.append(np.asarray(d.n))
+    return csr.IndexData(jnp.asarray(np.stack(ks)), jnp.asarray(np.stack(vs)),
+                         jnp.asarray(np.stack(ns)))
+
+
+def partition_indices(plan: Plan, relations: Dict[str, np.ndarray],
+                      w: int) -> Dict[str, VersionedIndex]:
+    """Hash-partition every static index over ``w`` workers.
+
+    Returns indices whose arrays carry a leading [w] axis (to be sharded over
+    the worker mesh axis).
+    """
+    out: Dict[str, VersionedIndex] = {}
+    for index_id, rel, key_pos, ext_pos, version in plan.index_ids():
+        if version != "static":
+            raise NotImplementedError("distributed delta: partition regions")
+        tuples = np.asarray(relations[rel])
+        cols = tuple(tuples[:, p].astype(np.int32) for p in key_pos)
+        key = csr.pack_key(cols)
+        own = owner_of_np(key, w)
+        parts = [csr.build_index(tuples[own == k], key_pos, ext_pos)
+                 for k in range(w)]
+        out[index_id] = VersionedIndex((_stack_index(parts),), ())
+    return out
+
+
+def _local(idx: VersionedIndex) -> VersionedIndex:
+    """Strip the leading worker axis inside shard_map."""
+    def strip(d: csr.IndexData) -> csr.IndexData:
+        return csr.IndexData(d.key[0], d.val[0], d.n[0])
+    return VersionedIndex(tuple(strip(p) for p in idx.pos),
+                          tuple(strip(nn) for nn in idx.neg))
+
+
+# ---------------------------------------------------------------------------
+# bounded-capacity request/response exchange
+# ---------------------------------------------------------------------------
+
+def remote_service(queries, dest: jax.Array, valid: jax.Array, reply_fn,
+                   w: int, cap: int, axis: str = AXIS):
+    """Route ``queries`` (pytree of [B,...] arrays) to ``dest`` workers, apply
+    ``reply_fn`` (pytree of [N,...] -> pytree of [N,...]) at the owner, and
+    return (replies [B,...], ok [B]).
+
+    ok=False rows overflowed the per-peer capacity and received no reply.
+    """
+    B = dest.shape[0]
+    dest_eff = jnp.where(valid, dest, w)
+    order = jnp.argsort(dest_eff, stable=True).astype(jnp.int32)
+    sdest = dest_eff[order]
+    first = jnp.searchsorted(sdest, sdest, side="left").astype(jnp.int32)
+    slot = jnp.arange(B, dtype=jnp.int32) - first
+    ok_sorted = (sdest < w) & (slot < cap)
+    flat = jnp.where(ok_sorted, sdest * cap + slot, w * cap)
+
+    def scatter(x):
+        buf = jnp.zeros((w * cap,) + x.shape[1:], x.dtype)
+        return buf.at[flat].set(x[order], mode="drop")
+
+    send = jax.tree.map(scatter, queries)
+    sent_mask = jnp.zeros(w * cap, jnp.int32).at[flat].set(
+        jnp.ones(B, jnp.int32), mode="drop")
+
+    def a2a(x):
+        return jax.lax.all_to_all(
+            x.reshape((w, cap) + x.shape[1:]), axis, 0, 0, tiled=False
+        ).reshape((w * cap,) + x.shape[1:])
+
+    recv = jax.tree.map(a2a, send)
+    recv_mask = a2a(sent_mask) > 0
+    replies_at_owner = reply_fn(recv, recv_mask)
+    back = jax.tree.map(a2a, replies_at_owner)
+
+    # gather replies for my rows: row i sits at (dest[i], slot_of_row[i])
+    slot_of_row = jnp.zeros(B, jnp.int32).at[order].set(slot)
+    ok = (jnp.zeros(B, bool).at[order].set(ok_sorted)) & valid
+    gidx = jnp.clip(dest * cap + slot_of_row, 0, w * cap - 1)
+    replies = jax.tree.map(lambda x: x[gidx], back)
+    recv_load = recv_mask.sum().astype(jnp.int64)  # requests I served
+    return replies, ok, recv_load
+
+
+def dedup_requests(key: jax.Array, valid: jax.Array):
+    """BiGJoin-S aggregation (§3.4.2): collapse duplicate request keys.
+
+    Returns (rep_idx [B] -> representative row, is_rep [B]).  Only
+    representative rows are routed; replies are read through rep_idx.
+    """
+    B = key.shape[0]
+    skey = jnp.where(valid, key,
+                     jnp.asarray(np.iinfo(key.dtype.name).max, key.dtype))
+    order = jnp.argsort(skey, stable=True).astype(jnp.int32)
+    sk = skey[order]
+    first = jnp.searchsorted(sk, sk, side="left").astype(jnp.int32)
+    rep_sorted = order[first]  # representative original row per sorted pos
+    rep_idx = jnp.zeros(B, jnp.int32).at[order].set(rep_sorted)
+    is_rep = jnp.zeros(B, bool).at[rep_idx].set(True) & valid
+    return rep_idx, is_rep
+
+
+# ---------------------------------------------------------------------------
+# distributed dataflow step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    base: BigJoinConfig
+    num_workers: int
+    route_capacity: int  # per peer-pair slots; <= batch
+    aggregate: bool = True  # BiGJoin-S request dedup (§3.4.2)
+    balance: bool = False  # BiGJoin-S Balance operator (§3.4.2)
+    max_steps: int = 1 << 30
+    axis: object = AXIS  # mesh axis name (or tuple of names) for collectives
+
+
+def _remote_count(idx_local: VersionedIndex, qkey, dest, valid, w, cap,
+                  aggregate, axis=AXIS):
+    def reply(q, mask):
+        return idx_local.count(q)
+
+    if aggregate:
+        rep_idx, is_rep = dedup_requests(qkey, valid)
+        (cnt,), ok, load = remote_service(
+            (qkey,), dest, is_rep, lambda q, m: (reply(q[0], m),), w, cap,
+            axis)
+        return cnt[rep_idx], ok[rep_idx] | ~valid, load
+    (cnt,), ok, load = remote_service(
+        (qkey,), dest, valid, lambda q, m: (reply(q[0], m),), w, cap, axis)
+    return cnt, ok | ~valid, load
+
+
+def _remote_resolve(idx_local: VersionedIndex, qkey, k, dest, valid, w,
+                    cap, axis=AXIS):
+    def reply(q, mask):
+        qk, kk = q
+        starts, counts = idx_local.ranges(qk)
+        return (idx_local.gather(starts, counts, kk),)
+
+    (val,), ok, load = remote_service((qkey, k), dest, valid, reply, w,
+                                      cap, axis)
+    return val, ok | ~valid, load
+
+
+def _remote_member(idx_local: VersionedIndex, qkey, qval, dest, valid, w,
+                   cap, aggregate, axis=AXIS, use_kernel=False):
+    def reply(q, mask):
+        qk, qv = q
+        mem = idx_local.member(qk, qv, use_kernel).astype(jnp.int32)
+        dele = idx_local.deleted(qk, qv, use_kernel).astype(jnp.int32)
+        return (mem | (dele << 1),)
+
+    pair = (qkey.astype(jnp.int64) << 32) | qval.astype(jnp.int64) if \
+        qkey.dtype == jnp.int32 else qkey  # dedup key includes val when safe
+    if aggregate and qkey.dtype == jnp.int32:
+        rep_idx, is_rep = dedup_requests(pair, valid)
+        (bits,), ok, load = remote_service((qkey, qval), dest, is_rep, reply,
+                                           w, cap, axis)
+        bits, ok = bits[rep_idx], ok[rep_idx]
+    else:
+        (bits,), ok, load = remote_service((qkey, qval), dest, valid, reply,
+                                           w, cap, axis)
+    return (bits & 1) > 0, (bits & 2) > 0, ok | ~valid, load
+
+
+# ---------------------------------------------------------------------------
+# the distributed level branch (mirrors bigjoin._level_branch with remote
+# lookups + rem-ext deferral backpressure)
+# ---------------------------------------------------------------------------
+
+def _build_dist_level(plan: Plan, dcfg: DistConfig, li: int):
+    from repro.core.bigjoin import (BigJoinState, LevelQueue, _binding_key,
+                                    _compact, _pack_cols, _scatter_append)
+    lv = plan.levels[li]
+    w, cap, B = dcfg.num_workers, dcfg.route_capacity, dcfg.base.batch
+    is_last = li == len(plan.levels) - 1
+    new_bound = lv.bound_attrs + (lv.ext_attr,)
+    INF = jnp.int32(np.iinfo(np.int32).max)
+
+    def branch(state, indices):
+        qu = state.queues[li]
+        W = min(B, qu.prefix.shape[0])
+        wprefix, wk, wweight = qu.prefix[:W], qu.k[:W], qu.weight[:W]
+        valid = jnp.arange(W, dtype=jnp.int32) < qu.size
+
+        # ---- remote count minimization ------------------------------------
+        qks, cnts, count_ok = [], [], valid
+        recv_load = state.recv_load
+        for b in lv.bindings:
+            idx = indices[b.index_id]
+            qk = _binding_key(wprefix, lv.bound_attrs, b.key_attrs, idx)
+            cnt, ok, load = _remote_count(idx, qk, owner_of(qk, w), valid, w,
+                                          cap, dcfg.aggregate, dcfg.axis)
+            qks.append(qk)
+            cnts.append(cnt)
+            count_ok = count_ok & ok
+            recv_load = recv_load + load
+        tot = jnp.stack(cnts, -1)
+        min_i = jnp.argmin(tot, -1).astype(jnp.int32)
+        min_c = tot.min(-1)
+
+        remaining_true = jnp.maximum(min_c - wk, 0)
+        remaining = jnp.where(valid & count_ok, remaining_true, 0)
+        acum = jnp.cumsum(remaining, dtype=jnp.int32)
+        allowed = jnp.clip(B - (acum - remaining), 0, remaining
+                           ).astype(jnp.int32)
+
+        aacum = jnp.cumsum(allowed, dtype=jnp.int32)
+        t = jnp.arange(B, dtype=jnp.int32)
+        pvalid = t < aacum[-1]
+        r = jnp.clip(jnp.searchsorted(aacum, t, side="right"), 0, W - 1)
+        r = r.astype(jnp.int32)
+        k_off = t - (aacum[r] - allowed[r]) + wk[r]
+
+        # ---- remote extension resolution (Ext-Res lookups) ----------------
+        cand = jnp.zeros(B, jnp.int32)
+        incomplete = jnp.zeros(B, bool)
+        for bi, b in enumerate(lv.bindings):
+            idx = indices[b.index_id]
+            qk_r = qks[bi][r]
+            mask = pvalid & (min_i[r] == bi)
+            val, ok, load = _remote_resolve(idx, qk_r, k_off,
+                                            owner_of(qk_r, w), mask, w, cap,
+                                            dcfg.axis)
+            cand = jnp.where(mask, val, cand)
+            incomplete = incomplete | (mask & ~ok)
+            recv_load = recv_load + load
+        new_prefix = jnp.concatenate([wprefix[r], cand[:, None]], axis=1)
+        weight = wweight[r]
+        alive = pvalid
+        n_isect = jnp.asarray(0, jnp.int64)
+
+        # ---- remote intersections ------------------------------------------
+        for bi, b in enumerate(lv.bindings):
+            idx = indices[b.index_id]
+            pos = [list(new_bound).index(a) for a in b.key_attrs]
+            qk = _pack_cols(new_prefix, pos, idx.pos[0].key.dtype)
+            mem, dele, ok, load = _remote_member(
+                idx, qk, cand, owner_of(qk, w), pvalid, w, cap,
+                dcfg.aggregate, dcfg.axis)
+            recv_load = recv_load + load
+            is_min = min_i[r] == bi
+            keep = jnp.where(is_min, ~dele, mem)
+            n_isect = n_isect + (alive & ~is_min).sum().astype(jnp.int64)
+            alive = alive & (keep | ~ok)  # unanswered rows defer, not die
+            incomplete = incomplete | (pvalid & ~ok)
+        for f in lv.filters:
+            lo = new_prefix[:, list(new_bound).index(f.lo)]
+            hi = new_prefix[:, list(new_bound).index(f.hi)]
+            alive = alive & (lo < hi)
+
+        # ---- rem-ext deferral: advance each prefix past its last complete
+        # contiguous proposal only; later survivors are retried next round ---
+        inc_off = jnp.where(incomplete, k_off, INF)
+        first_inc = jax.ops.segment_min(inc_off, r, num_segments=W)
+        first_inc = jnp.minimum(first_inc, INF)
+        advance = jnp.clip(jnp.minimum(first_inc, wk + allowed) - wk,
+                           0, allowed)
+        consumed = valid & count_ok & (wk + advance >= min_c)
+        alive = alive & (k_off < first_inc[r])
+        n_proposed = (pvalid & (k_off < first_inc[r])).sum()
+
+        # ---- retire / push (identical to the single-host branch) ----------
+        kfull = qu.k.at[:W].set(wk + advance)
+        live_row = jnp.arange(qu.prefix.shape[0], dtype=jnp.int32) < qu.size
+        keep_rows = live_row & ~jnp.pad(consumed,
+                                        (0, qu.prefix.shape[0] - W))
+        (pfx, kk, ww), nsz = _compact([qu.prefix, kfull, qu.weight],
+                                      keep_rows)
+        queues = list(state.queues)
+        queues[li] = LevelQueue(pfx, kk, ww, nsz)
+
+        out_buf, out_weight = state.out_buf, state.out_weight
+        out_n, out_count = state.out_n, state.out_count
+        overflow = state.overflow
+        if is_last:
+            out_count = out_count + (weight * alive).sum().astype(jnp.int64)
+            if dcfg.base.mode == "collect":
+                perm = np.argsort(np.asarray(plan.attr_order))
+                out_buf, n_new, ovf1 = _scatter_append(
+                    out_buf, out_n, new_prefix[:, perm], alive)
+                out_weight, _, _ = _scatter_append(
+                    out_weight, out_n, weight, alive)
+                out_n = jnp.minimum(out_n + n_new,
+                                    jnp.int32(out_buf.shape[0]))
+                overflow = overflow | ovf1
+        else:
+            nxt = queues[li + 1]
+            npfx, n_new, ovf1 = _scatter_append(
+                nxt.prefix, nxt.size, new_prefix, alive)
+            nk, _, _ = _scatter_append(
+                nxt.k, nxt.size, jnp.zeros(B, jnp.int32), alive)
+            nw, _, _ = _scatter_append(nxt.weight, nxt.size, weight, alive)
+            queues[li + 1] = LevelQueue(
+                npfx, nk, nw,
+                jnp.minimum(nxt.size + n_new,
+                            jnp.int32(nxt.prefix.shape[0])))
+            overflow = overflow | ovf1
+
+        return BigJoinState(
+            tuple(queues), out_buf, out_weight, out_n, out_count, overflow,
+            state.proposals + n_proposed.astype(jnp.int64),
+            state.intersections + n_isect, recv_load)
+
+    return branch
+
+
+def build_dist_step(plan: Plan, dcfg: DistConfig):
+    """Step on (BigJoinState, piece_queues).  Lock-step level choice: workers
+    must agree (they all participate in the collectives), so the globally
+    deepest non-empty queue is chosen via psum'd sizes."""
+    if dcfg.balance:
+        from repro.core.balance import build_balanced_step
+        return build_balanced_step(plan, dcfg)
+
+    branches = [_build_dist_level(plan, dcfg, li)
+                for li in range(len(plan.levels))]
+
+    def step(carry, indices):
+        state, pieces = carry
+        sizes = jnp.stack([q.size for q in state.queues])
+        gsizes = jax.lax.psum(sizes, dcfg.axis)
+        nz = gsizes > 0
+        deepest = (len(branches) - 1
+                   - jnp.argmax(nz[::-1]).astype(jnp.int32))
+        deepest = jnp.clip(deepest, 0, len(branches) - 1)
+        return jax.lax.switch(deepest, branches, state, indices), pieces
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# whole-join program: shard_map( seed -> while(step) -> psum(outputs) )
+# ---------------------------------------------------------------------------
+
+def build_per_worker(plan: Plan, dcfg: DistConfig):
+    """The SPMD body: fn(indices, seed [1,S,2], seed_n [1]) run under
+    shard_map.  Exposed separately so the multi-pod dry-run can lower it on
+    arbitrary meshes (launch/dryrun.py)."""
+    from repro.core.bigjoin import make_state
+    from repro.core.bigjoin import _scatter_append, _binding_key
+    step = build_dist_step(plan, dcfg)
+    w, cap = dcfg.num_workers, dcfg.route_capacity
+    collect = dcfg.base.mode == "collect"
+
+    def per_worker(indices, seed, seed_n):
+        seed, seed_n = seed[0], seed_n[0]
+        local = {k: _local(v) for k, v in indices.items()}
+        state = make_state(plan, dcfg.base, seed_capacity=seed.shape[0])
+
+        # seed enqueue with remote seed filters
+        alive = jnp.arange(seed.shape[0], dtype=jnp.int32) < seed_n
+        bound = tuple(plan.attr_order[:2])
+        for b in plan.seed_filters:
+            idx = local[b.index_id]
+            qk = _binding_key(seed, bound, b.key_attrs, idx)
+            qv = seed[:, bound.index(b.ext_attr)]
+            mem, _, ok, _ld = _remote_member(
+                idx, qk, qv, owner_of(qk, w), alive, w,
+                max(cap, seed.shape[0] // max(w // 2, 1) + 1),
+                dcfg.aggregate, dcfg.axis)
+            alive = alive & mem & ok  # seed capacity sized to never drop
+        for f in plan.seed_ineq:
+            alive = alive & (seed[:, bound.index(f.lo)]
+                             < seed[:, bound.index(f.hi)])
+        q0 = state.queues[0]
+        npfx, n_new, ovf = _scatter_append(q0.prefix, q0.size, seed, alive)
+        nk, _, _ = _scatter_append(
+            q0.k, q0.size, jnp.zeros(seed.shape[0], jnp.int32), alive)
+        nw, _, _ = _scatter_append(
+            q0.weight, q0.size, jnp.ones(seed.shape[0], jnp.int32), alive)
+        from repro.core.bigjoin import LevelQueue
+        queues = list(state.queues)
+        queues[0] = LevelQueue(npfx, nk, nw, q0.size + n_new)
+        state = dataclasses.replace(state, queues=tuple(queues),
+                                    overflow=state.overflow | ovf)
+        if dcfg.balance:
+            from repro.core.balance import make_piece_queues
+            pieces = make_piece_queues(plan, dcfg)
+        else:
+            pieces = ()
+
+        def total_active(carry_state):
+            st, pcs = carry_state
+            sizes = jnp.stack([q.size for q in st.queues]).sum()
+            if pcs:
+                sizes = sizes + jnp.stack([p.size for p in pcs]).sum()
+            return jax.lax.psum(sizes, dcfg.axis) > 0
+
+        def cond(carry):
+            _, active, it = carry
+            return active & (it < dcfg.max_steps)
+
+        def body(carry):
+            st, _, it = carry
+            st = step(st, local)
+            return st, total_active(st), it + 1
+
+        carry0 = (state, pieces)
+        (state, pieces), _, steps = jax.lax.while_loop(
+            cond, body, (carry0, total_active(carry0),
+                         jnp.asarray(0, jnp.int32)))
+
+        count = jax.lax.psum(state.out_count, dcfg.axis)
+        props = jax.lax.psum(state.proposals, dcfg.axis)
+        isect = jax.lax.psum(state.intersections, dcfg.axis)
+        ovf = jax.lax.psum(state.overflow.astype(jnp.int32), dcfg.axis) > 0
+        max_load = jax.lax.pmax(state.recv_load, dcfg.axis)
+        sum_load = jax.lax.psum(state.recv_load, dcfg.axis)
+        outs = (count, props, isect, steps, ovf, max_load, sum_load)
+        if collect:
+            outs = outs + (state.out_buf[None], state.out_weight[None],
+                           state.out_n[None])
+        return outs
+
+    return per_worker
+
+
+def build_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
+    """Returns jitted fn(indices, seed [w,S,2], seed_n [w]) ->
+    (count, proposals, intersections, steps, overflow, max_load, sum_load
+     [, out_buf, out_weight, out_n])."""
+    per_worker = build_per_worker(plan, dcfg)
+    collect = dcfg.base.mode == "collect"
+    ax = dcfg.axis
+    out_specs = (P(), P(), P(), P(), P(), P(), P())
+    if collect:
+        out_specs = out_specs + (P(ax), P(ax), P(ax))
+
+    # in_specs must mirror the indices pytree: build per call (structure is
+    # stable per plan, so jit caching still applies)
+    def run(indices, seed, seed_n):
+        specs = (jax.tree.map(lambda _: P(ax), indices,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+                 P(ax), P(ax))
+        f = jax.shard_map(per_worker, mesh=mesh, in_specs=specs,
+                          out_specs=out_specs, check_vma=False)
+        return jax.jit(f)(indices, seed, seed_n)
+
+    return run
+
+
+@dataclasses.dataclass
+class DistJoinResult:
+    count: int
+    proposals: int
+    intersections: int
+    steps: int
+    max_load: int = 0  # max over workers of requests served (Thm 3.4)
+    mean_load: float = 0.0
+    tuples: Optional[np.ndarray] = None
+    weights: Optional[np.ndarray] = None
+
+
+def distributed_join(plan: Plan, relations: Dict[str, np.ndarray],
+                     mesh: Optional[Mesh] = None,
+                     cfg: Optional[DistConfig] = None) -> DistJoinResult:
+    """End-to-end distributed static join on the given worker mesh."""
+    from repro.core.bigjoin import seed_tuples_for
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, (AXIS,))
+    w = mesh.shape[AXIS]
+    if cfg is None:
+        base = BigJoinConfig(batch=1024, mode="count")
+        cfg = DistConfig(base, w, route_capacity=max(1024 // w, 16) * 4)
+    assert cfg.num_workers == w
+    indices = partition_indices(plan, relations, w)
+    seed = seed_tuples_for(plan, relations)
+    per = -(-seed.shape[0] // w)
+    pad = np.zeros((per * w - seed.shape[0], 2), np.int32)
+    chunks = np.concatenate([seed, pad]).reshape(w, per, 2)
+    seed_n = np.full(w, per, np.int32)
+    seed_n[-1] = per - pad.shape[0]
+    run = build_distributed_program(plan, cfg, mesh)
+    out = run(indices, jnp.asarray(chunks), jnp.asarray(seed_n))
+    if bool(out[4]):
+        raise RuntimeError("distributed join overflow (raise capacities)")
+    res = DistJoinResult(int(out[0]), int(out[1]), int(out[2]), int(out[3]),
+                         int(out[5]), float(out[6]) / w)
+    if cfg.base.mode == "collect":
+        bufs, wts, ns = (np.asarray(out[7]), np.asarray(out[8]),
+                         np.asarray(out[9]))
+        res.tuples = np.concatenate([bufs[i, :ns[i]] for i in range(w)])
+        res.weights = np.concatenate([wts[i, :ns[i]] for i in range(w)])
+    return res

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (TokenStream, rmat_graph, recsys_events,
+                                  uniform_graph)
+from repro.data.graph_sampler import NeighborSampler

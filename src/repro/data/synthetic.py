@@ -1,0 +1,99 @@
+"""Synthetic data generators — deterministic, shardable, restartable.
+
+Every generator is a pure function of (seed, shard, step); any worker can
+re-derive any shard after a restart or an elastic resize (the fault-
+tolerance contract of the data layer — no state to checkpoint beyond the
+step counter).
+
+``rmat_graph`` matters for the paper: its skew (power-law degrees) is what
+makes the Balance machinery of BiGJoin-S non-optional at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def rmat_graph(scale: int, edge_factor: int = 16, seed: int = 0,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19
+               ) -> np.ndarray:
+    """R-MAT generator (Graph500 parameters by default): [E, 2] int32.
+
+    Produces heavily skewed degree distributions — the adversarial regime
+    for workload balance (§3.4).
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    e = n * edge_factor
+    src = np.zeros(e, np.int64)
+    dst = np.zeros(e, np.int64)
+    for bit in range(scale):
+        r = rng.random(e)
+        # quadrant probabilities (a, b, c, d)
+        go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
+        go_down = r >= a + b
+        src |= go_down.astype(np.int64) << bit
+        dst |= go_right.astype(np.int64) << bit
+    keep = src != dst
+    edges = np.unique(np.stack([src[keep], dst[keep]], 1), axis=0)
+    return edges.astype(np.int32)
+
+
+def uniform_graph(num_vertices: int, num_edges: int, seed: int = 0
+                  ) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, num_vertices, num_edges)
+    v = rng.integers(0, num_vertices, num_edges)
+    keep = u != v
+    return np.unique(np.stack([u[keep], v[keep]], 1).astype(np.int32),
+                     axis=0)
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Deterministic LM token batches: batch [B, S+1] int32 (inputs+labels).
+
+    Shard-aware: worker ``shard`` of ``num_shards`` sees a disjoint
+    deterministic substream; ``at_step`` provides O(1) seek for restart.
+    """
+
+    vocab_size: int
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+
+    def batch_at(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * self.num_shards + self.shard)
+        # zipf-ish marginal over the vocab — cheap stand-in for text
+        z = rng.zipf(1.3, size=(self.batch_size, self.seq_len + 1))
+        return (z % self.vocab_size).astype(np.int32)
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def recsys_events(num_users: int, num_items: int, batch: int, step: int,
+                  table_sizes: Tuple[int, ...], multi_hot: int = 8,
+                  seed: int = 0):
+    """One batch of retrieval events: (user_feats, item_ids, labels).
+
+    user_feats: dict of categorical id arrays per embedding table —
+    ``multi_hot`` ids per example for bag features (EmbeddingBag path).
+    """
+    rng = np.random.default_rng(seed * 7_777_777 + step)
+    feats = {}
+    for t, size in enumerate(table_sizes):
+        # zipf over table rows: hot items/users (the skew the paper fights)
+        ids = rng.zipf(1.2, size=(batch, multi_hot)) % size
+        feats[f"table_{t}"] = ids.astype(np.int32)
+    item_ids = (rng.zipf(1.2, size=(batch,)) % num_items).astype(np.int32)
+    labels = rng.integers(0, 2, size=(batch,)).astype(np.float32)
+    return feats, item_ids, labels

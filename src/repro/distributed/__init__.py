@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (logical_sharding, shard_params,
+                                        ShardingRules)
+from repro.distributed.collectives import compressed_psum

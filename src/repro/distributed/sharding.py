@@ -1,0 +1,114 @@
+"""Logical-axis sharding: name model dimensions once, map to mesh axes.
+
+Model code annotates parameters/activations with *logical* axis names
+("embed", "vocab", "expert", "kv", ...); a ShardingRules table maps those to
+physical mesh axes ("data", "model", "pod").  This is the MaxText-style
+indirection that lets one model definition serve every mesh in launch/mesh.py
+— including the multi-pod (pod, data, model) production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical->physical table for the production meshes
+DEFAULT_RULES: Dict[str, Optional[object]] = {
+    "batch": ("pod", "data"),  # DP over pods x data axis
+    "batch_dp3": ("pod", "data", "model"),  # ZeRO-3 cells: DP everywhere
+    "seq": None,  # sequence kept unsharded by default (SP selectively)
+    "seq_shard": "model",  # sequence parallelism for long-context cells
+    "embed": "data",  # FSDP: weight embed-dim over the DP axis
+    "mlp": "model",  # TP: hidden of MLPs
+    "heads": "model",  # TP: attention heads
+    "kv_heads": "model",
+    "vocab": "model",  # TP: embedding/unembedding
+    "expert": "model",  # EP: MoE experts
+    "nodes": ("pod", "data"),  # GNN: node partition
+    "edges": ("pod", "data"),  # GNN: edge partition
+    "feat": None,
+    "table_rows": "model",  # recsys: embedding tables row-sharded
+    "candidates": ("pod", "data"),  # retrieval scoring partition
+    "workers": ("pod", "data", "model"),  # WCOJ: every chip is a worker
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: Tuple[Tuple[str, Optional[object]], ...]
+
+    @classmethod
+    def default(cls, **overrides) -> "ShardingRules":
+        t = dict(DEFAULT_RULES)
+        t.update(overrides)
+        return cls(tuple(sorted(t.items(), key=lambda kv: kv[0])))
+
+    def physical(self, logical: Tuple[Optional[str], ...],
+                 mesh: Mesh,
+                 shape: Optional[Tuple[int, ...]] = None) -> P:
+        """Logical -> physical spec.  With ``shape``, axes that do not
+        evenly divide their dimension are dropped (8 experts cannot shard
+        over a 16-way axis; the next mapped dimension then gets the axis)."""
+        sizes = dict(mesh.shape)
+        axes = []
+        used = set()
+        t = dict(self.table)
+        for i, name in enumerate(logical):
+            if name is None:
+                axes.append(None)
+                continue
+            phys = t.get(name)
+            cands = (phys if isinstance(phys, tuple)
+                     else ((phys,) if phys else ()))
+            kept, prod = [], 1
+            for p in cands:
+                if p not in sizes or p in used:
+                    continue
+                if shape is not None and \
+                        shape[i] % (prod * sizes[p]) != 0:
+                    continue
+                kept.append(p)
+                used.add(p)
+                prod *= sizes[p]
+            axes.append(tuple(kept) if len(kept) > 1
+                        else (kept[0] if kept else None))
+        return P(*axes)
+
+
+def logical_sharding(logical: Tuple[Optional[str], ...], mesh: Mesh,
+                     rules: Optional[ShardingRules] = None) -> NamedSharding:
+    rules = rules or ShardingRules.default()
+    return NamedSharding(mesh, rules.physical(logical, mesh))
+
+
+def shard_params(params, logical_axes, mesh: Mesh,
+                 rules: Optional[ShardingRules] = None):
+    """device_put a param pytree according to its logical-axes pytree."""
+    rules = rules or ShardingRules.default()
+    return jax.tree.map(
+        lambda p, ax: jax.device_put(
+            p, logical_sharding(ax, mesh, rules)),
+        params, logical_axes,
+        is_leaf=lambda x: isinstance(x, (np.ndarray, jax.Array)))
+
+
+def sharding_tree(logical_axes, mesh: Mesh, template=None,
+                  rules: Optional[ShardingRules] = None):
+    """Pytree of NamedShardings from a pytree of logical axis tuples.
+
+    ``template`` (matching pytree of arrays/ShapeDtypeStructs) enables the
+    shape-aware divisibility filtering of ``ShardingRules.physical``."""
+    rules = rules or ShardingRules.default()
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    if template is None:
+        return jax.tree.map(
+            lambda ax: logical_sharding(ax, mesh, rules), logical_axes,
+            is_leaf=is_ax)
+    return jax.tree.map(
+        lambda ax, leaf: NamedSharding(
+            mesh, rules.physical(ax, mesh, tuple(leaf.shape))),
+        logical_axes, template, is_leaf=is_ax)

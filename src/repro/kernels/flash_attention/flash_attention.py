@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: blocked online-softmax attention.
+
+The LM architectures' dominant compute is attention; this kernel implements
+the standard flash pattern adapted to TPU: the Q block lives in VMEM, the
+kernel iterates KV blocks with a running (max, denominator, accumulator)
+triple, and the MXU does both the QK^T and PV contractions at bf16 inputs /
+f32 accumulation.
+
+Variants required by the assigned architectures (selected by static args):
+  causal            — decoder LMs (all)
+  sliding window    — mixtral (SWA), gemma2 / llama4-scout local layers
+  logit softcap     — gemma2 (tanh cap on attention logits)
+
+Block sizes: BQ x BK = 128 x 128 aligns with the MXU systolic array; the
+VMEM working set is q[BQ,Dh] + k/v[BK,Dh] + acc[BQ,Dh] + stats, well under
+budget for Dh <= 256 (gemma's head_dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQK = 128  # query block rows
+BKV = 128  # kv block rows
+
+NEG_INF = -1e30
+
+
+def flash_kernel(q_ref, k_ref, v_ref, o_ref, *, seq_k: int, causal: bool,
+                 window: int, softcap: float, scale: float, q_offset: int):
+    q = q_ref[0].astype(jnp.float32) * scale  # [BQ, Dh]
+    bq, dh = q.shape
+    q_pos = q_offset + pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.ds(kb * BKV, BKV), slice(None))
+                    ).astype(jnp.float32)  # [BK, Dh]
+        v = pl.load(v_ref, (0, pl.ds(kb * BKV, BKV), slice(None))
+                    ).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = kb * BKV + jax.lax.iota(jnp.int32, BKV)
+        mask = (k_pos < seq_k)[None, :]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    nkv = (seq_k + BKV - 1) // BKV
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "q_offset", "interpret"))
+def _flash_call(q, k, v, causal: bool = True, window: int = 0,
+                softcap: float = 0.0, scale: float = 1.0, q_offset: int = 0,
+                interpret: bool = True):
+    """q [H, Sq, Dh]; k, v [H, Sk, Dh] -> o [H, Sq, Dh].
+
+    ``q_offset``: absolute position of q row 0 (decode: cache length)."""
+    H, Sq, Dh = q.shape
+    Sk = k.shape[1]
+    Sq_p = ((Sq + BQK - 1) // BQK) * BQK
+    Sk_p = ((Sk + BKV - 1) // BKV) * BKV
+    if Sq_p != Sq:
+        q = jnp.concatenate(
+            [q, jnp.zeros((H, Sq_p - Sq, Dh), q.dtype)], axis=1)
+    if Sk_p != Sk:
+        k = jnp.concatenate(
+            [k, jnp.zeros((H, Sk_p - Sk, Dh), k.dtype)], axis=1)
+        v = jnp.concatenate(
+            [v, jnp.zeros((H, Sk_p - Sk, Dh), v.dtype)], axis=1)
+    grid = (H, Sq_p // BQK)
+    out = pl.pallas_call(
+        functools.partial(flash_kernel, seq_k=Sk, causal=causal,
+                          window=window, softcap=softcap, scale=scale,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQK, Dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, Sk_p, Dh), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, Sk_p, Dh), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQK, Dh), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Sq_p, Dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (full-materialization softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale: float = 1.0,
+                  q_offset: int = 0) -> jax.Array:
+    """q [H, Sq, Dh]; k, v [H, Sk, Dh] -> [H, Sq, Dh] (f32 math)."""
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("hqd,hkd->hqk", qf, k.astype(jnp.float32))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    Sq, Sk = q.shape[1], k.shape[1]
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

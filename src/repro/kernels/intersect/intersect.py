@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: batched sorted-membership (the Intersect hot spot).
+
+The innermost operation of the WCOJ dataflow is "does extension e of prefix p
+exist in relation R_i?" — a lookup of (key, val) in a lexicographically
+sorted pair of arrays.  The paper uses CPU hash tables; the TPU-native
+structure is a two-level sorted search (DESIGN.md §2):
+
+  level 1 (VMEM): a *router* holding every SEG-th (key,val) pair.  A
+      fixed-depth vectorized binary search over the router (VMEM gathers —
+      cheap on TPU) locates the SEG-aligned segment of each query.
+  level 2 (HBM->VMEM): one dynamic-slice load of the SEG-entry segment per
+      query (the same per-row DMA pattern as TPU embedding lookups), then a
+      128-lane vector compare.
+
+SEG = 128 aligns the segment load with the VPU lane width.  The query block
+(BQ per grid step) bounds VMEM: BQ·(8B+4B) queries + SEG·(8B+4B) segment +
+router (capped by ROUTER_MAX entries; beyond that the router itself is
+two-level — not needed below 2^23 index entries per shard).
+
+The kernel returns one int32 bit per query.  ref.py is the pure-jnp oracle
+(identical fixed-depth lexicographic search, no tiling).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+SEG = 128  # segment length: one VPU lane row per segment fetch
+BQ = 256  # queries per grid step
+
+
+def _router_depth(num_segments: int) -> int:
+    return max(int(np.ceil(np.log2(max(num_segments, 2)))), 1) + 1
+
+
+def member_kernel(router_k_ref, router_v_ref, keys_ref, vals_ref, n_ref,
+                  qk_ref, qv_ref, out_ref, *, num_segments: int):
+    """One grid step: BQ queries against the full sorted (keys, vals)."""
+    qk = qk_ref[...]
+    qv = qv_ref[...]
+    n = n_ref[0]
+
+    # ---- level 1: vectorized binary search over the VMEM router ----------
+    rk = router_k_ref[...]
+    rv = router_v_ref[...]
+    lo = jnp.zeros(qk.shape, jnp.int32)
+    hi = jnp.full(qk.shape, num_segments, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        mk = rk[jnp.clip(mid, 0, num_segments - 1)]
+        mv = rv[jnp.clip(mid, 0, num_segments - 1)]
+        # segment leader strictly less-or-equal than query -> go right
+        le = (mk < qk) | ((mk == qk) & (mv <= qv))
+        sel = lo < hi
+        lo = jnp.where(le & sel, mid + 1, lo)
+        hi = jnp.where(~le & sel, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, _router_depth(num_segments), body, (lo, hi))
+    seg = jnp.maximum(lo - 1, 0)  # last segment whose leader <= query
+
+    # ---- level 2: per-query segment DMA + 128-lane compare ----------------
+    def probe(i, acc):
+        s = seg[i] * SEG
+        kseg = jax.lax.dynamic_slice(keys_ref[...], (s,), (SEG,))
+        vseg = jax.lax.dynamic_slice(vals_ref[...], (s,), (SEG,))
+        idx = s + jax.lax.iota(jnp.int32, SEG)
+        hit = ((kseg == qk[i]) & (vseg == qv[i]) & (idx < n)).any()
+        return acc.at[i].set(hit.astype(jnp.int32))
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, qk.shape[0], probe, jnp.zeros((qk.shape[0],), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _member_call(router_k, router_v, keys, vals, n, qk, qv,
+                 interpret: bool = True):
+    B = qk.shape[0]
+    num_segments = router_k.shape[0]
+    grid = (B // BQ,)
+    return pl.pallas_call(
+        functools.partial(member_kernel, num_segments=num_segments),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((num_segments,), lambda i: (0,)),  # router: VMEM
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+            pl.BlockSpec(keys.shape, lambda i: (0,)),  # full index
+            pl.BlockSpec(vals.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BQ,), lambda i: (i,)),  # query tile
+            pl.BlockSpec((BQ,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BQ,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(router_k, router_v, keys, vals, n, qk, qv)

@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the intersect kernel: router construction + padding.
+
+``member(keys, vals, n, qk, qv)`` is a drop-in replacement for
+``ref.member_ref`` (and for ``csr.index_member``'s jnp path): it pads the
+index to a SEG multiple, derives the VMEM router (every SEG-th entry) and
+tiles the query batch over the grid.
+
+The router derivation is jnp (it is a strided slice, fused by XLA); the
+search itself runs in the Pallas kernel.  On CPU the kernel executes in
+interpret mode; on TPU set ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.intersect.intersect import BQ, SEG, _member_call
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
+    pad = size - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def member(keys: jax.Array, vals: jax.Array, n: jax.Array,
+           qk: jax.Array, qv: jax.Array) -> jax.Array:
+    """[B] bool membership via the Pallas two-level search kernel."""
+    kmax = jnp.asarray(np.iinfo(keys.dtype.name).max, keys.dtype)
+    vmax = jnp.asarray(np.iinfo(jnp.int32.name if hasattr(jnp.int32, "name")
+                                else "int32").max, jnp.int32)
+    cap = keys.shape[0]
+    padded = ((cap + SEG - 1) // SEG) * SEG
+    keys_p = _pad_to(keys, padded, kmax)
+    vals_p = _pad_to(vals, padded, vmax)
+    router_k = keys_p[::SEG]
+    router_v = vals_p[::SEG]
+
+    B = qk.shape[0]
+    Bp = ((B + BQ - 1) // BQ) * BQ
+    qk_p = _pad_to(qk.astype(keys.dtype), Bp, kmax)
+    qv_p = _pad_to(qv.astype(jnp.int32), Bp, vmax)
+    bits = _member_call(router_k, router_v, keys_p, vals_p,
+                        n.reshape(1).astype(jnp.int32), qk_p, qv_p,
+                        interpret=_INTERPRET)
+    return bits[:B] > 0

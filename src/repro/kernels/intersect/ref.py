@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the intersect (sorted-membership) kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import lex_searchsorted
+
+
+def member_ref(keys: jax.Array, vals: jax.Array, n: jax.Array,
+               qk: jax.Array, qv: jax.Array) -> jax.Array:
+    """Membership of (qk, qv) in the lexicographically sorted (keys, vals)
+    restricted to the first n live entries.  [B] bool."""
+    pos = lex_searchsorted(keys, vals, n, qk.astype(keys.dtype),
+                           qv.astype(jnp.int32))
+    cap = keys.shape[0]
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    hit = (keys[pos_c] == qk.astype(keys.dtype)) & \
+        (vals[pos_c] == qv.astype(jnp.int32))
+    return hit & (pos < n)

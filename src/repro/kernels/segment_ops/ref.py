@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the segment_sum kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(data: jax.Array, seg_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(data.astype(jnp.float32), seg_ids,
+                               num_segments=num_segments)

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder devices.
+(Only this entry point sets the override — tests and benches see 1 device.)
+
+Per cell this driver:
+  1. builds the cell's step function + ShapeDtypeStruct inputs,
+  2. applies logical->physical shardings for the target mesh,
+  3. jit(...).lower(...).compile()   (failure here = sharding bug),
+  4. records memory_analysis / cost_analysis / per-collective bytes parsed
+     from the optimized HLO,
+  5. derives the three roofline terms (EXPERIMENTS.md §Roofline).
+
+Outputs one JSON line per cell to --out (benchmarks/results/dryrun.jsonl).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# per-chip wire-byte factor applied to the op's RESULT bytes (ring
+# algorithms; g = group size): all-reduce moves ~2x the tensor, all-gather
+# receives (g-1)/g ~ 1x of its (already full-size) result, reduce-scatter
+# sends (g-1)/g of its operand = result*g, all-to-all exchanges ~1x.
+def _wire_factor(op: str, group: int) -> float:
+    g = max(group, 2)
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op == "all-gather":
+        return (g - 1) / g
+    if op == "reduce-scatter":
+        return float(g - 1)  # result bytes * g * (g-1)/g
+    if op == "all-to-all":
+        return (g - 1) / g
+    return 1.0  # collective-permute
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in the result portion of an HLO line."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> Dict[str, Any]:
+    """Per-op-type result bytes + estimated per-chip wire bytes."""
+    stats = {op: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+             for op in _COLLECTIVES}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rest = m.group(1)
+        op_match = re.match(r"(\([^)]*\)|\S+)\s+([\w\-]+)", rest)
+        if not op_match:
+            continue
+        opname = op_match.group(2)
+        base = opname.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or opname.endswith("-done"):
+            continue
+        result = op_match.group(1)
+        rbytes = _shape_bytes(result)
+        # the CPU backend upcasts bf16 collectives to f32 (TPUs run them
+        # native): count convert-fed f32 collectives at bf16 width
+        if re.search(rf"{opname}\([^)]*convert", ls) and "f32" in result:
+            rbytes //= 2
+        g = 0
+        gm = _GROUPS_RE.search(ls)
+        if gm:
+            g = len([x for x in gm.group(1).split(",") if x.strip()])
+        else:
+            gi = _GROUPS_IOTA_RE.search(ls)
+            if gi:
+                g = int(gi.group(2))
+        g = g or 2
+        stats[base]["count"] += 1
+        stats[base]["result_bytes"] += rbytes
+        stats[base]["wire_bytes"] += rbytes * _wire_factor(base, g)
+    stats["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, no_probe: bool = False
+             ) -> Dict[str, Any]:
+    import jax
+    from repro.configs import get_arch
+    from repro.distributed.sharding import sharding_tree
+    from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                                   make_production_mesh)
+
+    spec = get_arch(arch_id)
+    cell = spec.cells[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if cell.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    def lower_compile(step, args, axes, donate):
+        if axes is not None:
+            in_shardings = sharding_tree(axes, mesh, template=args)
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             donate_argnums=donate)
+        else:
+            jitted = jax.jit(step, donate_argnums=donate)
+        with mesh:
+            lowered = jitted.lower(*args)
+            return lowered.compile()
+
+    t0 = time.time()
+    compiled = lower_compile(*cell.build(mesh))
+    t_compile = time.time() - t0
+    t_lower = 0.0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+
+    # ---- depth-probe extrapolation: XLA cost analysis counts a scan body
+    # once, so layer-stacked models probe at two unrolled depths (d1, d2)
+    # and extrapolate cost(L) = c1 + (c2 - c1) * (L - d1) / (d2 - d1).
+    if cell.probe is not None and not no_probe:
+        d1, d2 = cell.probe_depths
+        pts = []
+        for d in (d1, d2):
+            c = lower_compile(*cell.probe(mesh, d))
+            ca = c.cost_analysis()
+            pc = parse_collectives(c.as_text())
+            pts.append((float(ca.get("flops", 0.0)),
+                        float(ca.get("bytes accessed", 0.0)),
+                        float(pc["total_wire_bytes"])))
+        Lfull = cell.full_depth
+        scale = (Lfull - d1) / max(d2 - d1, 1)
+
+        def extrap(i):
+            # slope clamped >= 0: XLA occasionally optimizes the deeper
+            # probe harder, which would extrapolate negative
+            slope = max(pts[1][i] - pts[0][i], 0.0)
+            return max(pts[0][i] + slope * scale,
+                       pts[1][i]) * cell.probe_scale
+
+        flops_dev = extrap(0)
+        bytes_dev = extrap(1)
+        coll["total_wire_bytes"] = extrap(2)
+        rec["probe"] = {"depths": [d1, d2], "points": pts,
+                        "full_depth": Lfull}
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "chips": chips,
+        "per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collectives": {k: (v if not isinstance(v, dict) else
+                            {kk: int(vv) for kk, vv in v.items()})
+                        for k, v in coll.items()},
+    })
+
+    # ---- roofline terms (seconds; per-chip view of a balanced SPMD step) --
+    # memory term: structural — each live buffer (args incl. params/opt/
+    # cache + temps) streams through HBM ~2x per step (read + write) on a
+    # fused TPU program.  cost_analysis bytes are recorded as the unfused
+    # upper bound (every HLO op's operands counted at full width).
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    live = float((getattr(mem, "argument_size_in_bytes", 0) or 0)
+                 + (getattr(mem, "temp_size_in_bytes", 0) or 0))
+    memory_s = 2.0 * live / HBM_BW
+    memory_s_nofusion = bytes_dev / HBM_BW
+    collective_s = float(coll["total_wire_bytes"]) / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    model_flops = float(spec.model_flops(shape_name))
+    useful = model_flops / max(flops_dev * chips, 1.0)
+    rec["roofline"] = {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_s_nofusion": memory_s_nofusion,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_total": model_flops,
+        "useful_flops_ratio": useful,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }
+    if verbose:
+        arg_gb = (rec["per_device"]["argument_bytes"] or 0) / 2**30
+        tmp_gb = (rec["per_device"]["temp_bytes"] or 0) / 2**30
+        print(f"[{rec['mesh']}] {arch_id}/{shape_name}: compile "
+              f"{t_compile:.0f}s args {arg_gb:.2f}GiB temp {tmp_gb:.2f}GiB "
+              f"compute {compute_s*1e3:.2f}ms mem {memory_s*1e3:.2f}ms "
+              f"coll {collective_s*1e3:.2f}ms -> {dominant} "
+              f"(useful {useful:.2f})", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--append", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="compile-only pass (multi-pod shardability check; "
+                         "roofline terms come from the single-pod run)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch, list_archs
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    mode = "a" if args.append else "w"
+    failures = 0
+    with open(args.out, mode) as f:
+        for arch_id in archs:
+            spec = get_arch(arch_id)
+            shapes = (list(spec.cells) if args.shape == "all"
+                      else args.shape.split(","))
+            for shape in shapes:
+                if shape not in spec.cells:
+                    continue
+                for multi in meshes:
+                    try:
+                        rec = run_cell(arch_id, shape, multi,
+                                       no_probe=args.no_probe)
+                    except Exception as e:  # a failure IS a system bug
+                        rec = {"arch": arch_id, "shape": shape,
+                               "mesh": "2x16x16" if multi else "16x16",
+                               "status": "error",
+                               "error": f"{type(e).__name__}: {e}"}
+                        traceback.print_exc()
+                        failures += 1
+                        print(f"FAILED {arch_id}/{shape}", flush=True)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+    print(f"done; {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run overrides the device count before any
+jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) single-pod / (2,16,16) two-pod TPU-v5e production mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has, as a 1-axis mesh (tests, smoke)."""
+    import numpy as np
+    devs = np.array(jax.devices())
+    return jax.sharding.Mesh(devs, ("data",))
+
+
+# TPU v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,12 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys two-tower.
+
+Every model follows the same functional contract:
+
+    init(rng, cfg)            -> params pytree (real arrays; smoke configs)
+    abstract_params(cfg)      -> ShapeDtypeStruct pytree (dry-run, no alloc)
+    logical_axes(cfg)         -> pytree of logical-axis tuples (sharding)
+    loss_fn / train_step / serve-path functions
+
+Dtype discipline: parameters bf16 (configurable), activations bf16, softmax
+and reductions f32, optimizer moments f32.
+"""

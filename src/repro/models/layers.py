@@ -1,0 +1,110 @@
+"""Shared layers: initializers, norms, RoPE, MLPs — pure functions over
+param dicts, with logical-axis metadata built alongside."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def maybe_shard(x: jax.Array, *spec) -> jax.Array:
+    """Mesh- and shape-aware with_sharding_constraint.
+
+    Degrades gracefully: outside a mesh context it is a no-op; axes missing
+    from the mesh or not dividing the dimension are dropped (e.g. 4 kv
+    heads cannot shard over a 16-way model axis — the constraint then
+    leaves that dim unsharded instead of erroring)."""
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        sizes = dict(mesh.shape)
+        clean = []
+        used = set()
+        for dim, s in zip(x.shape, spec):
+            cands = s if isinstance(s, tuple) else (s,)
+            kept, prod = [], 1
+            for a in cands:
+                if a is None or a not in sizes or a in used:
+                    continue
+                if dim % (prod * sizes[a]) == 0:
+                    kept.append(a)
+                    used.add(a)
+                    prod *= sizes[a]
+            clean.append(tuple(kept) if len(kept) > 1
+                         else (kept[0] if kept else None))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*clean))
+    except (RuntimeError, ValueError, KeyError, TypeError, ImportError):
+        return x
+
+
+def he_init(rng, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = (2.0 / max(fan, 1)) ** 0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32)
+            * (1.0 / shape[-1] ** 0.5)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm; ``plus_one`` is the gemma convention (scale = 1 + w)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one \
+        else w.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         ) -> jax.Array:
+    """Rotary embedding.  x [..., S, H, Dh]; positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, w_in: jax.Array, w_out: jax.Array,
+              act: str = "silu") -> jax.Array:
+    """SwiGLU / GeGLU: w_in [d, 2*ff] packs (gate, up)."""
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    gate, up = jnp.split(h, 2, axis=-1)
+    g = jax.nn.silu(gate.astype(jnp.float32)) if act == "silu" \
+        else jax.nn.gelu(gate.astype(jnp.float32), approximate=True)
+    h = (g * up.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+def mlp(x: jax.Array, w1: jax.Array, b1, w2: jax.Array, b2,
+        act: str = "relu") -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w1) + b1
+    h = jax.nn.relu(h) if act == "relu" else jax.nn.silu(h)
+    return jnp.einsum("...f,fo->...o", h, w2) + b2
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       softcap: float = 0.0) -> jax.Array:
+    """Mean token cross entropy; logsumexp in f32.  logits [..., V]."""
+    lg = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        lg = jnp.tanh(lg / softcap) * softcap
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

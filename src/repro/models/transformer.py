@@ -1,0 +1,524 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+One definition, config-selected features:
+  * GQA with separate head_dim (gemma), RoPE, RMSNorm (optionally gemma's
+    1+w), SwiGLU / GeGLU
+  * MoE (mixtral 8x top-2, llama4-scout 16x top-1) with sort-based
+    capacity-bounded dispatch — the fixed-capacity bucketing is the same
+    primitive as the join engine's routing (DESIGN.md §4)
+  * attention patterns: full, sliding-window (mixtral), local/global
+    alternation (gemma2, llama4-scout) — per-layer window array threaded
+    through one lax.scan so the HLO stays O(1) in depth
+  * logit softcaps (gemma2)
+  * KV-cache decode and prefill paths for the serving shapes
+
+Parameters are plain dicts; layer params carry a leading [L] axis and are
+consumed by lax.scan (compact HLO: essential for 48-60 layer dry-runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"  # "silu" (SwiGLU) | "gelu" (GeGLU)
+    # MoE (n_experts == 0 -> dense MLP)
+    n_experts: int = 0
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    # attention pattern
+    window: int = 0  # sliding window width (0 = full)
+    local_global_period: int = 0  # every p-th layer global, rest local
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    norm_plus_one: bool = False
+    embed_scale: bool = False  # gemma: scale embeddings by sqrt(d)
+    param_dtype: Any = jnp.bfloat16
+    act_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: bool = False  # dry-run depth probes: exact HLO cost
+    pure_dp: bool = False  # ZeRO-3: batch over every axis, weights fully
+    # gathered JIT (dense-arch train cells; §Perf iter 3)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_windows(self) -> np.ndarray:
+        """Per-layer attention window (0 = full attention)."""
+        if self.local_global_period > 0:
+            return np.array(
+                [0 if (l + 1) % self.local_global_period == 0
+                 else self.window for l in range(self.num_layers)],
+                np.int32)
+        return np.full(self.num_layers, self.window, np.int32)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no layer does full attention over unbounded context...
+        used by configs to gate the long_500k cell."""
+        return bool(self.window > 0 and self.local_global_period == 0) or \
+            self.local_global_period > 0  # hybrid: bounded local majority
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd \
+            + self.n_heads * hd * d
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        return self.num_layers * per_layer + self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        inactive = (self.n_experts - self.top_k) * 3 * d * self.d_ff
+        return self.param_count() - self.num_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# init + metadata
+# ---------------------------------------------------------------------------
+
+def init(rng: jax.Array, cfg: TransformerConfig) -> Params:
+    Lr, d, hd = cfg.num_layers, cfg.d_model, cfg.head_dim
+    H, K, ff, V = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    keys = jax.random.split(rng, 10)
+    pd = cfg.param_dtype
+
+    def li(key, shape, fan_in):
+        return L.he_init(key, (Lr,) + shape, pd, fan_in)
+
+    layer = {
+        "ln1": jnp.zeros((Lr, d), pd) if cfg.norm_plus_one
+        else jnp.ones((Lr, d), pd),
+        "ln2": jnp.zeros((Lr, d), pd) if cfg.norm_plus_one
+        else jnp.ones((Lr, d), pd),
+        "wq": li(keys[0], (d, H * hd), d),
+        "wk": li(keys[1], (d, K * hd), d),
+        "wv": li(keys[2], (d, K * hd), d),
+        "wo": li(keys[3], (H * hd, d), H * hd),
+    }
+    if cfg.is_moe:
+        layer.update({
+            "router": li(keys[4], (d, cfg.n_experts), d),
+            "w_in": L.he_init(keys[5], (Lr, cfg.n_experts, d, 2 * ff), pd,
+                              d),
+            "w_out": L.he_init(keys[6], (Lr, cfg.n_experts, ff, d), pd, ff),
+        })
+    else:
+        layer.update({
+            "w_in": li(keys[5], (d, 2 * ff), d),
+            "w_out": li(keys[6], (ff, d), ff),
+        })
+    return {
+        "embed": L.embed_init(keys[7], (V, d), pd),
+        "final_norm": jnp.zeros(d, pd) if cfg.norm_plus_one
+        else jnp.ones(d, pd),
+        "layers": layer,
+    }
+
+
+def abstract_params(cfg: TransformerConfig) -> Params:
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+def gather_fsdp(params: Params) -> Params:
+    """Hoisted FSDP all-gather: materialize the TP-sharded-only view of the
+    stacked layer weights once per step, so a microbatch accumulation scan
+    does not re-gather them every iteration (§Perf iter 2).  Differentiable
+    (its transpose is the reduce-scatter of the weight grads)."""
+    spec = {
+        "wq": (None, None, "model"), "wk": (None, None, "model"),
+        "wv": (None, None, "model"), "wo": (None, "model", None),
+        "w_in": (None, None, "model"), "w_out": (None, "model", None),
+        "router": (None, None, None),
+    }
+    if "w_in" in params["layers"] and params["layers"]["w_in"].ndim == 4:
+        spec["w_in"] = (None, "model", None, "model")
+        spec["w_out"] = (None, "model", "model", None)
+    lw = {k: (L.maybe_shard(v, *spec[k]) if k in spec else v)
+          for k, v in params["layers"].items()}
+    return {**params, "layers": lw}
+
+
+def logical_axes(cfg: TransformerConfig) -> Params:
+    layer = {
+        "ln1": (None, None), "ln2": (None, None),
+        "wq": (None, "embed", "heads"),
+        "wk": (None, "embed", "kv_heads"),
+        "wv": (None, "embed", "kv_heads"),
+        "wo": (None, "heads", "embed"),
+    }
+    if cfg.is_moe:
+        layer.update({
+            "router": (None, "embed", None),
+            # expert -> model when E divides the axis (llama4: 16); else the
+            # mlp dim takes it (mixtral: 8 experts fall back to ff sharding)
+            "w_in": (None, "expert", "embed", "mlp"),
+            "w_out": (None, "expert", "mlp", "embed"),
+        })
+    else:
+        layer.update({
+            "w_in": (None, "embed", "mlp"),
+            "w_out": (None, "mlp", "embed"),
+        })
+    # the embed table shards on vocab only: a d-dim (FSDP) shard would
+    # force logits-scale all-reduces in the fused CE (§Perf iter 1)
+    return {"embed": ("vocab", None),
+            "final_norm": (None,), "layers": layer}
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attention(x, lp, cfg: TransformerConfig, positions, window,
+               kv_cache=None, cache_pos=None):
+    """x [B, S, d].  window: traced scalar (0 = full).  If kv_cache is given
+    ((k, v) [B, Smax, K, hd]), attends over the cache (decode path)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    # FSDP: weights stored data-axis-sharded on their d dim are gathered
+    # just-in-time (ZeRO-3); otherwise XLA resolves the data-axis conflict
+    # by collective-permuting the much larger activations (§Perf iter 1).
+    # pure_dp gathers the TP dim too (batch owns every mesh axis).
+    tp = None if cfg.pure_dp else "model"
+    wq = L.maybe_shard(lp["wq"], None, tp)
+    wk = L.maybe_shard(lp["wk"], None, tp)
+    wv = L.maybe_shard(lp["wv"], None, tp)
+    wo = L.maybe_shard(lp["wo"], tp, None)
+    q = jnp.einsum("bsd,dh->bsh", x, wq).reshape(B, S, K, G, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, wk).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, wv).reshape(B, S, K, hd)
+    # keep heads on the model axis and head_dim replicated: a sharded hd
+    # contraction would all-reduce the S^2-scale score tensors
+    bspec = ("pod", "data", "model") if cfg.pure_dp else ("pod", "data")
+    q = L.maybe_shard(q, bspec, None, tp, None, None)
+    k = L.maybe_shard(k, bspec, None, tp, None)
+    v = L.maybe_shard(v, bspec, None, tp, None)
+    q = L.rope(q.reshape(B, S, K * G, hd), positions, cfg.rope_theta
+               ).reshape(B, S, K, G, hd)
+    k = L.rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        zero = jnp.asarray(0, cache_pos.dtype)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (zero, cache_pos, zero, zero))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (zero, cache_pos, zero, zero))
+        k_all, v_all = ck, cv
+        k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32)[None, :]
+        new_cache = (ck, cv)
+    else:
+        k_all, v_all = k, v
+        k_pos = positions[:, :] if positions.ndim == 2 else \
+            positions[None, :]
+        new_cache = None
+
+    scale = 1.0 / np.sqrt(hd)
+    q_pos = positions if positions.ndim == 2 else positions[None, :]
+
+    def attend(qc, qp):
+        """qc [B, C, K, G, hd]; qp [B, C] -> [B, C, K, G, hd].
+
+        Scores stay sharded over kv-heads (consistent with wk/wv weight
+        sharding: no per-layer resharding); the q-chunking bounds the
+        scores buffer at C*Sk per head — the pure-XLA stand-in for the
+        flash kernel's blocking (kernels/flash_attention is the TPU path).
+        """
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k_all) * scale
+        s = s.astype(jnp.float32)
+        if cfg.attn_softcap > 0.0:
+            s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
+        causal = k_pos[:, None, :] <= qp[:, :, None]  # [B, C, Sk]
+        win_ok = jnp.where(window > 0,
+                           k_pos[:, None, :] > qp[:, :, None] - window,
+                           True)
+        mask = (causal & win_ok)[:, None, None, :, :]
+        s = jnp.where(mask, s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", probs, v_all)
+
+    CQ = min(S, 512)
+    if S % CQ != 0 or cfg.scan_unroll:
+        # dense path: irregular smoke shapes, and cost probes (one einsum
+        # gives the exact attention flops without unrolled chunk bodies)
+        CQ = S
+    if S == CQ:
+        out = attend(q, q_pos)
+    else:
+        nq = S // CQ
+        qs = q.reshape(B, nq, CQ, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = jnp.broadcast_to(q_pos, (B, S)).reshape(B, nq, CQ
+                                                     ).transpose(1, 0, 2)
+
+        def body(_, qp):
+            return None, attend(*qp)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps),
+                               unroll=cfg.scan_unroll)
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, wo), new_cache
+
+
+def _moe_mlp(x2d, lp, cfg: TransformerConfig = None):
+    """Sort-based capacity-bounded MoE dispatch.  x2d [T, d]."""
+    T, d = x2d.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = int(np.ceil(cfg.capacity_factor * T * k / E / 8) * 8)
+    logits = jnp.einsum("td,de->te", x2d, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)  # [T, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    ids = topi.reshape(-1).astype(jnp.int32)  # [T*k]
+    wts = topv.reshape(-1)
+    tok = jnp.arange(T * k, dtype=jnp.int32) // k
+    order = jnp.argsort(ids, stable=True).astype(jnp.int32)
+    sid = ids[order]
+    first = jnp.searchsorted(sid, sid, side="left").astype(jnp.int32)
+    rank = jnp.arange(T * k, dtype=jnp.int32) - first
+    keep = rank < C
+    slot = jnp.where(keep, sid * C + rank, E * C)
+
+    buf = jnp.zeros((E * C, d), x2d.dtype)
+    buf = buf.at[slot].set(x2d[tok[order]], mode="drop")
+    # expert-parallel buffer [E, C, d]: experts on the model axis (when E
+    # divides it) and capacity on the DP axes, so per-chip MoE flops scale
+    # as tokens/chips even when E < |model| (mixtral)
+    if cfg is not None and cfg.pure_dp:
+        # §Perf iter B2: full expert gathers, capacity over every axis —
+        # sidesteps XLA's pathological scatter-emulated EP all-to-all
+        bufe = L.maybe_shard(buf.reshape(E, C, d), None,
+                             ("pod", "data", "model"), None)
+        w_in = L.maybe_shard(lp["w_in"], None, None, None)
+        w_out = L.maybe_shard(lp["w_out"], None, None, None)
+    else:
+        bufe = L.maybe_shard(buf.reshape(E, C, d), "model",
+                             ("pod", "data"), None)
+        w_in = L.maybe_shard(lp["w_in"], "model", None, "model")
+        w_out = L.maybe_shard(lp["w_out"], "model", "model", None)
+    h = jnp.einsum("ecd,edf->ecf", bufe, w_in)
+    gate, up = jnp.split(h, 2, axis=-1)
+    g = jax.nn.silu(gate.astype(jnp.float32)) if cfg.act == "silu" \
+        else jax.nn.gelu(gate.astype(jnp.float32), approximate=True)
+    h = (g * up.astype(jnp.float32)).astype(x2d.dtype)
+    eout = jnp.einsum("ecf,efd->ecd", h, w_out).reshape(E * C, d)
+
+    contrib = eout[jnp.minimum(slot, E * C - 1)]
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    out = jnp.zeros((T, d), x2d.dtype)
+    out = out.at[tok[order]].add(contrib * wts[order][:, None].astype(
+        x2d.dtype))
+    # load-balance aux loss (Switch-style)
+    frac = jax.ops.segment_sum(jnp.ones_like(wts), ids,
+                               num_segments=E) / (T * k)
+    mean_prob = probs.mean(0)
+    aux = E * jnp.sum(frac * mean_prob)
+    return out, aux
+
+
+def _block(x, lp, cfg: TransformerConfig, positions, window,
+           kv_cache=None, cache_pos=None):
+    h, new_cache = _attention(
+        L.rms_norm(x, lp["ln1"], plus_one=cfg.norm_plus_one), lp, cfg,
+        positions, window, kv_cache, cache_pos)
+    x = x + h
+    y = L.rms_norm(x, lp["ln2"], plus_one=cfg.norm_plus_one)
+    if cfg.is_moe:
+        B, S, d = y.shape
+        # inner checkpoint: the dispatch gathers/scatters are recomputed in
+        # backward instead of keeping [T*k, d]-scale intermediates live
+        moe = jax.checkpoint(functools.partial(_moe_mlp, cfg=cfg)) \
+            if cfg.remat else functools.partial(_moe_mlp, cfg=cfg)
+        out, aux = moe(y.reshape(B * S, d), lp)
+        y = out.reshape(B, S, d)
+    else:
+        tp = None if cfg.pure_dp else "model"
+        y = L.gated_mlp(y, L.maybe_shard(lp["w_in"], None, tp),
+                        L.maybe_shard(lp["w_out"], tp, None), cfg.act)
+        aux = jnp.float32(0.0)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (final hidden states [B, S, d], aux loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, win = xs
+        x, _, a = _block(x, lp, cfg, positions, win)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               (params["layers"], windows),
+                               unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    return x, aux
+
+
+def logits_fn(params: Params, hidden: jax.Array,
+              cfg: TransformerConfig) -> jax.Array:
+    """Tied unembedding.  hidden [..., d] -> logits [..., V]."""
+    lg = jnp.einsum("...d,vd->...v", hidden, params["embed"])
+    if cfg.final_softcap > 0:
+        lg = (jnp.tanh(lg.astype(jnp.float32) / cfg.final_softcap)
+              * cfg.final_softcap).astype(lg.dtype)
+    return lg
+
+
+def _chunked_ce(params: Params, hidden: jax.Array, labels: jax.Array,
+                cfg: TransformerConfig) -> jax.Array:
+    """Cross entropy with the unembedding fused into a sequence-chunked
+    scan: the [B, S, V] logits tensor is never materialized (the big-vocab
+    archs would otherwise spend gigabytes per device on it)."""
+    B, S, d = hidden.shape
+    CS = 512 if (S % 512 == 0 and not cfg.scan_unroll) else S
+    nc = S // CS
+
+    def chunk(total, xl):
+        xc, lc = xl  # [B, CS, d], [B, CS]
+        lg = jnp.einsum("bsd,vd->bsv", xc, params["embed"]
+                        ).astype(jnp.float32)
+        if cfg.final_softcap > 0:
+            lg = jnp.tanh(lg / cfg.final_softcap) * cfg.final_softcap
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return total + (lse - gold).sum(), None
+
+    if nc == 1:
+        total, _ = chunk(jnp.float32(0.0), (hidden, labels))
+    else:
+        xs = (hidden.reshape(B, nc, CS, d).transpose(1, 0, 2, 3),
+              labels.reshape(B, nc, CS).transpose(1, 0, 2))
+        body = jax.checkpoint(chunk) if cfg.remat else chunk
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), xs,
+                                unroll=cfg.scan_unroll)
+    return total / (B * S)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array],
+            cfg: TransformerConfig) -> Tuple[jax.Array, Dict[str, Any]]:
+    hidden, aux = forward(params, batch["tokens"], cfg)
+    ce = _chunked_ce(params, hidden, batch["labels"], cfg)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---- serving ---------------------------------------------------------------
+
+def make_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.act_dtype
+    shape = (cfg.num_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: make_cache(cfg, batch, max_seq))
+
+
+def cache_logical_axes(cfg: TransformerConfig, shard_seq: bool = True):
+    """KV cache [L, B, S, K, hd]: batch over the DP axes, sequence over the
+    model axis (32k-500k caches are the dominant serving footprint; the
+    shape-aware rules drop whichever axis does not divide, e.g. batch=1 at
+    long_500k)."""
+    ax = (None, "batch", "seq_shard" if shard_seq else None, None, None)
+    return {"k": ax, "v": ax}
+
+
+def decode_step(params: Params, cache: Dict[str, jax.Array],
+                tokens: jax.Array, pos: jax.Array,
+                cfg: TransformerConfig):
+    """One decode step.  tokens [B, 1]; pos [] int32 (current length).
+
+    Returns (logits [B, V], new cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(x, xs):
+        lp, win, ck, cv = xs
+        y, new_cache, _ = _block(x, lp, cfg, positions, win,
+                                 kv_cache=(ck, cv), cache_pos=pos)
+        return y, new_cache
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["k"], cache["v"]),
+        unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    logits = logits_fn(params, x[:, 0], cfg)
+    return logits, {"k": nk, "v": nv}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig):
+    """Prefill: full forward, returning last-position logits and the cache.
+
+    tokens [B, S] -> (logits [B, V], cache with k/v [L, B, S, K, hd])."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = jnp.asarray(cfg.layer_windows())
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, xs):
+        lp, win = xs
+        # recompute k/v for cache emission (cheap relative to attention)
+        xn = L.rms_norm(x, lp["ln1"], plus_one=cfg.norm_plus_one)
+        k = jnp.einsum("bsd,dh->bsh", xn, lp["wk"]).reshape(B, S, K, hd)
+        k = L.rope(k, positions, cfg.rope_theta)
+        v = jnp.einsum("bsd,dh->bsh", xn, lp["wv"]).reshape(B, S, K, hd)
+        y, _, _ = _block(x, lp, cfg, positions, win)
+        return y, (k.astype(cfg.act_dtype), v.astype(cfg.act_dtype))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, (params["layers"], windows),
+                               unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"], plus_one=cfg.norm_plus_one)
+    logits = logits_fn(params, x[:, -1], cfg)
+    return logits, {"k": ks, "v": vs}

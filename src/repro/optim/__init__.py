@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup

@@ -1,0 +1,91 @@
+"""AdamW (decoupled weight decay) over arbitrary pytrees.
+
+No optax in this environment — this is the full optimizer substrate:
+bias-corrected moments, decoupled weight decay with a maskable predicate
+(norms/embeddings usually excluded), global-norm clipping, and f32 master
+moments regardless of parameter dtype (bf16-safe training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array  # [] int32
+    mu: dict  # first moments (f32 pytree)
+    nu: dict  # second moments (f32 pytree)
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.asarray(0, jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped grads, pre-clip global norm)."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 decay_mask: Optional[Callable[[str], bool]] = None,
+                 max_grad_norm: float = 1.0):
+    """One AdamW step.  ``lr`` may be a scalar or a schedule value.
+
+    ``decay_mask(path_string) -> bool`` selects which leaves receive weight
+    decay (default: every leaf with ndim >= 2, the usual matrix-only rule).
+    """
+    if max_grad_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        _, gnorm = clip_by_global_norm(grads, 1.0)
+    step = state.step + 1
+    b1t = 1.0 - jnp.power(jnp.float32(b1), step.astype(jnp.float32))
+    b2t = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
+
+    flat_p, treedef = jax.tree.flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mhat = mu / b1t
+        vhat = nu / b2t
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        pstr = jax.tree_util.keystr(path)
+        apply_wd = (decay_mask(pstr) if decay_mask is not None
+                    else p.ndim >= 2)
+        if apply_wd and weight_decay > 0:
+            upd = upd + weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+
+    params2 = jax.tree.unflatten(treedef, new_p)
+    mu2 = jax.tree.unflatten(treedef, new_mu)
+    nu2 = jax.tree.unflatten(treedef, new_nu)
+    return params2, AdamWState(step, mu2, nu2), gnorm

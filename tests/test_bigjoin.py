@@ -1,0 +1,109 @@
+"""BiGJoin (JAX dataflow) vs the serial GJ oracle."""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.bigjoin import (BigJoinConfig, build_indices, run_bigjoin,
+                                seed_tuples_for)
+from repro.core.generic_join import generic_join
+from repro.core.plan import make_plan
+
+from tests.test_generic_join import random_graph
+
+
+def run_query(q, g, cfg=None, **kw):
+    plan = make_plan(q)
+    rels = {Q.EDGE: g.edges}
+    cfg = cfg or BigJoinConfig(batch=256, seed_chunk=128,
+                               out_capacity=1 << 16, **kw)
+    idx = build_indices(plan, rels)
+    res = run_bigjoin(plan, idx, seed_tuples_for(plan, rels), cfg=cfg)
+    ref, ref_cnt = generic_join(q, rels, plan=plan)
+    return res, ref, ref_cnt
+
+
+QUERIES = [Q.triangle(), Q.diamond(), Q.four_clique(), Q.house()]
+
+
+@pytest.mark.parametrize("q", QUERIES, ids=lambda q: q.name)
+def test_bigjoin_matches_oracle(q):
+    g = random_graph(50, 400, 1)
+    res, ref, ref_cnt = run_query(q, g)
+    assert res.count == ref_cnt
+    if ref_cnt:
+        np.testing.assert_array_equal(
+            np.unique(res.tuples, axis=0), np.unique(ref, axis=0))
+
+
+@pytest.mark.parametrize("batch", [16, 64, 1024])
+def test_bigjoin_batch_size_invariance(batch):
+    """Fig 6 property: B' changes memory/rounds, never results."""
+    g = random_graph(40, 350, 2)
+    q = Q.diamond()
+    plan = make_plan(q)
+    rels = {Q.EDGE: g.edges}
+    idx = build_indices(plan, rels)
+    cfg = BigJoinConfig(batch=batch, seed_chunk=64, out_capacity=1 << 16)
+    res = run_bigjoin(plan, idx, seed_tuples_for(plan, rels), cfg=cfg)
+    _, ref_cnt = generic_join(q, rels, plan=plan)
+    assert res.count == ref_cnt
+
+
+def test_bigjoin_skewed_graph():
+    g = random_graph(80, 900, 3, skew=True)
+    res, ref, ref_cnt = run_query(Q.triangle(), g)
+    assert res.count == ref_cnt
+
+
+def test_bigjoin_symmetric_filters():
+    g = random_graph(60, 500, 4).degree_relabel()
+    res, _, ref_cnt = run_query(Q.four_clique(symmetric=True), g)
+    assert res.count == ref_cnt
+
+
+def test_bigjoin_count_mode():
+    g = random_graph(50, 400, 5)
+    q = Q.triangle()
+    plan = make_plan(q)
+    rels = {Q.EDGE: g.edges}
+    idx = build_indices(plan, rels)
+    cfg = BigJoinConfig(batch=128, seed_chunk=128, mode="count")
+    res = run_bigjoin(plan, idx, seed_tuples_for(plan, rels), cfg=cfg)
+    assert res.tuples is None
+    assert res.count == generic_join(q, rels, plan=plan)[1]
+
+
+def test_queue_invariant_and_work_bound():
+    """Lemma 3.1: queued prefixes stay O(B') per level; work O(mn MaxOut)."""
+    from repro.core.bigjoin import build_seed_step, build_step, make_state
+    import jax
+
+    g = random_graph(60, 600, 6, skew=True)
+    q = Q.four_clique()
+    plan = make_plan(q)
+    rels = {Q.EDGE: g.edges}
+    idx = build_indices(plan, rels)
+    cfg = BigJoinConfig(batch=64, seed_chunk=64, mode="count")
+    step = jax.jit(build_step(plan, cfg))
+    seed_step = jax.jit(build_seed_step(plan, cfg))
+    state = make_state(plan, cfg)
+    seed = seed_tuples_for(plan, rels)
+    max_deep = 0
+    for lo in range(0, seed.shape[0], 64):
+        chunk = np.zeros((64, 2), np.int32)
+        n = seed[lo:lo + 64].shape[0]
+        chunk[:n] = seed[lo:lo + 64]
+        state = seed_step(state, idx, chunk,
+                          np.ones(64, np.int32), np.arange(64) < n)
+        while any(int(qu.size) for qu in state.queues):
+            state = step(state, idx)
+            max_deep = max(max_deep, *[int(qu.size)
+                                       for qu in state.queues[1:]])
+    assert not bool(state.overflow)
+    # levels beyond the seed hold at most one step's pushes (<= B')
+    assert max_deep <= cfg.batch
+    bound = Q.agm_bound(q, g.num_edges)
+    m, n = q.num_attrs, q.num_atoms
+    work = int(state.proposals) + int(state.intersections)
+    assert work <= 8 * m * n * max(bound, g.num_edges)
+    assert int(state.out_count) == generic_join(q, rels, plan=plan)[1]
