@@ -1,0 +1,140 @@
+"""Intersect/extension-pipeline microbenchmarks -> BENCH_intersect.json.
+
+Tracks the perf trajectory of the PR's fused extension-step pipeline across
+three measurements (interpret mode off-TPU; numbers are comparable per-host):
+
+  member    — membership queries/sec: pure-jnp ref vs the vectorized
+              two-level Pallas kernel.
+  regions   — a 5-region VersionedIndex probe: per-region jnp reduction vs
+              the single fused multi-region launch, plus the pallas_call
+              counts proving the >= 1 launch reduction per probe.
+  bigjoin   — end-to-end dataflow steps/sec for the triangle query:
+              jnp stage sequence vs the fused extend-step kernel path.
+
+Run via ``python -m benchmarks.run --only intersect`` (or directly).  The
+JSON lands in benchmarks/results/BENCH_intersect.json so successive PRs can
+diff queries/sec and steps/sec machine-readably.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_intersect.json")
+
+
+def _bench_member(rec):
+    from repro.kernels.intersect.ops import member as member_kernel
+    from repro.kernels.intersect.ref import member_ref
+    rng = np.random.default_rng(0)
+    n, B = 1 << 15, 4096
+    k = np.sort(rng.integers(0, 1 << 20, n)).astype(np.int32)
+    v = rng.integers(0, 1 << 10, n).astype(np.int32)
+    kv = np.stack([k.astype(np.int64), v.astype(np.int64)], 1)
+    kv = kv[np.lexsort((kv[:, 1], kv[:, 0]))]
+    k, v = kv[:, 0].astype(np.int32), kv[:, 1].astype(np.int32)
+    qk = rng.integers(0, 1 << 20, B).astype(np.int32)
+    qv = rng.integers(0, 1 << 10, B).astype(np.int32)
+    args = (jnp.asarray(k), jnp.asarray(v), jnp.asarray(np.int32(n)),
+            jnp.asarray(qk), jnp.asarray(qv))
+
+    t_ref, out_ref = timeit(lambda: np.asarray(member_ref(*args)))
+    t_ker, out_ker = timeit(lambda: np.asarray(member_kernel(*args)))
+    parity = bool((out_ref == out_ker).all())
+    rec["member"] = {
+        "index_entries": n, "batch": B,
+        "ref_qps": B / t_ref, "kernel_qps": B / t_ker,
+        "bit_exact": parity,
+    }
+    row("intersect", "member_ref", t_ref, f"{B / t_ref:.0f} q/s")
+    row("intersect", "member_kernel", t_ker,
+        f"{B / t_ker:.0f} q/s parity={parity}")
+    assert parity, "kernel membership diverged from ref.py"
+
+
+def _bench_regions(rec):
+    from repro.core.csr import build_index
+    from repro.core.dataflow_index import VersionedIndex
+    from repro.kernels import count_pallas_calls
+    rng = np.random.default_rng(1)
+
+    def reg(n):
+        return build_index(rng.integers(0, 500, (n, 2)).astype(np.int32),
+                           (0,), 1)
+
+    idx = VersionedIndex((reg(4000), reg(300), reg(150)),
+                         (reg(150), reg(100)))
+    B = 4096
+    qk = jnp.asarray(rng.integers(0, 500, B).astype(np.int32))
+    qv = jnp.asarray(rng.integers(0, 500, B).astype(np.int32))
+
+    t_jnp, m_jnp = timeit(
+        lambda: np.asarray(idx.member(qk, qv, use_kernel=False)))
+    t_fus, m_fus = timeit(
+        lambda: np.asarray(idx.member(qk, qv, use_kernel=True)))
+    launches = count_pallas_calls(
+        lambda a, b: idx.member(a, b, use_kernel=True), qk, qv)
+    R = len(idx.pos) + len(idx.neg)
+    parity = bool((m_jnp == m_fus).all())
+    rec["regions"] = {
+        "num_regions": R, "batch": B,
+        "jnp_qps": B / t_jnp, "fused_qps": B / t_fus,
+        "fused_pallas_calls": launches,
+        "launches_saved_vs_per_region": R - launches,
+        "bit_exact": parity,
+    }
+    row("intersect", "member_5regions_jnp", t_jnp, f"{B / t_jnp:.0f} q/s")
+    row("intersect", "member_5regions_fused", t_fus,
+        f"{B / t_fus:.0f} q/s {launches} launch")
+    assert launches == 1 and R - launches >= 1
+    assert parity
+
+
+def _bench_bigjoin(rec):
+    from repro.core import query as Q
+    from repro.core.bigjoin import (BigJoinConfig, build_indices,
+                                    run_bigjoin, seed_tuples_for)
+    from repro.core.plan import make_plan
+    from repro.data.synthetic import rmat_graph
+    e = rmat_graph(12, 6, seed=5)
+    q = Q.triangle()
+    plan = make_plan(q)
+    rels = {Q.EDGE: e}
+    idx = build_indices(plan, rels)
+    seed = seed_tuples_for(plan, rels)
+    rec["bigjoin"] = {}
+    for name, use_kernel in (("jnp", False), ("kernel", True)):
+        cfg = BigJoinConfig(batch=4096, seed_chunk=4096, mode="count",
+                            use_kernel=use_kernel)
+        t, res = timeit(lambda: run_bigjoin(plan, idx, seed, cfg=cfg),
+                        repeat=3)
+        rec["bigjoin"][name] = {
+            "steps": res.steps, "steps_per_sec": res.steps / t,
+            "proposals_per_sec": res.proposals / t, "count": res.count,
+        }
+        row("intersect", f"bigjoin_steps_{name}", t,
+            f"{res.steps / t:.1f} steps/s")
+    assert rec["bigjoin"]["jnp"]["count"] == \
+        rec["bigjoin"]["kernel"]["count"]
+
+
+def main():
+    rec = {"bench": "intersect", "interpret_mode": True}
+    import jax
+    rec["backend"] = jax.default_backend()
+    rec["interpret_mode"] = jax.default_backend() != "tpu"
+    _bench_member(rec)
+    _bench_regions(rec)
+    _bench_bigjoin(rec)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    row("intersect", "json", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    main()

@@ -63,7 +63,36 @@ def render(path):
               f"| {useful:.2f} | {frac:.3f} |")
 
 
+def render_intersect(path):
+    """Render a BENCH_intersect.json perf-trajectory record as a table."""
+    rec = json.load(open(path))
+    print(f"backend: {rec.get('backend', '?')}  "
+          f"interpret: {rec.get('interpret_mode', '?')}\n")
+    print("| stage | variant | throughput | note |")
+    print("|" + "---|" * 4)
+    m = rec.get("member", {})
+    if m:
+        print(f"| member | ref | {m['ref_qps']:.0f} q/s | "
+              f"n={m['index_entries']} B={m['batch']} |")
+        print(f"| member | kernel | {m['kernel_qps']:.0f} q/s | "
+              f"bit_exact={m['bit_exact']} |")
+    r = rec.get("regions", {})
+    if r:
+        print(f"| regions(R={r['num_regions']}) | jnp | "
+              f"{r['jnp_qps']:.0f} q/s | |")
+        print(f"| regions(R={r['num_regions']}) | fused | "
+              f"{r['fused_qps']:.0f} q/s | "
+              f"{r['fused_pallas_calls']} launch, "
+              f"saved {r['launches_saved_vs_per_region']} |")
+    for name, b in rec.get("bigjoin", {}).items():
+        print(f"| bigjoin | {name} | {b['steps_per_sec']:.1f} steps/s | "
+              f"{b['proposals_per_sec']:.0f} proposals/s |")
+
+
 if __name__ == "__main__":
     for p in sys.argv[1:]:
         print(f"\n### {p}\n")
-        render(p)
+        if "BENCH_intersect" in p:
+            render_intersect(p)
+        else:
+            render(p)

@@ -12,11 +12,13 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4")
+                    help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4,"
+                    "intersect")
     args = ap.parse_args()
 
     from benchmarks import (baseline_compare, batch_size, cost_table,
-                            optimizations, scaling, throughput)
+                            intersect_bench, optimizations, scaling,
+                            throughput)
     table = {
         "fig4": cost_table.main,
         "tab2_3": baseline_compare.main,
@@ -24,6 +26,7 @@ def main() -> None:
         "fig6": batch_size.main,
         "tab5": optimizations.main,
         "tab4": throughput.main,
+        "intersect": intersect_bench.main,  # -> BENCH_intersect.json
     }
     picks = list(table) if args.only == "all" else args.only.split(",")
     print("table,name,us_per_call,derived")

@@ -1,6 +1,11 @@
 """Hillclimb cell #3 (wcoj triangle_static): B' sweep on the production
-mesh.  The join's per-round roofline terms are fixed costs amortized over
-w*B' proposals; throughput = w*B' / max(term).  Run:
+mesh, for BOTH execution paths — the jnp stage sequence and the fused
+Pallas extension-step kernel (``use_kernel``).  The join's per-round
+roofline terms are fixed costs amortized over w*B' proposals; throughput =
+w*B' / max(term).  The sweep records the crossover batch size: the smallest
+B' at which the kernel path's modeled throughput beats the jnp path (small
+batches are launch-overhead bound; large batches amortize the fused
+pipeline's VMEM working set).  Run:
 
     PYTHONPATH=src python benchmarks/wcoj_bprime_sweep.py
 """
@@ -12,33 +17,61 @@ import sys
 
 import numpy as np
 
+SWEEP = (1024, 4096, 16384, 65536)
 
-def main():
+
+def _run_one(bp: int, use_kernel: bool):
     import repro.configs.wcoj as W
+    from repro.configs.base import Cell
+    from repro.configs import registry
     from repro.launch import dryrun as D
 
-    results = []
-    for bp in (1024, 4096, 16384, 65536):
-        W.SHAPES["triangle_static"]["batch"] = bp
-        # rebuild the cell with the new batch
-        from repro.configs.base import Cell
-        cell = Cell("triangle_static", "join",
-                    W._build_cell(W.SHAPES["triangle_static"]))
-        from repro.configs import registry
-        spec = registry.get_arch("wcoj-subgraph")
-        object.__setattr__(spec, "cells",
-                           {**spec.cells, "triangle_static": cell})
-        rec = D.run_cell("wcoj-subgraph", "triangle_static", False,
-                         verbose=False)
-        rf = rec["roofline"]
-        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
-        thru = 512 * bp / bound
-        results.append((bp, rf, thru))
-        print(f"B'={bp:6d}: compute {rf['compute_s']*1e3:.3f}ms "
-              f"mem {rf['memory_s']*1e3:.3f}ms "
-              f"coll {rf['collective_s']*1e3:.3f}ms -> "
-              f"{thru/1e9:.2f}G proposals/s "
-              f"(dominant {rf['dominant']})", flush=True)
+    W.SHAPES["triangle_static"]["batch"] = bp
+    W.SHAPES["triangle_static"]["use_kernel"] = use_kernel
+    cell = Cell("triangle_static", "join",
+                W._build_cell(W.SHAPES["triangle_static"]))
+    spec = registry.get_arch("wcoj-subgraph")
+    object.__setattr__(spec, "cells",
+                       {**spec.cells, "triangle_static": cell})
+    rec = D.run_cell("wcoj-subgraph", "triangle_static", False,
+                     verbose=False)
+    rf = rec["roofline"]
+    bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    return rf, 512 * bp / bound
+
+
+def main():
+    results = {"jnp": [], "kernel": []}
+    for use_kernel in (False, True):
+        path = "kernel" if use_kernel else "jnp"
+        for bp in SWEEP:
+            rf, thru = _run_one(bp, use_kernel)
+            results[path].append(
+                dict(batch=bp, compute_s=rf["compute_s"],
+                     memory_s=rf["memory_s"],
+                     collective_s=rf["collective_s"],
+                     dominant=rf["dominant"], proposals_per_sec=thru))
+            print(f"[{path:6s}] B'={bp:6d}: "
+                  f"compute {rf['compute_s']*1e3:.3f}ms "
+                  f"mem {rf['memory_s']*1e3:.3f}ms "
+                  f"coll {rf['collective_s']*1e3:.3f}ms -> "
+                  f"{thru/1e9:.2f}G proposals/s "
+                  f"(dominant {rf['dominant']})", flush=True)
+
+    # crossover: smallest B' where the kernel path wins
+    crossover = None
+    for j, k in zip(results["jnp"], results["kernel"]):
+        if k["proposals_per_sec"] > j["proposals_per_sec"]:
+            crossover = k["batch"]
+            break
+    results["crossover_batch"] = crossover
+    print(f"kernel-beats-jnp crossover: B'={crossover}", flush=True)
+
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "BENCH_bprime_sweep.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
     return results
 
 

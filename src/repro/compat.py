@@ -1,0 +1,32 @@
+"""Version-tolerant aliases for JAX APIs that moved between releases.
+
+The repo targets the newest stable JAX spelling (``jax.shard_map``,
+``jax.tree.flatten_with_path``) but must run on older runtimes where those
+live under ``jax.experimental.shard_map`` / ``jax.tree_util``.  Importing
+through this module keeps call sites on one spelling and confines the
+feature detection to a single place.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6 spelling
+    _shard_map_impl = jax.shard_map
+    _REP_KW = "check_vma"
+else:  # pragma: no cover - exercised only on old runtimes
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _REP_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg renamed as needed
+    (``check_vma`` in new JAX, ``check_rep`` before the move out of
+    ``jax.experimental``)."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_REP_KW: check_vma})
+
+
+if hasattr(jax.tree, "flatten_with_path"):
+    tree_flatten_with_path = jax.tree.flatten_with_path
+else:  # pragma: no cover
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path

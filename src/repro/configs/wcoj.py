@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchSpec, Cell
 from repro.core import query as Q
 from repro.core.bigjoin import BigJoinConfig
@@ -38,9 +39,11 @@ SHAPES = {
 
 def _abstract_indices(plan, edges: int, w: int, delta: int = 0):
     """SDS stand-ins for hash-partitioned index shards [w, cap]."""
+    from repro.core.csr import round_capacity
     from repro.core.dataflow_index import VersionedIndex
-    cap = int(np.ceil(edges / w * 1.3))
-    dcap = max(int(np.ceil(delta / w * 2.0)), 1)
+    # SEG-aligned like csr.build_index, so the kernel view is a free reshape
+    cap = round_capacity(np.ceil(edges / w * 1.3))
+    dcap = round_capacity(max(int(np.ceil(delta / w * 2.0)), 1))
 
     def sds_region(c):
         from repro.core.csr import IndexData
@@ -77,7 +80,8 @@ def _build_cell(shape: Dict):
             seed_total = shape["delta"]
         B = shape["batch"]
         dcfg = DistConfig(
-            BigJoinConfig(batch=B, mode="count"), w,
+            BigJoinConfig(batch=B, mode="count",
+                          use_kernel=shape.get("use_kernel", True)), w,
             route_capacity=max(4 * B // w, 16), aggregate=True, axis=axis)
         per_worker = build_per_worker(plan, dcfg)
         indices = _abstract_indices(plan, shape["edges"], w,
@@ -90,8 +94,8 @@ def _build_cell(shape: Dict):
                               is_leaf=lambda x: isinstance(
                                   x, jax.ShapeDtypeStruct)),
                  P(axis), P(axis))
-        fn = jax.shard_map(per_worker, mesh=mesh, in_specs=specs,
-                           out_specs=(P(),) * 7, check_vma=False)
+        fn = compat.shard_map(per_worker, mesh=mesh, in_specs=specs,
+                              out_specs=(P(),) * 7, check_vma=False)
         return fn, (indices, seed, seed_n), None, ()
     return build
 

@@ -247,7 +247,8 @@ def _build_piece_branch(plan: Plan, dcfg: DistConfig, li: int):
             qk = _pack_cols(new_prefix, pos, idx.pos[0].key.dtype)
             mem, dele, ok, load = _remote_member(
                 idx, qk, cand, owner_of(qk, w), pvalid, w, cap,
-                dcfg.aggregate, dcfg.axis)
+                dcfg.aggregate, dcfg.axis, dcfg.base.use_kernel,
+                dcfg.base.kernel_interpret)
             recv_load = recv_load + load
             is_min = wmini[r] == bi
             keep = jnp.where(is_min, ~dele, mem)

@@ -35,13 +35,21 @@ Indices = Dict[str, VersionedIndex]
 
 @dataclasses.dataclass(frozen=True)
 class BigJoinConfig:
-    """``batch`` is B' — the per-step proposal budget (§3.1.2)."""
+    """``batch`` is B' — the per-step proposal budget (§3.1.2).
+
+    ``use_kernel`` (default on) routes each level's extension step through
+    the fused Pallas pipeline (kernels/extend) and membership probes through
+    the multi-region intersect kernel; ``kernel_interpret`` overrides the
+    platform gating (None = compiled on TPU, interpret elsewhere).  The
+    jnp path (``use_kernel=False``) remains as oracle and fallback.
+    """
 
     batch: int = 4096
     seed_chunk: int = 4096
     out_capacity: int = 1 << 20
     mode: str = "collect"  # "collect" | "count"
-    use_kernel: bool = False  # route membership through the Pallas kernel
+    use_kernel: bool = True  # fused Pallas extension step + member kernels
+    kernel_interpret: Optional[bool] = None  # None: platform detection
 
     def queue_capacity(self) -> int:
         return 2 * self.batch
@@ -158,20 +166,35 @@ def _scatter_append(dst: jax.Array, size: jax.Array, src: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
-    """Build the pop→count-min→propose→intersect→push branch for level li."""
+    """Build the pop→count-min→propose→intersect→push branch for level li.
+
+    With ``cfg.use_kernel`` the count-min/propose/intersect middle runs as
+    ONE fused ``pallas_call`` (kernels/extend): proposals are born, gathered
+    and membership-filtered in VMEM without HBM round-trips between stages.
+    The jnp stage sequence below is the bit-exact oracle and fallback.
+    """
     lv = plan.levels[li]
     m = plan.query.num_attrs
     B = cfg.batch
     is_last = li == len(plan.levels) - 1
     new_bound = lv.bound_attrs + (lv.ext_attr,)
 
-    def branch(state: BigJoinState, indices: Indices) -> BigJoinState:
-        qu = state.queues[li]
-        W = min(B, qu.prefix.shape[0])
-        wprefix, wk = qu.prefix[:W], qu.k[:W]
-        wweight = qu.weight[:W]
-        valid = jnp.arange(W, dtype=jnp.int32) < qu.size
+    def middle_fused(wprefix, wk, valid, indices):
+        from repro.kernels.extend.ops import fused_extend
+        qks, pos, neg = [], [], []
+        for b in lv.bindings:
+            idx = indices[b.index_id]
+            qks.append(_binding_key(wprefix, lv.bound_attrs, b.key_attrs,
+                                    idx))
+            pos.append(idx.pos)
+            neg.append(idx.neg)
+        cand, r, alive, allowed, consumed, counters = fused_extend(
+            tuple(pos), tuple(neg), tuple(qks), wk, valid, B,
+            interpret=cfg.kernel_interpret)
+        return (cand, r, alive, allowed, consumed,
+                counters[0].astype(jnp.int64), counters[1].astype(jnp.int64))
 
+    def middle_jnp(wprefix, wk, valid, indices):
         # ---- count minimization (one pass per binding, Fig 2 "Count") ----
         starts_b, counts_b, totals = [], [], []
         for b in lv.bindings:
@@ -184,6 +207,7 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
         tot = jnp.stack(totals, -1)  # [W, NB]
         min_i = jnp.argmin(tot, -1).astype(jnp.int32)
         min_c = tot.min(-1)
+        W = wk.shape[0]
 
         # ---- proposal budget allocation (rem-ext resumption) -------------
         remaining = jnp.where(valid, jnp.maximum(min_c - wk, 0), 0)
@@ -206,9 +230,8 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
             v = idx.gather(starts_b[bi][r], counts_b[bi][r], k_off)
             cand = jnp.where(min_i[r] == bi, v, cand)
         new_prefix = jnp.concatenate([wprefix[r], cand[:, None]], axis=1)
-        weight = wweight[r]
         alive = pvalid
-        n_proposed = pvalid.sum()
+        n_proposed = pvalid.sum().astype(jnp.int64)
 
         # ---- intersection (Fig 2 "Intersect") -----------------------------
         n_isect = jnp.asarray(0, jnp.int64)
@@ -219,10 +242,35 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
             is_min = min_i[r] == bi
             ok = jnp.where(
                 is_min,
-                ~idx.deleted(qk, cand, cfg.use_kernel),
-                idx.member(qk, cand, cfg.use_kernel))
+                ~idx.deleted(qk, cand),
+                idx.member(qk, cand))
             n_isect = n_isect + (alive & ~is_min).sum().astype(jnp.int64)
             alive = alive & ok
+        return cand, r, alive, allowed, consumed, n_proposed, n_isect
+
+    def branch(state: BigJoinState, indices: Indices) -> BigJoinState:
+        qu = state.queues[li]
+        W = min(B, qu.prefix.shape[0])
+        wprefix, wk = qu.prefix[:W], qu.k[:W]
+        wweight = qu.weight[:W]
+        valid = jnp.arange(W, dtype=jnp.int32) < qu.size
+
+        use_fused = cfg.use_kernel
+        if use_fused:
+            from repro.kernels.intersect.ops import (default_interpret,
+                                                     fused_fits)
+            regions = [reg for b in lv.bindings
+                       for reg in (indices[b.index_id].pos
+                                   + indices[b.index_id].neg)]
+            # compiled path: drop to the jnp oracle when the level's regions
+            # cannot be VMEM-resident (DESIGN.md §3), rather than failing
+            use_fused = (default_interpret(cfg.kernel_interpret)
+                         or fused_fits(regions, B))
+        middle = middle_fused if use_fused else middle_jnp
+        (cand, r, alive, allowed, consumed, n_proposed,
+         n_isect) = middle(wprefix, wk, valid, indices)
+        new_prefix = jnp.concatenate([wprefix[r], cand[:, None]], axis=1)
+        weight = wweight[r]
         for f in lv.filters:
             lo = new_prefix[:, list(new_bound).index(f.lo)]
             hi = new_prefix[:, list(new_bound).index(f.hi)]
@@ -298,7 +346,8 @@ def build_seed_step(plan: Plan, cfg: BigJoinConfig):
             idx = indices[b.index_id]
             qk = _binding_key(prefixes, bound, b.key_attrs, idx)
             qv = prefixes[:, bound.index(b.ext_attr)]
-            alive = alive & idx.member(qk, qv, cfg.use_kernel)
+            alive = alive & idx.member(qk, qv, cfg.use_kernel,
+                                       cfg.kernel_interpret)
         for f in plan.seed_ineq:
             alive = alive & (prefixes[:, bound.index(f.lo)]
                              < prefixes[:, bound.index(f.hi)])

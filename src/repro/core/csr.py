@@ -28,6 +28,16 @@ import numpy as np
 SENTINEL = np.int64(2**62)
 SENTINEL32 = np.int32(2**31 - 1)
 
+# Canonical segment length of the two-level membership kernels (one VPU lane
+# row); kernels/intersect/intersect.py imports it from here.  Index
+# capacities are rounded up to SEG multiples so the kernels' segment-major
+# [cap/SEG, SEG] view is a free reshape (no pad/concat per probe).
+SEG = 128
+
+
+def round_capacity(cap: int) -> int:
+    return -(-max(int(cap), 1) // SEG) * SEG
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -83,7 +93,7 @@ def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
     kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
     key, val = kv[:, 0], kv[:, 1].astype(np.int32)
     n = key.shape[0]
-    cap = max(int(capacity or n), n, 1)
+    cap = round_capacity(max(int(capacity or n), n, 1))
     # single-column keys fit int32 -> halve index bytes (perf: HBM traffic)
     narrow = len(key_pos) <= 1 and (n == 0 or key.max() < SENTINEL32)
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
@@ -96,9 +106,10 @@ def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
 
 
 def empty_index(capacity: int = 1, narrow: bool = True) -> IndexData:
+    cap = round_capacity(capacity)
     kdt, sent = (jnp.int32, SENTINEL32) if narrow else (jnp.int64, SENTINEL)
-    return IndexData(jnp.full(capacity, sent, kdt),
-                     jnp.zeros(capacity, jnp.int32),
+    return IndexData(jnp.full(cap, sent, kdt),
+                     jnp.zeros(cap, jnp.int32),
                      jnp.asarray(0, jnp.int32))
 
 
@@ -152,17 +163,13 @@ def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
     return lo
 
 
-def index_member(idx: IndexData, qkey: jax.Array, qval: jax.Array,
-                 use_kernel: bool = False) -> jax.Array:
-    """Membership (qkey, qval) in the index, [B] bool.
+def index_member(idx: IndexData, qkey: jax.Array, qval: jax.Array
+                 ) -> jax.Array:
+    """Membership (qkey, qval) in the index, [B] bool — the pure-jnp oracle.
 
-    ``use_kernel`` routes through the Pallas intersect kernel (ops.py); the
-    default pure-jnp path is the oracle.
+    Kernel routing happens one level up: ``VersionedIndex.signed_member``
+    fuses all regions into one Pallas launch; this stays the reference path.
     """
-    if use_kernel:
-        from repro.kernels.intersect.ops import member as member_kernel
-        return member_kernel(idx.key, idx.val, idx.n, qkey,
-                             qval.astype(jnp.int32))
     pos = lex_searchsorted(idx.key, idx.val, idx.n, qkey,
                            qval.astype(jnp.int32))
     pos_c = jnp.clip(pos, 0, idx.capacity - 1)

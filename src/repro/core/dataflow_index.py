@@ -79,20 +79,51 @@ class VersionedIndex:
             off = off - counts[..., r]
         return val
 
-    def member(self, qkey: jax.Array, qval: jax.Array,
-               use_kernel: bool = False) -> jax.Array:
+    @staticmethod
+    def _kernel_ok(interpret, regions) -> bool:
+        from repro.kernels.intersect.ops import default_interpret, fused_fits
+        return default_interpret(interpret) or fused_fits(regions)
+
+    def signed_member(self, qkey: jax.Array, qval: jax.Array,
+                      use_kernel: bool = False,
+                      interpret=None) -> Tuple[jax.Array, jax.Array]:
+        """(membership, deletion) bits in ONE pass over all regions.
+
+        With ``use_kernel`` this is a single fused ``pallas_call`` across
+        every positive and negative region (R launches collapse to 1); the
+        jnp path mirrors the same signed-weight reduction.  A compiled
+        (non-interpret) call whose regions exceed the VMEM budget falls
+        back to the jnp path rather than failing Mosaic compilation.
+        """
+        if use_kernel and self._kernel_ok(interpret, self.pos + self.neg):
+            from repro.kernels.intersect.ops import signed_member
+            wpos, wneg = signed_member(self.pos, self.neg, qkey, qval,
+                                       interpret=interpret)
+            return (wpos - wneg) > 0, wneg > 0
         w = jnp.zeros(qkey.shape, jnp.int32)
+        d = jnp.zeros(qkey.shape, bool)
         for reg in self.pos:
-            w = w + index_member(reg, qkey, qval, use_kernel).astype(jnp.int32)
+            w = w + index_member(reg, qkey, qval).astype(jnp.int32)
         for reg in self.neg:
-            w = w - index_member(reg, qkey, qval, use_kernel).astype(jnp.int32)
-        return w > 0
+            hit = index_member(reg, qkey, qval)
+            w = w - hit.astype(jnp.int32)
+            d = d | hit
+        return w > 0, d
+
+    def member(self, qkey: jax.Array, qval: jax.Array,
+               use_kernel: bool = False, interpret=None) -> jax.Array:
+        return self.signed_member(qkey, qval, use_kernel, interpret)[0]
 
     def deleted(self, qkey: jax.Array, qval: jax.Array,
-                use_kernel: bool = False) -> jax.Array:
+                use_kernel: bool = False, interpret=None) -> jax.Array:
         if not self.neg:
             return jnp.zeros(qkey.shape, bool)
+        if use_kernel and self._kernel_ok(interpret, self.neg):
+            from repro.kernels.intersect.ops import signed_member
+            _, wneg = signed_member((), self.neg, qkey, qval,
+                                    interpret=interpret)
+            return wneg > 0
         d = jnp.zeros(qkey.shape, bool)
         for reg in self.neg:
-            d = d | index_member(reg, qkey, qval, use_kernel)
+            d = d | index_member(reg, qkey, qval)
         return d

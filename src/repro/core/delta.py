@@ -47,9 +47,12 @@ def _pack2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 def _pow2(n: int) -> int:
-    """Index capacities rounded up to powers of two: stable shapes across
-    update batches keep the jitted dataflow's compilation cache warm."""
-    return 1 << max(int(n) - 1, 0).bit_length()
+    """Index capacities rounded up to powers of two (>= one kernel segment):
+    stable shapes across update batches keep the jitted dataflow's
+    compilation cache warm, and SEG-aligned capacities make the kernels'
+    segment-major view a free reshape."""
+    from repro.core.csr import round_capacity
+    return round_capacity(1 << max(int(n) - 1, 0).bit_length())
 
 
 @dataclasses.dataclass

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import csr
 from repro.core.bigjoin import BigJoinConfig
 from repro.core.dataflow_index import VersionedIndex
@@ -213,12 +214,14 @@ def _remote_resolve(idx_local: VersionedIndex, qkey, k, dest, valid, w,
 
 
 def _remote_member(idx_local: VersionedIndex, qkey, qval, dest, valid, w,
-                   cap, aggregate, axis=AXIS, use_kernel=False):
+                   cap, aggregate, axis=AXIS, use_kernel=False,
+                   interpret=None):
     def reply(q, mask):
         qk, qv = q
-        mem = idx_local.member(qk, qv, use_kernel).astype(jnp.int32)
-        dele = idx_local.deleted(qk, qv, use_kernel).astype(jnp.int32)
-        return (mem | (dele << 1),)
+        # one fused pass over every region: membership and deletion bits
+        # come from a single kernel launch (or one jnp reduction)
+        mem, dele = idx_local.signed_member(qk, qv, use_kernel, interpret)
+        return (mem.astype(jnp.int32) | (dele.astype(jnp.int32) << 1),)
 
     pair = (qkey.astype(jnp.int64) << 32) | qval.astype(jnp.int64) if \
         qkey.dtype == jnp.int32 else qkey  # dedup key includes val when safe
@@ -307,7 +310,8 @@ def _build_dist_level(plan: Plan, dcfg: DistConfig, li: int):
             qk = _pack_cols(new_prefix, pos, idx.pos[0].key.dtype)
             mem, dele, ok, load = _remote_member(
                 idx, qk, cand, owner_of(qk, w), pvalid, w, cap,
-                dcfg.aggregate, dcfg.axis)
+                dcfg.aggregate, dcfg.axis, dcfg.base.use_kernel,
+                dcfg.base.kernel_interpret)
             recv_load = recv_load + load
             is_min = min_i[r] == bi
             keep = jnp.where(is_min, ~dele, mem)
@@ -428,7 +432,8 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
             mem, _, ok, _ld = _remote_member(
                 idx, qk, qv, owner_of(qk, w), alive, w,
                 max(cap, seed.shape[0] // max(w // 2, 1) + 1),
-                dcfg.aggregate, dcfg.axis)
+                dcfg.aggregate, dcfg.axis, dcfg.base.use_kernel,
+                dcfg.base.kernel_interpret)
             alive = alive & mem & ok  # seed capacity sized to never drop
         for f in plan.seed_ineq:
             alive = alive & (seed[:, bound.index(f.lo)]
@@ -503,8 +508,8 @@ def build_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
         specs = (jax.tree.map(lambda _: P(ax), indices,
                               is_leaf=lambda x: isinstance(x, jax.Array)),
                  P(ax), P(ax))
-        f = jax.shard_map(per_worker, mesh=mesh, in_specs=specs,
-                          out_specs=out_specs, check_vma=False)
+        f = compat.shard_map(per_worker, mesh=mesh, in_specs=specs,
+                             out_specs=out_specs, check_vma=False)
         return jax.jit(f)(indices, seed, seed_n)
 
     return run

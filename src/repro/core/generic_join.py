@@ -56,10 +56,6 @@ class _NpIndex:
         # membership fast path: packed (key,val) when key fits in 31 bits
         self._packed = ((self.key << 32) | kv[:, 1]
                         if (self.key < 2**31).all() else None)
-        if self._packed is None:
-            self._sets = {}
-            for k, v in zip(self.key, self.val):
-                self._sets.setdefault(int(k), set()).add(int(v))
 
     def ranges(self, qkey: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         s = np.searchsorted(self.key, qkey, "left")
@@ -72,9 +68,35 @@ class _NpIndex:
             pos = np.searchsorted(self._packed, q)
             pos_c = np.minimum(pos, max(len(self._packed) - 1, 0))
             return (len(self._packed) > 0) & (self._packed[pos_c] == q)
-        return np.fromiter(
-            (int(v) in self._sets.get(int(k), ()) for k, v in
-             zip(qkey, qval)), bool, len(qkey))
+        # keys >= 2^31 cannot be packed: vectorized lexicographic binary
+        # search over the sorted (key, val) pairs (np.unique sorted them)
+        return _lex_member_np(self.key, self.val, qkey,
+                              qval.astype(np.int64))
+
+
+def _lex_member_np(key: np.ndarray, val: np.ndarray, qk: np.ndarray,
+                   qv: np.ndarray) -> np.ndarray:
+    """Vectorized lower-bound search of (qk, qv) in lex-sorted (key, val).
+
+    Fixed-depth binary search (the numpy mirror of csr.lex_searchsorted):
+    O(B log n) vector ops instead of per-query Python probes.
+    """
+    n = key.shape[0]
+    if n == 0:
+        return np.zeros(qk.shape[0], bool)
+    lo = np.zeros(qk.shape[0], np.int64)
+    hi = np.full(qk.shape[0], n, np.int64)
+    for _ in range(max(int(np.ceil(np.log2(max(n, 2)))), 1) + 1):
+        mid = (lo + hi) >> 1
+        mc = np.minimum(mid, n - 1)
+        mk = key[mc]
+        mv = val[mc].astype(np.int64)
+        less = (mk < qk) | ((mk == qk) & (mv < qv))
+        sel = lo < hi
+        lo = np.where(less & sel, mid + 1, lo)
+        hi = np.where(~less & sel, mid, hi)
+    pc = np.minimum(lo, n - 1)
+    return (key[pc] == qk) & (val[pc].astype(np.int64) == qv) & (lo < n)
 
 
 def build_np_indices(plan: Plan, relations: Dict[str, np.ndarray]

@@ -73,8 +73,12 @@ class ShardingRules:
                 kept.append(p)
                 used.add(p)
                 prod *= sizes[p]
-            axes.append(tuple(kept) if len(kept) > 1
-                        else (kept[0] if kept else None))
+            if not kept:
+                axes.append(None)
+            elif isinstance(phys, tuple):
+                axes.append(tuple(kept))  # keep the declared tuple form
+            else:
+                axes.append(kept[0])
         return P(*axes)
 
 

@@ -1,3 +1,30 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call eqns in fn's jaxpr, descending into sub-jaxprs
+    (pjit bodies, control-flow branches).  Used by tests and benchmarks to
+    verify kernel-launch fusion (one launch per probe / per level branch)."""
+    import jax
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def walk_jaxpr(jaxpr) -> int:
+        c = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                c += 1
+            c += sum(walk_param(v) for v in eqn.params.values())
+        return c
+
+    def walk_param(v) -> int:
+        if isinstance(v, jax.core.ClosedJaxpr):
+            return walk_jaxpr(v.jaxpr)
+        if isinstance(v, jax.core.Jaxpr):
+            return walk_jaxpr(v)
+        if isinstance(v, (tuple, list)):
+            return sum(walk_param(x) for x in v)
+        return 0
+
+    return walk_jaxpr(closed.jaxpr)

@@ -1,0 +1,3 @@
+"""Fused extension-step kernel: count-min -> propose -> intersect in one
+``pallas_call`` (the BiGJoin per-level hot loop, Fig. 2 of the paper)."""
+from repro.kernels.extend.ops import fused_extend  # noqa: F401

@@ -1,0 +1,218 @@
+"""Pallas TPU kernel: the fused BiGJoin extension step.
+
+One dataflow step of the paper's Fig. 2 pipeline is, per popped prefix
+window W and proposal budget B':
+
+    count-minimization  (|Ext(p)| per binding, argmin)
+    budget allocation   (rem-ext resumption cursors, prefix-sum)
+    ragged expansion    (proposal t -> (prefix row, offset k))
+    candidate gather    (k-th extension of the min binding)
+    intersection        (membership of the candidate in every other binding,
+                         deletion check in the min binding)
+
+The unfused path runs these as ~5·NB separate XLA ops with the B'-sized
+candidate batch round-tripping through HBM between every stage, plus R
+``pallas_call`` launches per membership probe.  This kernel executes the
+whole pipeline in a single ``pallas_call``: proposals are born in VMEM,
+filtered in VMEM, and only the surviving (row, cand, alive) triple is
+written back — the low-memory analogue of HUGE's fused enumeration stages.
+
+Structure is static per (plan level, config): number of bindings, regions
+per binding, array capacities, and the window/budget sizes all specialize
+the kernel at trace time.  All searches are fixed-depth vectorized binary
+searches (depth = ceil(log2 cap) + 1) over VMEM-resident arrays — the exact
+algorithm of ``csr.lex_searchsorted``/``csr.index_range``, so results are
+bit-identical to the unfused jnp path.  VMEM budget math lives in DESIGN.md
+§"Fused extension pipeline".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _depth(n: int) -> int:
+    return max(int(np.ceil(np.log2(max(n, 2)))), 1) + 1
+
+
+def _searchsorted(arr: jax.Array, q: jax.Array, side: str) -> jax.Array:
+    """Vectorized fixed-depth binary search: position of q in sorted arr.
+
+    Matches ``jnp.searchsorted(arr, q, side)`` for nondecreasing ``arr``
+    (sentinel padding included in the search range, as in csr.index_range).
+    """
+    n = arr.shape[0]
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, n, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        m = arr[jnp.clip(mid, 0, n - 1)]
+        go = (m < q) if side == "left" else (m <= q)
+        sel = lo < hi
+        lo = jnp.where(go & sel, mid + 1, lo)
+        hi = jnp.where(~go & sel, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, _depth(n), body, (lo, hi))
+    return lo
+
+
+def _lex_member(key: jax.Array, val: jax.Array, n: jax.Array,
+                qk: jax.Array, qv: jax.Array) -> jax.Array:
+    """int32 [B] membership of (qk, qv) in the sorted (key, val) pairs —
+    the SAME search as the jnp oracle (``csr.lex_searchsorted`` is pure jnp
+    and runs unchanged inside the kernel body), so parity is by construction
+    rather than by a hand-synced copy."""
+    from repro.core.csr import lex_searchsorted
+    cap = key.shape[0]
+    pos = lex_searchsorted(key, val, n, qk, qv)
+    pc = jnp.clip(pos, 0, cap - 1)
+    hit = (key[pc] == qk) & (val[pc] == qv) & (pos < n)
+    return hit.astype(jnp.int32)
+
+
+def make_extend_kernel(num_pos, num_neg, batch: int):
+    """Build the fused kernel for a level with ``len(num_pos)`` bindings;
+    binding b has ``num_pos[b]`` positive / ``num_neg[b]`` negative regions.
+
+    Ref layout (inputs): per binding, per region (positives then negatives):
+    key [cap], val [cap], n [1]; then per binding qk [W]; then wk [W],
+    valid [W].  Outputs: cand [B], row [B], alive [B], allowed [W],
+    consumed [W], counters [2] = (n_proposed, n_intersections).
+    """
+    NB = len(num_pos)
+    B = batch
+
+    def kernel(*refs):
+        # ---- unpack the static ref layout --------------------------------
+        pos_refs, neg_refs = [], []
+        i = 0
+        for b in range(NB):
+            pos_refs.append([refs[i + 3 * r: i + 3 * r + 3]
+                             for r in range(num_pos[b])])
+            i += 3 * num_pos[b]
+            neg_refs.append([refs[i + 3 * r: i + 3 * r + 3]
+                             for r in range(num_neg[b])])
+            i += 3 * num_neg[b]
+        qk_refs = refs[i: i + NB]
+        wk_ref, valid_ref = refs[i + NB], refs[i + NB + 1]
+        (cand_ref, row_ref, alive_ref, allowed_ref, consumed_ref,
+         counters_ref) = refs[i + NB + 2:]
+
+        wk = wk_ref[...]
+        valid = valid_ref[...] > 0
+        W = wk.shape[0]
+
+        # ---- count minimization (Fig 2 "Count") --------------------------
+        starts, counts, totals = [], [], []
+        for b in range(NB):
+            qk = qk_refs[b][...]
+            ss, cc = [], []
+            tot_b = jnp.zeros((W,), jnp.int32)
+            for key_ref, _val_ref, _n_ref in pos_refs[b]:
+                key = key_ref[...]
+                s = _searchsorted(key, qk, "left")
+                e = _searchsorted(key, qk, "right")
+                ss.append(s)
+                cc.append(e - s)
+                tot_b = tot_b + (e - s)
+            starts.append(ss)
+            counts.append(cc)
+            totals.append(tot_b)
+        min_i = jnp.zeros((W,), jnp.int32)
+        min_c = totals[0]
+        for b in range(1, NB):
+            better = totals[b] < min_c  # strict: argmin keeps first
+            min_i = jnp.where(better, jnp.int32(b), min_i)
+            min_c = jnp.minimum(min_c, totals[b])
+
+        # ---- proposal budget allocation (rem-ext resumption) -------------
+        remaining = jnp.where(valid, jnp.maximum(min_c - wk, 0), 0)
+        acum = jnp.cumsum(remaining, dtype=jnp.int32)
+        allowed = jnp.clip(B - (acum - remaining), 0, remaining
+                           ).astype(jnp.int32)
+        consumed = valid & (allowed == remaining)
+        aacum = jnp.cumsum(allowed, dtype=jnp.int32)
+
+        t = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)[:, 0]
+        pvalid = t < aacum[W - 1]
+        row = jnp.clip(_searchsorted(aacum, t, "right"), 0, W - 1)
+        k_off = t - (aacum[row] - allowed[row]) + wk[row]
+
+        # ---- candidate proposal (Fig 2 "Proposal") ------------------------
+        cand = jnp.zeros((B,), jnp.int32)
+        for b in range(NB):
+            off = k_off
+            v = jnp.zeros((B,), jnp.int32)
+            for r, (key_ref, val_ref, _n_ref) in enumerate(pos_refs[b]):
+                cap = key_ref.shape[0]
+                c_r = counts[b][r][row]
+                s_r = starts[b][r][row]
+                in_r = (off >= 0) & (off < c_r)
+                p = jnp.clip(s_r + off, 0, cap - 1)
+                v = jnp.where(in_r, val_ref[...][p], v)
+                off = off - c_r
+            cand = jnp.where(min_i[row] == b, v, cand)
+
+        # ---- intersection (Fig 2 "Intersect"): signed membership ----------
+        alive = pvalid
+        n_isect = jnp.zeros((), jnp.int32)
+        for b in range(NB):
+            qkb = qk_refs[b][...][row]
+            wpos = jnp.zeros((B,), jnp.int32)
+            wneg = jnp.zeros((B,), jnp.int32)
+            for key_ref, val_ref, n_ref in pos_refs[b]:
+                wpos = wpos + _lex_member(key_ref[...], val_ref[...],
+                                          n_ref[0], qkb, cand)
+            for key_ref, val_ref, n_ref in neg_refs[b]:
+                wneg = wneg + _lex_member(key_ref[...], val_ref[...],
+                                          n_ref[0], qkb, cand)
+            is_min = min_i[row] == b
+            ok = jnp.where(is_min, ~(wneg > 0), (wpos - wneg) > 0)
+            n_isect = n_isect + (alive & ~is_min).sum().astype(jnp.int32)
+            alive = alive & ok
+
+        cand_ref[...] = cand
+        row_ref[...] = row
+        alive_ref[...] = alive.astype(jnp.int32)
+        allowed_ref[...] = allowed
+        consumed_ref[...] = consumed.astype(jnp.int32)
+        counters_ref[...] = jnp.stack(
+            [pvalid.sum().astype(jnp.int32), n_isect])
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("structure", "batch",
+                                             "interpret"))
+def _extend_call(operands, qks, wk, valid, structure, batch: int,
+                 interpret: bool = True):
+    """operands: flat tuple of (key, val, n[1]) per region, binding-major
+    with positives before negatives; structure: tuple of (num_pos, num_neg)
+    per binding."""
+    num_pos = tuple(s[0] for s in structure)
+    num_neg = tuple(s[1] for s in structure)
+    W = wk.shape[0]
+    flat = []
+    for key, val, n in operands:
+        flat += [key, val, n]
+    flat += list(qks) + [wk, valid]
+    out_shape = (
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # cand
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # row
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # alive
+        jax.ShapeDtypeStruct((W,), jnp.int32),      # allowed
+        jax.ShapeDtypeStruct((W,), jnp.int32),      # consumed
+        jax.ShapeDtypeStruct((2,), jnp.int32),      # counters
+    )
+    return pl.pallas_call(
+        make_extend_kernel(num_pos, num_neg, batch),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*flat)

@@ -1,0 +1,42 @@
+"""Wrapper for the fused extension-step kernel.
+
+``fused_extend`` takes the popped prefix window's per-binding lookup keys
+plus every region of every binding's versioned index and runs the whole
+count-min -> propose -> intersect pipeline of one BiGJoin level in a single
+``pallas_call`` (see extend.py).  Results are bit-identical to the unfused
+jnp stage sequence in ``bigjoin._level_branch``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.extend.extend import _extend_call
+from repro.kernels.intersect.ops import default_interpret
+
+
+def fused_extend(pos, neg, qks, wk, valid, batch: int, interpret=None):
+    """Run one fused extension step.
+
+    pos/neg: per-binding tuples of sorted-index regions (.key/.val/.n);
+    qks: per-binding packed lookup keys [W]; wk: rem-ext cursors [W];
+    valid: live-row mask [W]; batch: the proposal budget B'.
+
+    Returns (cand [B], row [B], alive [B] bool, allowed [W],
+    consumed [W] bool, counters [2] = (proposed, intersections)).
+    """
+    structure = tuple((len(p), len(n)) for p, n in zip(pos, neg))
+    operands = []
+    qks_cast = []
+    for b, (p_regions, n_regions) in enumerate(zip(pos, neg)):
+        regions = tuple(p_regions) + tuple(n_regions)
+        key_dtype = jnp.result_type(qks[b].dtype,
+                                    *[r.key.dtype for r in regions])
+        for r in regions:
+            operands.append((r.key.astype(key_dtype), r.val,
+                             r.n.reshape(1).astype(jnp.int32)))
+        qks_cast.append(qks[b].astype(key_dtype))
+    cand, row, alive, allowed, consumed, counters = _extend_call(
+        tuple(operands), tuple(qks_cast), wk.astype(jnp.int32),
+        valid.astype(jnp.int32), structure=structure, batch=batch,
+        interpret=default_interpret(interpret))
+    return (cand, row, alive > 0, allowed, consumed > 0, counters)

@@ -37,10 +37,8 @@ def flash_kernel(q_ref, k_ref, v_ref, o_ref, *, seq_k: int, causal: bool,
 
     def body(kb, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.ds(kb * BKV, BKV), slice(None))
-                    ).astype(jnp.float32)  # [BK, Dh]
-        v = pl.load(v_ref, (0, pl.ds(kb * BKV, BKV), slice(None))
-                    ).astype(jnp.float32)
+        k = k_ref[0, pl.ds(kb * BKV, BKV), :].astype(jnp.float32)  # [BK, Dh]
+        v = v_ref[0, pl.ds(kb * BKV, BKV), :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if softcap > 0.0:

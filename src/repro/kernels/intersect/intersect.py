@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched sorted-membership (the Intersect hot spot).
+"""Pallas TPU kernels: batched sorted-membership (the Intersect hot spot).
 
 The innermost operation of the WCOJ dataflow is "does extension e of prefix p
 exist in relation R_i?" — a lookup of (key, val) in a lexicographically
@@ -8,17 +8,36 @@ structure is a two-level sorted search (DESIGN.md §2):
   level 1 (VMEM): a *router* holding every SEG-th (key,val) pair.  A
       fixed-depth vectorized binary search over the router (VMEM gathers —
       cheap on TPU) locates the SEG-aligned segment of each query.
-  level 2 (HBM->VMEM): one dynamic-slice load of the SEG-entry segment per
-      query (the same per-row DMA pattern as TPU embedding lookups), then a
-      128-lane vector compare.
+  level 2 (VMEM): the index is stored segment-major as a [num_segments, SEG]
+      tile, so the router is simply column 0 and each query's segment is one
+      *row gather*.  All BQ segments are fetched as a single [BQ, SEG] tile
+      and reduced with a lane-wise compare — there is no per-query probe
+      loop; the whole query block resolves in O(log S) vector ops plus one
+      gather, instead of BQ serialized dynamic-slices.
 
-SEG = 128 aligns the segment load with the VPU lane width.  The query block
-(BQ per grid step) bounds VMEM: BQ·(8B+4B) queries + SEG·(8B+4B) segment +
-router (capped by ROUTER_MAX entries; beyond that the router itself is
-two-level — not needed below 2^23 index entries per shard).
+Design notes (fused extension pipeline, DESIGN.md §"Fused extension
+pipeline"):
 
-The kernel returns one int32 bit per query.  ref.py is the pure-jnp oracle
-(identical fixed-depth lexicographic search, no tiling).
+  * SEG = 128 aligns the segment row with the VPU lane width, so the level-2
+    compare is exactly one vector op per query row.
+  * The query block (BQ per grid step) bounds VMEM: the working set per grid
+    step is the full segment-major index (cap·12 B), one [BQ, SEG] gathered
+    key tile (BQ·SEG·8 B) + val tile (BQ·SEG·4 B), and the BQ·12 B query
+    columns.  With BQ = 256 the gathered tiles are 384 KiB; the index tile
+    dominates and caps the per-shard index at ~1 M entries per 12 MiB of
+    VMEM.  Larger shards need a second router level (not required below
+    2^23 entries per worker) or an HBM-resident index with per-segment DMA.
+  * the multi-region kernel (``_make_multi_member_kernel``) evaluates *all*
+    positive and negative regions of
+    a :class:`~repro.core.dataflow_index.VersionedIndex` in one
+    ``pallas_call`` and returns the signed hit counts, replacing R separate
+    kernel launches (and R round-trips through HBM for the query batch) with
+    one fused pass — the multi-region fusion of this PR's extension-step
+    pipeline.
+
+The kernels return int32 hit bits/counts per query.  ref.py is the pure-jnp
+oracle (identical fixed-depth lexicographic search, no tiling); parity is
+bit-exact.
 """
 from __future__ import annotations
 
@@ -29,7 +48,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-SEG = 128  # segment length: one VPU lane row per segment fetch
+# segment length (one VPU lane row per segment fetch) — canonical constant
+# lives with the index structure so capacity rounding cannot drift from it
+from repro.core.csr import SEG  # noqa: F401  (re-exported for ops.py)
+
 BQ = 256  # queries per grid step
 
 
@@ -37,25 +59,29 @@ def _router_depth(num_segments: int) -> int:
     return max(int(np.ceil(np.log2(max(num_segments, 2)))), 1) + 1
 
 
-def member_kernel(router_k_ref, router_v_ref, keys_ref, vals_ref, n_ref,
-                  qk_ref, qv_ref, out_ref, *, num_segments: int):
-    """One grid step: BQ queries against the full sorted (keys, vals)."""
-    qk = qk_ref[...]
-    qv = qv_ref[...]
-    n = n_ref[0]
+def _two_level_hits(keys2d: jax.Array, vals2d: jax.Array, n: jax.Array,
+                    qk: jax.Array, qv: jax.Array) -> jax.Array:
+    """Vectorized two-level membership of (qk, qv) in a segment-major index.
 
-    # ---- level 1: vectorized binary search over the VMEM router ----------
-    rk = router_k_ref[...]
-    rv = router_v_ref[...]
+    keys2d/vals2d: [num_segments, SEG] sorted lexicographically row-major
+    with sentinel padding; n: [] live entries; qk/qv: [BQ].  Returns int32
+    [BQ] hit bits.  Column 0 of keys2d/vals2d *is* the router.
+    """
+    num_segments = keys2d.shape[0]
+    rk = keys2d[:, 0]
+    rv = vals2d[:, 0]
+
+    # ---- level 1: vectorized binary search over the implicit router -------
     lo = jnp.zeros(qk.shape, jnp.int32)
     hi = jnp.full(qk.shape, num_segments, jnp.int32)
 
     def body(_, lohi):
         lo, hi = lohi
         mid = (lo + hi) >> 1
-        mk = rk[jnp.clip(mid, 0, num_segments - 1)]
-        mv = rv[jnp.clip(mid, 0, num_segments - 1)]
-        # segment leader strictly less-or-equal than query -> go right
+        mc = jnp.clip(mid, 0, num_segments - 1)
+        mk = rk[mc]
+        mv = rv[mc]
+        # segment leader less-or-equal than query -> go right
         le = (mk < qk) | ((mk == qk) & (mv <= qv))
         sel = lo < hi
         lo = jnp.where(le & sel, mid + 1, lo)
@@ -65,33 +91,36 @@ def member_kernel(router_k_ref, router_v_ref, keys_ref, vals_ref, n_ref,
     lo, _ = jax.lax.fori_loop(0, _router_depth(num_segments), body, (lo, hi))
     seg = jnp.maximum(lo - 1, 0)  # last segment whose leader <= query
 
-    # ---- level 2: per-query segment DMA + 128-lane compare ----------------
-    def probe(i, acc):
-        s = seg[i] * SEG
-        kseg = jax.lax.dynamic_slice(keys_ref[...], (s,), (SEG,))
-        vseg = jax.lax.dynamic_slice(vals_ref[...], (s,), (SEG,))
-        idx = s + jax.lax.iota(jnp.int32, SEG)
-        hit = ((kseg == qk[i]) & (vseg == qv[i]) & (idx < n)).any()
-        return acc.at[i].set(hit.astype(jnp.int32))
+    # ---- level 2: one [BQ, SEG] row gather + lane-wise compare ------------
+    kseg = keys2d[seg]  # [BQ, SEG]
+    vseg = vals2d[seg]
+    col = jax.lax.broadcasted_iota(jnp.int32, kseg.shape, 1)
+    idx = seg[:, None] * SEG + col
+    hit = (kseg == qk[:, None]) & (vseg == qv[:, None]) & (idx < n)
+    return hit.max(axis=1).astype(jnp.int32)
 
-    out_ref[...] = jax.lax.fori_loop(
-        0, qk.shape[0], probe, jnp.zeros((qk.shape[0],), jnp.int32))
+
+def member_kernel(keys_ref, vals_ref, n_ref, qk_ref, qv_ref, out_ref):
+    """One grid step: BQ queries against the full segment-major (keys, vals).
+
+    No per-query probe loop: the segment of every query is located by the
+    shared router search and gathered in one [BQ, SEG] tile.
+    """
+    out_ref[...] = _two_level_hits(keys_ref[...], vals_ref[...], n_ref[0],
+                                   qk_ref[...], qv_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _member_call(router_k, router_v, keys, vals, n, qk, qv,
-                 interpret: bool = True):
+def _member_call(keys2d, vals2d, n, qk, qv, interpret: bool = True):
     B = qk.shape[0]
-    num_segments = router_k.shape[0]
+    num_segments = keys2d.shape[0]
     grid = (B // BQ,)
     return pl.pallas_call(
-        functools.partial(member_kernel, num_segments=num_segments),
+        member_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((num_segments,), lambda i: (0,)),  # router: VMEM
-            pl.BlockSpec((num_segments,), lambda i: (0,)),
-            pl.BlockSpec(keys.shape, lambda i: (0,)),  # full index
-            pl.BlockSpec(vals.shape, lambda i: (0,)),
+            pl.BlockSpec((num_segments, SEG), lambda i: (0, 0)),  # full index
+            pl.BlockSpec((num_segments, SEG), lambda i: (0, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((BQ,), lambda i: (i,)),  # query tile
             pl.BlockSpec((BQ,), lambda i: (i,)),
@@ -99,4 +128,72 @@ def _member_call(router_k, router_v, keys, vals, n, qk, qv,
         out_specs=pl.BlockSpec((BQ,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
         interpret=interpret,
-    )(router_k, router_v, keys, vals, n, qk, qv)
+    )(keys2d, vals2d, n, qk, qv)
+
+
+# ---------------------------------------------------------------------------
+# multi-region membership: every region of a VersionedIndex in one launch
+# ---------------------------------------------------------------------------
+
+def _make_multi_member_kernel(num_pos: int, num_neg: int):
+    """Kernel over ``num_pos`` positive + ``num_neg`` negative regions.
+
+    Ref layout: [keys2d, vals2d, n] per region (positives first), then
+    qk, qv; outputs (wpos, wneg) — int32 hit counts over the positive /
+    negative regions, from which membership is ``wpos - wneg > 0`` and
+    deletion is ``wneg > 0``.
+    """
+    R = num_pos + num_neg
+
+    def kernel(*refs):
+        region_refs = refs[:3 * R]
+        qk_ref, qv_ref = refs[3 * R], refs[3 * R + 1]
+        wpos_ref, wneg_ref = refs[3 * R + 2], refs[3 * R + 3]
+        qk = qk_ref[...]
+        qv = qv_ref[...]
+        wpos = jnp.zeros(qk.shape, jnp.int32)
+        wneg = jnp.zeros(qk.shape, jnp.int32)
+        for r in range(R):
+            keys_ref, vals_ref, n_ref = region_refs[3 * r: 3 * r + 3]
+            hits = _two_level_hits(keys_ref[...], vals_ref[...], n_ref[0],
+                                   qk.astype(keys_ref.dtype), qv)
+            if r < num_pos:
+                wpos = wpos + hits
+            else:
+                wneg = wneg + hits
+        wpos_ref[...] = wpos
+        wneg_ref[...] = wneg
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("num_pos", "interpret"))
+def _multi_member_call(regions, qk, qv, num_pos: int,
+                       interpret: bool = True):
+    """regions: flat tuple of (keys2d [S_r, SEG], vals2d, n [1]) triples,
+    positives first.  Returns (wpos, wneg) int32 [B]."""
+    B = qk.shape[0]
+    grid = (B // BQ,)
+    in_specs = []
+    operands = []
+    for keys2d, vals2d, n in regions:
+        s = keys2d.shape[0]
+        in_specs += [
+            pl.BlockSpec((s, SEG), lambda i: (0, 0)),
+            pl.BlockSpec((s, SEG), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ]
+        operands += [keys2d, vals2d, n]
+    in_specs += [pl.BlockSpec((BQ,), lambda i: (i,)),
+                 pl.BlockSpec((BQ,), lambda i: (i,))]
+    operands += [qk, qv]
+    return pl.pallas_call(
+        _make_multi_member_kernel(num_pos, len(regions) - num_pos),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((BQ,), lambda i: (i,)),
+                   pl.BlockSpec((BQ,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((B,), jnp.int32)),
+        interpret=interpret,
+    )(*operands)

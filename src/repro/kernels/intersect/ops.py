@@ -1,13 +1,17 @@
-"""Jit'd wrapper for the intersect kernel: router construction + padding.
+"""Jit'd wrappers for the intersect kernels: padding, tiling, region fusion.
 
 ``member(keys, vals, n, qk, qv)`` is a drop-in replacement for
 ``ref.member_ref`` (and for ``csr.index_member``'s jnp path): it pads the
-index to a SEG multiple, derives the VMEM router (every SEG-th entry) and
-tiles the query batch over the grid.
+index to a SEG multiple, reshapes it segment-major (every row's first column
+is the VMEM router entry) and tiles the query batch over the grid.
 
-The router derivation is jnp (it is a strided slice, fused by XLA); the
-search itself runs in the Pallas kernel.  On CPU the kernel executes in
-interpret mode; on TPU set ``interpret=False``.
+``signed_member(pos, neg, qk, qv)`` fuses *all* regions of a versioned index
+into one ``pallas_call`` returning (wpos, wneg) hit counts — one launch per
+membership probe regardless of how many LSM regions back the index.
+
+On CPU the kernels execute in interpret mode; on a TPU backend the compiled
+(non-interpret) path is selected automatically (``default_interpret``), and
+callers may force either path with the ``interpret`` argument.
 """
 from __future__ import annotations
 
@@ -17,9 +21,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.intersect.intersect import BQ, SEG, _member_call
+from repro.kernels.intersect.intersect import (BQ, SEG, _member_call,
+                                               _multi_member_call)
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+# VMEM the fused kernels may plan on per core (16 MiB total minus pipeline
+# headroom; DESIGN.md §3).  Compiled paths whose region working set exceeds
+# this fall back to the jnp oracle instead of failing Mosaic compilation.
+FUSED_VMEM_BUDGET = 12 * 2**20
+
+
+def default_interpret(interpret=None) -> bool:
+    """Platform gating: compiled Mosaic on TPU, interpret fallback elsewhere.
+
+    ``interpret=None`` defers to detection; an explicit bool wins."""
+    if interpret is None:
+        return _INTERPRET
+    return bool(interpret)
+
+
+def fused_fits(regions, batch: int = 0) -> bool:
+    """Static check that a fused kernel over ``regions`` (.key/.val arrays,
+    VMEM-resident) plus ~48 B/proposal of pipeline vectors fits the budget.
+
+    Only relevant to the compiled path — interpret mode has no VMEM."""
+    idx_bytes = sum(
+        r.key.shape[0] * (jnp.dtype(r.key.dtype).itemsize + 4)
+        for r in regions)
+    return idx_bytes + 48 * batch <= FUSED_VMEM_BUDGET
 
 
 def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
@@ -29,25 +59,71 @@ def _pad_to(x: jax.Array, size: int, fill) -> jax.Array:
     return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
 
 
-@functools.partial(jax.jit, static_argnames=())
-def member(keys: jax.Array, vals: jax.Array, n: jax.Array,
-           qk: jax.Array, qv: jax.Array) -> jax.Array:
-    """[B] bool membership via the Pallas two-level search kernel."""
-    kmax = jnp.asarray(np.iinfo(keys.dtype.name).max, keys.dtype)
-    vmax = jnp.asarray(np.iinfo(jnp.int32.name if hasattr(jnp.int32, "name")
-                                else "int32").max, jnp.int32)
-    cap = keys.shape[0]
-    padded = ((cap + SEG - 1) // SEG) * SEG
-    keys_p = _pad_to(keys, padded, kmax)
-    vals_p = _pad_to(vals, padded, vmax)
-    router_k = keys_p[::SEG]
-    router_v = vals_p[::SEG]
+def _key_max(dtype) -> int:
+    return np.iinfo(np.dtype(dtype.name)).max
 
+
+def _segment_major(keys: jax.Array, vals: jax.Array):
+    """Pad a sorted (key, val) index to a SEG multiple and reshape to
+    [num_segments, SEG] segment-major tiles (column 0 = router)."""
+    kmax = jnp.asarray(_key_max(keys.dtype), keys.dtype)
+    vmax = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    padded = max(((keys.shape[0] + SEG - 1) // SEG) * SEG, SEG)
+    keys2d = _pad_to(keys, padded, kmax).reshape(-1, SEG)
+    vals2d = _pad_to(vals.astype(jnp.int32), padded, vmax).reshape(-1, SEG)
+    return keys2d, vals2d
+
+
+def _pad_queries(qk: jax.Array, qv: jax.Array, key_dtype):
+    kmax = jnp.asarray(_key_max(jnp.dtype(key_dtype)), key_dtype)
+    vmax = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
     B = qk.shape[0]
-    Bp = ((B + BQ - 1) // BQ) * BQ
-    qk_p = _pad_to(qk.astype(keys.dtype), Bp, kmax)
-    qv_p = _pad_to(qv.astype(jnp.int32), Bp, vmax)
-    bits = _member_call(router_k, router_v, keys_p, vals_p,
-                        n.reshape(1).astype(jnp.int32), qk_p, qv_p,
-                        interpret=_INTERPRET)
-    return bits[:B] > 0
+    Bp = max(((B + BQ - 1) // BQ) * BQ, BQ)
+    return (_pad_to(qk.astype(key_dtype), Bp, kmax),
+            _pad_to(qv.astype(jnp.int32), Bp, vmax))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _member_jit(keys, vals, n, qk, qv, interpret: bool):
+    keys2d, vals2d = _segment_major(keys, vals)
+    qk_p, qv_p = _pad_queries(qk, qv, keys.dtype)
+    bits = _member_call(keys2d, vals2d, n.reshape(1).astype(jnp.int32),
+                        qk_p, qv_p, interpret=interpret)
+    return bits[:qk.shape[0]] > 0
+
+
+def member(keys: jax.Array, vals: jax.Array, n: jax.Array,
+           qk: jax.Array, qv: jax.Array, interpret=None) -> jax.Array:
+    """[B] bool membership via the Pallas two-level search kernel."""
+    return _member_jit(keys, vals, n, qk, qv,
+                       interpret=default_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("num_pos", "interpret"))
+def _signed_member_jit(regions, qk, qv, num_pos: int, interpret: bool):
+    key_dtype = jnp.result_type(*[k.dtype for k, _, _ in regions])
+    prepped = tuple(
+        _segment_major(k.astype(key_dtype), v)
+        + (n.reshape(1).astype(jnp.int32),)
+        for k, v, n in regions)
+    qk_p, qv_p = _pad_queries(qk, qv, key_dtype)
+    wpos, wneg = _multi_member_call(prepped, qk_p, qv_p, num_pos=num_pos,
+                                    interpret=interpret)
+    B = qk.shape[0]
+    return wpos[:B], wneg[:B]
+
+
+def signed_member(pos, neg, qk: jax.Array, qv: jax.Array,
+                  interpret=None):
+    """Fused membership over all regions of a versioned index.
+
+    ``pos``/``neg``: sequences of sorted-index triples (objects with
+    .key/.val/.n, e.g. :class:`repro.core.csr.IndexData`).  One
+    ``pallas_call`` total.  Returns (wpos, wneg) int32 [B]: hit counts over
+    the positive / negative regions."""
+    regions = tuple((r.key, r.val, r.n) for r in tuple(pos) + tuple(neg))
+    if not regions:
+        z = jnp.zeros(qk.shape, jnp.int32)
+        return z, z
+    return _signed_member_jit(regions, qk, qv, num_pos=len(tuple(pos)),
+                              interpret=default_interpret(interpret))

@@ -40,6 +40,14 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+
+def _cost_dict(cost) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on new JAX and a
+    one-element list of dicts on older releases; normalize to a dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
 # per-chip wire-byte factor applied to the op's RESULT bytes (ring
 # algorithms; g = group size): all-reduce moves ~2x the tensor, all-gather
 # receives (g-1)/g ~ 1x of its (already full-size) result, reduce-scatter
@@ -161,7 +169,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     t_lower = 0.0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
 
@@ -176,7 +184,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         pts = []
         for d in (d1, d2):
             c = lower_compile(*cell.probe(mesh, d))
-            ca = c.cost_analysis()
+            ca = _cost_dict(c.cost_analysis())
             pc = parse_collectives(c.as_text())
             pts.append((float(ca.get("flops", 0.0)),
                         float(ca.get("bytes accessed", 0.0)),

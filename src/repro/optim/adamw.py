@@ -63,7 +63,8 @@ def adamw_update(params, grads, state: AdamWState, lr,
     b1t = 1.0 - jnp.power(jnp.float32(b1), step.astype(jnp.float32))
     b2t = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
 
-    flat_p, treedef = jax.tree.flatten_with_path(params)
+    from repro.compat import tree_flatten_with_path
+    flat_p, treedef = tree_flatten_with_path(params)
     flat_g = jax.tree.leaves(grads)
     flat_mu = jax.tree.leaves(state.mu)
     flat_nu = jax.tree.leaves(state.nu)

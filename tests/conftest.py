@@ -1,0 +1,27 @@
+"""Shared pytest setup: marker registration and accelerator gating.
+
+Kernel tests run their Pallas kernels in interpret mode off-TPU, so they are
+*not* skipped on CPU — only tests explicitly marked ``tpu_only`` (compiled
+Mosaic paths, VMEM-budget assertions) are skipped when no TPU is attached.
+"""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end test")
+    config.addinivalue_line(
+        "markers",
+        "tpu_only: requires a real TPU backend (compiled, non-interpret "
+        "Pallas path); interpret-mode coverage still runs off-TPU")
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+    if jax.default_backend() == "tpu":
+        return
+    skip = pytest.mark.skip(
+        reason="needs TPU backend; interpret-mode parity covered elsewhere")
+    for item in items:
+        if "tpu_only" in item.keywords:
+            item.add_marker(skip)

@@ -168,9 +168,11 @@ def test_quantize_roundtrip_and_error_feedback():
 
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     @jax.jit
     def run(g, res):
-        return jax.shard_map(
+        return shard_map(
             lambda g, r: compressed_psum(g, r, "dp"), mesh=mesh,
             in_specs=(P(), P()), out_specs=(P(), P()),
             check_vma=False)(g, res)
