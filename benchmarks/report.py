@@ -89,10 +89,28 @@ def render_intersect(path):
               f"{b['proposals_per_sec']:.0f} proposals/s |")
 
 
+def render_delta_stream(path):
+    """Render a BENCH_delta_stream.json streaming-maintenance record."""
+    rec = json.load(open(path))
+    print("| config | workers | warm epochs/s | warm upd/s | "
+          "warm changes/s | shard entries | exact |")
+    print("|" + "---|" * 7)
+    for name in ("w1", "w4", "local"):
+        r = rec.get(name)
+        if not r:
+            continue
+        print(f"| {r['mode']} | {r['workers']} | {r['warm_epochs_per_s']} "
+              f"| {r['warm_updates_per_s']:.0f} "
+              f"| {r['warm_changes_per_s']:.0f} | {r['shard_entries']} "
+              f"| {r['all_exact']} |")
+
+
 if __name__ == "__main__":
     for p in sys.argv[1:]:
         print(f"\n### {p}\n")
         if "BENCH_intersect" in p:
             render_intersect(p)
+        elif "BENCH_delta_stream" in p:
+            render_delta_stream(p)
         else:
             render(p)

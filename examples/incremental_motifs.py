@@ -5,32 +5,42 @@ This is the paper's deployment scenario (§5.3): load a large graph, then
 only the delta queries, never recomputing from scratch.  Mixed
 insert/delete batches exercise the multi-version LSM index.
 
-    PYTHONPATH=src python examples/incremental_motifs.py
+By default the monitors run on the MESH: every local device is a dataflow
+worker holding one hash-partitioned shard of every index region
+(``DistDeltaBigJoin``).  ``--local`` uses the host-local engine instead —
+same host bookkeeping, no mesh.
+
+    PYTHONPATH=src python examples/incremental_motifs.py          # mesh
+    PYTHONPATH=src python examples/incremental_motifs.py --local  # 1-host
+
+(Off-TPU, run under XLA_FLAGS=--xla_force_host_platform_device_count=4 to
+get a real multi-worker mesh on CPU.)
 """
+import argparse
 import time
 
 import numpy as np
 
 from repro.core import query as Q
-from repro.core.bigjoin import BigJoinConfig
-from repro.core.delta import DeltaBigJoin
 from repro.core.csr import Graph
 from repro.data.synthetic import rmat_graph
 
 
-def main(scale=11, edge_factor=8, batches=6, batch_size=800):
+def make_monitor(name, edges, local, bprime=8192):
+    from repro.core.distributed import make_delta_monitor
+    return make_delta_monitor(Q.PAPER_QUERIES[name](), edges, local=local,
+                              batch=bprime, out_capacity=1 << 22)
+
+
+def main(scale=11, edge_factor=8, batches=6, batch_size=800, local=False):
     g = Graph.from_edges(rmat_graph(scale, edge_factor, seed=7))
     n0 = g.num_edges - batches * batch_size
-    print(f"loading {n0:,} edges; monitoring triangle + diamond under "
-          f"{batches} update batches of {batch_size}")
+    backend = "host-local engine" if local else "mesh-backed engine"
+    print(f"loading {n0:,} edges; monitoring triangle + diamond on the "
+          f"{backend} under {batches} update batches of {batch_size}")
 
-    monitors = {
-        name: DeltaBigJoin(Q.PAPER_QUERIES[name](), g.edges[:n0],
-                           cfg=BigJoinConfig(batch=8192, seed_chunk=8192,
-                                             mode="collect",
-                                             out_capacity=1 << 22))
-        for name in ("triangle", "diamond")
-    }
+    monitors = {name: make_monitor(name, g.edges[:n0], local)
+                for name in ("triangle", "diamond")}
     totals = {name: 0 for name in monitors}
     rng = np.random.default_rng(0)
     live = g.edges[:n0].copy()
@@ -48,7 +58,7 @@ def main(scale=11, edge_factor=8, batches=6, batch_size=800):
         for name, eng in monitors.items():
             t0 = time.time()
             res = eng.apply(batch, weights)
-            dt = time.time() - t0
+            dt = max(time.time() - t0, 1e-9)
             totals[name] += res.count_delta
             changes = 0 if res.weights is None else int(
                 np.abs(res.weights).sum())
@@ -71,4 +81,12 @@ def main(scale=11, edge_factor=8, batches=6, batch_size=800):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=11)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--batch-size", type=int, default=800)
+    ap.add_argument("--local", action="store_true",
+                    help="host-local DeltaBigJoin instead of the mesh")
+    a = ap.parse_args()
+    main(a.scale, a.edge_factor, a.batches, a.batch_size, a.local)

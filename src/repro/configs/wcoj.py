@@ -89,14 +89,16 @@ def _build_cell(shape: Dict):
         S = int(np.ceil(seed_total / w))
         seed = jax.ShapeDtypeStruct((w, S, 2), jnp.int32)
         seed_n = jax.ShapeDtypeStruct((w,), jnp.int32)
+        # signed seed weights: all ones for static joins, ±1 for dR seeds
+        seed_w = jax.ShapeDtypeStruct((w, S), jnp.int32)
 
         specs = (jax.tree.map(lambda _: P(axis), indices,
                               is_leaf=lambda x: isinstance(
                                   x, jax.ShapeDtypeStruct)),
-                 P(axis), P(axis))
+                 P(axis), P(axis), P(axis))
         fn = compat.shard_map(per_worker, mesh=mesh, in_specs=specs,
                               out_specs=(P(),) * 7, check_vma=False)
-        return fn, (indices, seed, seed_n), None, ()
+        return fn, (indices, seed, seed_n, seed_w), None, ()
     return build
 
 

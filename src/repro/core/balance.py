@@ -20,6 +20,13 @@ Received quadruples land in a per-level *piece queue*, drained before any
 new balance round fires (scheduling priority: deeper level first; within a
 level, pieces before prefixes), which bounds the piece queue at one round's
 worth: w · (B'//w + 2).
+
+Delta-BiGJoin rides the same machinery unchanged: the SIGNED seed weights
+(±1 dR rows, threaded through ``build_per_worker``) travel inside each
+piece quadruple, and the multi-version region lookups are ordinary
+``_remote_count``/``_remote_member`` calls against old/new
+``VersionedIndex`` shards — ``DistDeltaBigJoin(dcfg.balance=True)`` is
+differentially checked in tests/test_delta_stream.py.
 """
 from __future__ import annotations
 

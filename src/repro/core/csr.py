@@ -105,6 +105,69 @@ def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
                      jnp.asarray(n, jnp.int32))
 
 
+# Fibonacci-style multiplicative mix shared with the distributed layer:
+# owner_of / shard_of MUST agree so host-built shards answer device routing.
+SHARD_MIX = 0x9E3779B97F4A7C15
+
+
+def shard_of(key: np.ndarray, num_shards: int) -> np.ndarray:
+    """Hash-partition owner of each packed key, [N] int32 in [0, num_shards)."""
+    h = (key.astype(np.uint64) * np.uint64(SHARD_MIX)) >> np.uint64(33)
+    return (h % np.uint64(max(num_shards, 1))).astype(np.int32)
+
+
+def _pow2_capacity(n: int) -> int:
+    """SEG-aligned power-of-two capacity >= n (stable shapes across deltas)."""
+    return round_capacity(1 << max(int(n) - 1, 0).bit_length())
+
+
+def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
+                        ext_pos: int, num_shards: int,
+                        capacity: int | None = None) -> IndexData:
+    """Hash-partition one extension index over ``num_shards`` workers.
+
+    Returns an IndexData whose arrays carry a leading [w] worker axis
+    (key/val: [w, cap]; n: [w]) ready to shard over a mesh axis.  Every
+    (key, val) pair lands on exactly one worker — ``shard_of(key, w)`` —
+    which is the paper's cluster-memory-linearity property (§3.2): the sum
+    of live entries over workers equals the unsharded index size.
+
+    Per-shard capacity is uniform (stacking needs one shape) and rounded to
+    a SEG-aligned power of two of the largest shard, so shapes stay stable
+    across update batches and the jit cache stays warm.  ``capacity`` is a
+    per-shard floor.  Key narrowness (int32 vs int64) is decided globally so
+    every shard row has one dtype and one sentinel.
+    """
+    tuples = np.asarray(tuples)
+    if tuples.ndim != 2:
+        raise ValueError("tuples must be [T, arity]")
+    w = max(int(num_shards), 1)
+    key = pack_key(tuple(tuples[:, p].astype(np.int32) for p in key_pos)) \
+        if key_pos else np.zeros(tuples.shape[0], np.int64)
+    val = tuples[:, ext_pos].astype(np.int32)
+    kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
+    key, val = kv[:, 0], kv[:, 1].astype(np.int32)
+    own = shard_of(key, w)
+    counts = np.bincount(own, minlength=w).astype(np.int64)
+    cmax = int(counts.max()) if counts.size else 0
+    cap = max(_pow2_capacity(cmax), round_capacity(int(capacity or 1)))
+    narrow = len(key_pos) <= 1 and (key.size == 0 or key.max() < SENTINEL32)
+    kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
+    out_k = np.full((w, cap), sent, kdt)
+    out_v = np.zeros((w, cap), np.int32)
+    # kv is lexsorted by (key, val); a stable sort by owner keeps each
+    # shard's rows sorted, which is the IndexData invariant.
+    order = np.argsort(own, kind="stable")
+    sk, sv = key[order].astype(kdt), val[order]
+    offs = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    for i in range(w):
+        lo, hi = offs[i], offs[i + 1]
+        out_k[i, :hi - lo] = sk[lo:hi]
+        out_v[i, :hi - lo] = sv[lo:hi]
+    return IndexData(jnp.asarray(out_k), jnp.asarray(out_v),
+                     jnp.asarray(counts.astype(np.int32)))
+
+
 def empty_index(capacity: int = 1, narrow: bool = True) -> IndexData:
     cap = round_capacity(capacity)
     kdt, sent = (jnp.int32, SENTINEL32) if narrow else (jnp.int64, SENTINEL)

@@ -48,6 +48,23 @@ class VersionedIndex:
     def num_regions(self) -> int:
         return len(self.pos)
 
+    def worker_shard(self, i: int = 0) -> "VersionedIndex":
+        """Select worker ``i``'s slice of a sharded index whose regions carry
+        a leading [w] worker axis (``csr.build_sharded_index``).  Inside
+        ``shard_map`` the per-worker block has w=1, so ``worker_shard(0)``
+        strips the axis; on the host it projects any worker's shard for
+        inspection and parity tests."""
+        def strip(d: IndexData) -> IndexData:
+            return IndexData(d.key[i], d.val[i], d.n[i])
+        return VersionedIndex(tuple(strip(p) for p in self.pos),
+                              tuple(strip(n) for n in self.neg))
+
+    def live_entries(self) -> int:
+        """Total live rows over every region (and every worker shard)."""
+        import numpy as np
+        return int(sum(np.asarray(d.n).sum()
+                       for d in self.pos + self.neg))
+
     # ---- queries (vectorized over probe batch [B]) ------------------------
 
     def ranges(self, qkey: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -50,45 +50,56 @@ def _pow2(n: int) -> int:
     """Index capacities rounded up to powers of two (>= one kernel segment):
     stable shapes across update batches keep the jitted dataflow's
     compilation cache warm, and SEG-aligned capacities make the kernels'
-    segment-major view a free reshape."""
-    from repro.core.csr import round_capacity
-    return round_capacity(1 << max(int(n) - 1, 0).bit_length())
+    segment-major view a free reshape.  Delegates to the same helper the
+    sharded region builds use, so host and shard capacities stay in sync."""
+    from repro.core.csr import _pow2_capacity
+    return _pow2_capacity(n)
 
 
 @dataclasses.dataclass
 class _Regions:
-    """Host-truth + device mirrors of one projection's regions."""
+    """Host-truth + device mirrors of one projection's regions.
+
+    With ``shard_w > 0`` the device mirrors are hash-partitioned over that
+    many mesh workers (``csr.build_sharded_index``): every region array
+    carries a leading [w] worker axis and each (key, val) entry is stored by
+    exactly one worker — the distributed engine's memory-linearity contract.
+    ``shard_w == 0`` keeps the single-host mirrors.
+    """
 
     key_pos: Tuple[int, ...]
     ext_pos: int
     base: np.ndarray  # [Nb, arity] tuples
     cins: np.ndarray
     cdel: np.ndarray
+    shard_w: int = 0
     d_base: IndexData = None
     d_cins: IndexData = None
     d_cdel: IndexData = None
     d_uins: IndexData = None
     d_udel: IndexData = None
 
+    def _build(self, tup: np.ndarray) -> IndexData:
+        rows = tup.reshape(-1, self.arity)
+        if self.shard_w:
+            from repro.core.csr import build_sharded_index
+            per = -(-max(rows.shape[0], 1) // self.shard_w)
+            return build_sharded_index(rows, self.key_pos, self.ext_pos,
+                                       self.shard_w, capacity=_pow2(per))
+        return build_index(rows, self.key_pos, self.ext_pos,
+                           capacity=_pow2(rows.shape[0]))
+
     def refresh(self, which=("base", "cins", "cdel")):
         for name in which:
-            tup = getattr(self, name)
-            setattr(self, "d_" + name,
-                    build_index(tup.reshape(-1, self.arity),
-                                self.key_pos, self.ext_pos,
-                                capacity=_pow2(tup.shape[0])))
+            setattr(self, "d_" + name, self._build(getattr(self, name)))
 
     @property
     def arity(self) -> int:
         return max(max(self.key_pos, default=0), self.ext_pos) + 1
 
     def set_uncommitted(self, uins: np.ndarray, udel: np.ndarray):
-        self.d_uins = build_index(uins.reshape(-1, self.arity),
-                                  self.key_pos, self.ext_pos,
-                                  capacity=_pow2(uins.shape[0]))
-        self.d_udel = build_index(udel.reshape(-1, self.arity),
-                                  self.key_pos, self.ext_pos,
-                                  capacity=_pow2(udel.shape[0]))
+        self.d_uins = self._build(uins)
+        self.d_udel = self._build(udel)
 
     def versioned(self, version: str) -> VersionedIndex:
         if version == "old":
@@ -153,12 +164,23 @@ class DeltaBigJoin:
                         "dynamic non-edge relations: extend _Regions storage")
                 proj = (rel, key_pos, ext_pos)
                 if proj not in self.projections:
-                    empty = edges[:0]
-                    self.projections[proj] = _Regions(
-                        key_pos, ext_pos, edges, empty, empty)
+                    self.projections[proj] = self._new_regions(
+                        key_pos, ext_pos, edges)
         for reg in self.projections.values():
             reg.refresh()
             reg.set_uncommitted(edges[:0], edges[:0])
+
+    def _new_regions(self, key_pos: Tuple[int, ...], ext_pos: int,
+                     edges: np.ndarray) -> _Regions:
+        """Region storage for one projection; the distributed engine
+        overrides this to build worker-sharded device mirrors."""
+        empty = edges[:0]
+        return _Regions(key_pos, ext_pos, edges, empty, empty)
+
+    def _run_plan(self, plan: Plan, indices: Indices, seed: np.ndarray,
+                  weights: np.ndarray) -> JoinResult:
+        """Run one delta query's dataflow; overridden by the mesh engine."""
+        return run_bigjoin(plan, indices, seed, weights, cfg=self.cfg)
 
     # ------------------------------------------------------------------
     def normalize(self, updates: np.ndarray, weights: np.ndarray
@@ -200,6 +222,11 @@ class DeltaBigJoin:
         if weights is None:
             weights = np.ones(updates.shape[0], np.int32)
         ins, dels = self.normalize(updates, weights)
+        if ins.size == 0 and dels.size == 0:
+            # net-zero batch (no-op inserts of live edges, deletes of absent
+            # edges, +/- cancellations): an EXACT no-op — no region rebuilds,
+            # no compaction, no dataflow run (tests/test_delta_stream.py).
+            return DeltaResult(0, None, None, [])
 
         # eager compaction iff a committed delete is being re-inserted
         # (would create a positive/negative region overlap, DESIGN.md §2)
@@ -226,7 +253,7 @@ class DeltaBigJoin:
                 reg = self.projections[(rel, key_pos, ext_pos)]
                 indices[_id] = reg.versioned(version)
             seed = delta_edges[:, list(plan.seed_cols)]
-            res = run_bigjoin(plan, indices, seed, delta_w, cfg=self.cfg)
+            res = self._run_plan(plan, indices, seed, delta_w)
             per_dq.append(res)
             total += res.count
             if res.tuples is not None and res.tuples.size:
@@ -255,16 +282,41 @@ class DeltaBigJoin:
         return DeltaResult(total, out_t, out_w, per_dq)
 
 
+def rows_isin(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row-membership mask of ``a``'s rows in ``b`` (both [N, m] int).
+
+    Packed-row diff: rows are mapped to dense ids by one ``np.unique`` over
+    the concatenation, then compared with ``np.isin`` on the id vectors — no
+    Python set-of-tuples.  O((Na+Nb) log) and fully vectorized; this is the
+    stress suite's hot path (delta_oracle on every update batch).
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return np.zeros(a.shape[0], bool)
+    both = np.concatenate([a, b], axis=0)
+    _, inv = np.unique(both, axis=0, return_inverse=True)
+    inv = inv.reshape(-1)  # numpy>=2.0 may return [N,1]
+    return np.isin(inv[:a.shape[0]], inv[a.shape[0]:])
+
+
 def delta_oracle(query: Query, edges_before: np.ndarray,
                  edges_after: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Ground truth: signed difference of full recomputation."""
+    """Ground truth: signed difference of full recomputation.
+
+    Returns (tuples [N, m] int32, weights [N] ±1) with the added rows first,
+    each block in lexicographic row order (``np.unique`` order — the same
+    order the old set-of-tuples implementation produced via ``sorted``).
+    """
     from repro.core.generic_join import generic_join
     a, _ = generic_join(query, {"edge": edges_before})
     b, _ = generic_join(query, {"edge": edges_after})
-    pa = set(map(tuple, a.tolist()))
-    pb = set(map(tuple, b.tolist()))
-    added = sorted(pb - pa)
-    removed = sorted(pa - pb)
-    t = np.array(added + removed, np.int32).reshape(-1, query.num_attrs)
-    w = np.array([1] * len(added) + [-1] * len(removed), np.int32)
+    m = query.num_attrs
+    a = np.unique(np.asarray(a, np.int32).reshape(-1, m), axis=0)
+    b = np.unique(np.asarray(b, np.int32).reshape(-1, m), axis=0)
+    added = b[~rows_isin(b, a)]
+    removed = a[~rows_isin(a, b)]
+    t = np.concatenate([added, removed]).astype(np.int32).reshape(-1, m)
+    w = np.concatenate([np.ones(added.shape[0], np.int32),
+                        -np.ones(removed.shape[0], np.int32)])
     return t, w

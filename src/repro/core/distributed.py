@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import csr
+from repro.core import delta as _delta
 from repro.core.bigjoin import BigJoinConfig
 from repro.core.dataflow_index import VersionedIndex
 from repro.core.plan import Plan
@@ -48,60 +49,69 @@ AXIS = "workers"
 # hashing / partitioning
 # ---------------------------------------------------------------------------
 
-_MIX = 0x9E3779B97F4A7C15
-
-
 def owner_of_np(key: np.ndarray, w: int) -> np.ndarray:
-    h = (key.astype(np.uint64) * np.uint64(_MIX)) >> np.uint64(33)
-    return (h % np.uint64(w)).astype(np.int32)
+    return csr.shard_of(key, w)
 
 
 def owner_of(key: jax.Array, w: int) -> jax.Array:
-    h = (key.astype(jnp.uint64) * jnp.uint64(_MIX)) >> jnp.uint64(33)
+    h = (key.astype(jnp.uint64) * jnp.uint64(csr.SHARD_MIX)) >> jnp.uint64(33)
     return (h % jnp.uint64(w)).astype(jnp.int32)
 
 
-def _stack_index(datas) -> csr.IndexData:
-    """Stack per-worker IndexData into one [w, cap] pytree (pad w/ sentinel)."""
-    cap = max(d.key.shape[0] for d in datas)
-    ks, vs, ns = [], [], []
-    for d in datas:
-        pad = cap - d.key.shape[0]
-        sent = (csr.SENTINEL32 if d.key.dtype == jnp.int32 else csr.SENTINEL)
-        ks.append(np.pad(np.asarray(d.key), (0, pad), constant_values=sent))
-        vs.append(np.pad(np.asarray(d.val), (0, pad)))
-        ns.append(np.asarray(d.n))
-    return csr.IndexData(jnp.asarray(np.stack(ks)), jnp.asarray(np.stack(vs)),
-                         jnp.asarray(np.stack(ns)))
+# region-name subsets backing each logical version (delta.py / §4.3):
+# pos regions contribute extensions, neg regions subtract membership.
+VERSION_REGIONS = {
+    "static": (("base",), ()),
+    "old": (("base", "cins"), ("cdel",)),
+    "new": (("base", "cins", "uins"), ("cdel", "udel")),
+}
 
 
 def partition_indices(plan: Plan, relations: Dict[str, np.ndarray],
-                      w: int) -> Dict[str, VersionedIndex]:
-    """Hash-partition every static index over ``w`` workers.
+                      w: int, region_tuples: Optional[Dict] = None
+                      ) -> Dict[str, VersionedIndex]:
+    """Hash-partition every index the plan needs over ``w`` workers.
 
-    Returns indices whose arrays carry a leading [w] axis (to be sharded over
-    the worker mesh axis).
+    Static versions partition ``relations[rel]`` directly.  Delta versions
+    ("old"/"new") partition each multi-version REGION of the projection:
+    ``region_tuples[(rel, key_pos, ext_pos)]`` must map region names
+    (base/cins/cdel/uins/udel) to host tuple arrays — exactly the host truth
+    a :class:`repro.core.delta._Regions` maintains.  Every region entry is
+    owned by exactly one worker per projection, so cluster memory stays
+    O(IN + delta): sharding never replicates, it only splits.
+
+    Returns indices whose arrays carry a leading [w] axis (to be sharded
+    over the worker mesh axis).
     """
     out: Dict[str, VersionedIndex] = {}
     for index_id, rel, key_pos, ext_pos, version in plan.index_ids():
-        if version != "static":
-            raise NotImplementedError("distributed delta: partition regions")
-        tuples = np.asarray(relations[rel])
-        cols = tuple(tuples[:, p].astype(np.int32) for p in key_pos)
-        key = csr.pack_key(cols)
-        own = owner_of_np(key, w)
-        parts = [csr.build_index(tuples[own == k], key_pos, ext_pos)
-                 for k in range(w)]
-        out[index_id] = VersionedIndex((_stack_index(parts),), ())
+        if version == "static":
+            base = csr.build_sharded_index(np.asarray(relations[rel]),
+                                           key_pos, ext_pos, w)
+            out[index_id] = VersionedIndex((base,), ())
+            continue
+        if region_tuples is None:
+            raise ValueError(
+                f"plan index {index_id} reads version {version!r}: pass "
+                "region_tuples with base/cins/cdel/uins/udel host arrays "
+                "(or drive it through DistDeltaBigJoin)")
+        regions = region_tuples[(rel, key_pos, ext_pos)]
+        pos_names, neg_names = VERSION_REGIONS[version]
+        arity = max(max(key_pos, default=0), ext_pos) + 1
+
+        def shard(name):
+            rows = np.asarray(regions[name]).reshape(-1, arity)
+            return csr.build_sharded_index(rows, key_pos, ext_pos, w)
+
+        out[index_id] = VersionedIndex(
+            tuple(shard(nm) for nm in pos_names),
+            tuple(shard(nm) for nm in neg_names))
     return out
 
 
 def _local(idx: VersionedIndex) -> VersionedIndex:
     """Strip the leading worker axis inside shard_map."""
-    def strip(d: csr.IndexData) -> csr.IndexData:
-        return csr.IndexData(d.key[0], d.val[0], d.n[0])
-    return VersionedIndex(tuple(strip(p) for p in idx.pos),
-                          tuple(strip(nn) for nn in idx.neg))
+    return idx.worker_shard(0)
 
 
 # ---------------------------------------------------------------------------
@@ -408,17 +418,19 @@ def build_dist_step(plan: Plan, dcfg: DistConfig):
 # ---------------------------------------------------------------------------
 
 def build_per_worker(plan: Plan, dcfg: DistConfig):
-    """The SPMD body: fn(indices, seed [1,S,2], seed_n [1]) run under
-    shard_map.  Exposed separately so the multi-pod dry-run can lower it on
-    arbitrary meshes (launch/dryrun.py)."""
+    """The SPMD body: fn(indices, seed [1,S,2], seed_n [1], seed_w [1,S])
+    run under shard_map.  ``seed_w`` carries signed seed weights (+1/-1), so
+    the same program serves static joins (all ones) and Delta-BiGJoin's
+    signed dR seeds.  Exposed separately so the multi-pod dry-run can lower
+    it on arbitrary meshes (launch/dryrun.py)."""
     from repro.core.bigjoin import make_state
     from repro.core.bigjoin import _scatter_append, _binding_key
     step = build_dist_step(plan, dcfg)
     w, cap = dcfg.num_workers, dcfg.route_capacity
     collect = dcfg.base.mode == "collect"
 
-    def per_worker(indices, seed, seed_n):
-        seed, seed_n = seed[0], seed_n[0]
+    def per_worker(indices, seed, seed_n, seed_w):
+        seed, seed_n, seed_w = seed[0], seed_n[0], seed_w[0]
         local = {k: _local(v) for k, v in indices.items()}
         state = make_state(plan, dcfg.base, seed_capacity=seed.shape[0])
 
@@ -443,7 +455,7 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
         nk, _, _ = _scatter_append(
             q0.k, q0.size, jnp.zeros(seed.shape[0], jnp.int32), alive)
         nw, _, _ = _scatter_append(
-            q0.weight, q0.size, jnp.ones(seed.shape[0], jnp.int32), alive)
+            q0.weight, q0.size, seed_w.astype(jnp.int32), alive)
         from repro.core.bigjoin import LevelQueue
         queues = list(state.queues)
         queues[0] = LevelQueue(npfx, nk, nw, q0.size + n_new)
@@ -492,25 +504,35 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
 
 
 def build_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
-    """Returns jitted fn(indices, seed [w,S,2], seed_n [w]) ->
+    """Returns jitted fn(indices, seed [w,S,2], seed_n [w], seed_w [w,S]) ->
     (count, proposals, intersections, steps, overflow, max_load, sum_load
-     [, out_buf, out_weight, out_n])."""
+     [, out_buf, out_weight, out_n]).
+
+    The shard_map'd callable is built ONCE and reused: jax.jit caches on
+    callable identity, so repeated epochs with stable shapes (the delta
+    engine's pow2-padded regions and seeds) hit the compile cache instead of
+    re-lowering every update batch.
+    """
     per_worker = build_per_worker(plan, dcfg)
     collect = dcfg.base.mode == "collect"
     ax = dcfg.axis
     out_specs = (P(), P(), P(), P(), P(), P(), P())
     if collect:
         out_specs = out_specs + (P(ax), P(ax), P(ax))
+    cache = {}
 
-    # in_specs must mirror the indices pytree: build per call (structure is
-    # stable per plan, so jit caching still applies)
-    def run(indices, seed, seed_n):
-        specs = (jax.tree.map(lambda _: P(ax), indices,
-                              is_leaf=lambda x: isinstance(x, jax.Array)),
-                 P(ax), P(ax))
-        f = compat.shard_map(per_worker, mesh=mesh, in_specs=specs,
-                             out_specs=out_specs, check_vma=False)
-        return jax.jit(f)(indices, seed, seed_n)
+    # in_specs must mirror the indices pytree: build on first call per
+    # structure (stable per plan, so the jitted wrapper is reused)
+    def run(indices, seed, seed_n, seed_w):
+        treedef = jax.tree.structure(indices)
+        if treedef not in cache:
+            specs = (jax.tree.unflatten(
+                treedef, [P(ax)] * treedef.num_leaves),
+                P(ax), P(ax), P(ax))
+            f = compat.shard_map(per_worker, mesh=mesh, in_specs=specs,
+                                 out_specs=out_specs, check_vma=False)
+            cache[treedef] = jax.jit(f)
+        return cache[treedef](indices, seed, seed_n, seed_w)
 
     return run
 
@@ -548,7 +570,8 @@ def distributed_join(plan: Plan, relations: Dict[str, np.ndarray],
     seed_n = np.full(w, per, np.int32)
     seed_n[-1] = per - pad.shape[0]
     run = build_distributed_program(plan, cfg, mesh)
-    out = run(indices, jnp.asarray(chunks), jnp.asarray(seed_n))
+    out = run(indices, jnp.asarray(chunks), jnp.asarray(seed_n),
+              jnp.ones((w, per), jnp.int32))
     if bool(out[4]):
         raise RuntimeError("distributed join overflow (raise capacities)")
     res = DistJoinResult(int(out[0]), int(out[1]), int(out[2]), int(out[3]),
@@ -559,3 +582,124 @@ def distributed_join(plan: Plan, relations: Dict[str, np.ndarray],
         res.tuples = np.concatenate([bufs[i, :ns[i]] for i in range(w)])
         res.weights = np.concatenate([wts[i, :ns[i]] for i in range(w)])
     return res
+
+
+# ---------------------------------------------------------------------------
+# Distributed Delta-BiGJoin (§4): streaming maintenance on the mesh
+# ---------------------------------------------------------------------------
+
+def default_delta_config(w: int, batch: int = 1024,
+                         mode: str = "collect",
+                         out_capacity: int = 1 << 18,
+                         balance: bool = False,
+                         use_kernel: bool = True,
+                         axis=AXIS) -> DistConfig:
+    """A DistConfig sized for delta workloads: generous route capacity (the
+    deferral backpressure still guarantees correctness if exceeded) and the
+    PR-1 fused-kernel default inherited by the delta path."""
+    base = BigJoinConfig(batch=batch, seed_chunk=batch, mode=mode,
+                         out_capacity=out_capacity, use_kernel=use_kernel)
+    return DistConfig(base, w, route_capacity=max(4 * batch // w, 64),
+                      balance=balance, axis=axis)
+
+
+def make_delta_monitor(query, initial_edges, local: bool = False,
+                       batch: int = 2048, out_capacity: int = 1 << 20,
+                       balance: bool = False, mesh: Optional[Mesh] = None):
+    """The one engine-selection switch shared by drivers and examples:
+    host-local :class:`~repro.core.delta.DeltaBigJoin` or the mesh-backed
+    :class:`DistDeltaBigJoin`, with matching B'/output budgets."""
+    if local:
+        cfg = BigJoinConfig(batch=batch, seed_chunk=batch, mode="collect",
+                            out_capacity=out_capacity)
+        return _delta.DeltaBigJoin(query, initial_edges, cfg=cfg)
+    w = (jax.device_count() if mesh is None else
+         int(np.prod([mesh.shape[a] for a in mesh.axis_names])))
+    return DistDeltaBigJoin(
+        query, initial_edges, mesh=mesh,
+        dcfg=default_delta_config(w, batch=batch,
+                                  out_capacity=out_capacity,
+                                  balance=balance))
+
+
+class DistDeltaBigJoin(_delta.DeltaBigJoin):
+    """Delta-BiGJoin where every region shard lives on a mesh worker.
+
+    Inherits the host-truth bookkeeping of :class:`repro.core.delta.
+    DeltaBigJoin` (normalize / commit / compaction semantics are identical —
+    asserted by the differential stress suite) and overrides only the device
+    side:
+
+    - every ``_Regions`` multi-version projection is hash-partitioned by
+      packed key over the mesh workers (``csr.build_sharded_index``), so
+      each region entry has exactly one owner and cluster memory is
+      O(IN + delta) — the paper's memory-linearity carried over to the
+      maintained setting;
+    - each delta query dAQ_i seeds its SIGNED dR batch round-robin across
+      workers and runs the request/response dataflow of §3.4
+      (``build_dist_step`` / ``build_balanced_step`` under ``balance``),
+      with counts and outputs psum-merged;
+    - the per-plan shard_map program is built once and jit-cached; pow2
+      region/seed padding keeps its shapes stable across epochs, so
+      steady-state monitoring never re-lowers.
+    """
+
+    def __init__(self, query, initial_edges, mesh: Optional[Mesh] = None,
+                 dcfg: Optional[DistConfig] = None,
+                 compact_ratio: float = 0.5):
+        if mesh is None:
+            mesh = Mesh(np.array(jax.devices()), (AXIS,))
+        self.mesh = mesh
+        self.w = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        if dcfg is None:
+            dcfg = default_delta_config(self.w)
+        axes = dcfg.axis if isinstance(dcfg.axis, tuple) else (dcfg.axis,)
+        if dcfg.num_workers != self.w or set(axes) != set(mesh.axis_names):
+            raise ValueError(
+                "dcfg does not match the mesh: "
+                f"{dcfg.num_workers} workers on axes {axes} vs mesh "
+                f"{dict(mesh.shape)}")
+        self.dcfg = dcfg
+        self._programs: Dict[int, object] = {}
+        super().__init__(query, initial_edges, cfg=dcfg.base,
+                         compact_ratio=compact_ratio)
+
+    def _new_regions(self, key_pos, ext_pos, edges):
+        empty = edges[:0]
+        return _delta._Regions(key_pos, ext_pos, edges, empty, empty,
+                               shard_w=self.w)
+
+    def _run_plan(self, plan, indices, seed, weights):
+        w = self.w
+        pi = self.plans.index(plan)
+        if pi not in self._programs:
+            self._programs[pi] = build_distributed_program(
+                plan, self.dcfg, self.mesh)
+        seed = np.asarray(seed, np.int32).reshape(-1, 2)
+        weights = np.asarray(weights, np.int32)
+        # round-robin deal, padded to a stable pow2 per-worker chunk
+        per = -(-seed.shape[0] // w)
+        S = _delta._pow2(per)
+        chunks = np.zeros((w, S, 2), np.int32)
+        wchunks = np.zeros((w, S), np.int32)
+        seed_n = np.zeros(w, np.int32)
+        for k in range(w):
+            rows = seed[k::w]
+            chunks[k, :rows.shape[0]] = rows
+            wchunks[k, :rows.shape[0]] = weights[k::w]
+            seed_n[k] = rows.shape[0]
+        out = self._programs[pi](
+            indices, jnp.asarray(chunks), jnp.asarray(seed_n),
+            jnp.asarray(wchunks))
+        if bool(out[4]):
+            raise RuntimeError(
+                "distributed delta overflow (raise batch/out_capacity)")
+        tuples = wts = None
+        if self.dcfg.base.mode == "collect":
+            bufs, ws, ns = (np.asarray(out[7]), np.asarray(out[8]),
+                            np.asarray(out[9]))
+            tuples = np.concatenate([bufs[i, :ns[i]] for i in range(w)])
+            wts = np.concatenate([ws[i, :ns[i]] for i in range(w)])
+        from repro.core.bigjoin import JoinResult
+        return JoinResult(int(out[0]), tuples, wts, int(out[1]),
+                          int(out[2]), int(out[3]))

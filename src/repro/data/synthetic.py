@@ -80,6 +80,57 @@ class TokenStream:
             step += 1
 
 
+@dataclasses.dataclass
+class EdgeUpdateStream:
+    """Mixed insert/delete edge-update batches for streaming graph monitors.
+
+    Deterministic pure function of (seed, shard, step, live): any worker can
+    re-derive any epoch's batch after a restart (same contract as
+    :class:`TokenStream`).  Batches are intentionally DIRTY — duplicates,
+    self-loops, inserts of already-live edges and deletes of absent edges —
+    because the engine's ``normalize`` must net them out; ``insert_frac``
+    of each batch are candidate inserts, the rest deletes drawn from the
+    caller's live set (plus a sprinkle of absent-edge deletes that must be
+    no-ops).  Insert endpoints are zipf-skewed: hot vertices keep the
+    Balance machinery honest under maintenance, not just static loads.
+    """
+
+    num_vertices: int
+    batch_size: int
+    insert_frac: float = 0.75
+    skew: float = 0.0  # 0 = uniform endpoints; >1 = zipf exponent
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+
+    def batch_at(self, step: int, live: np.ndarray | None = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed * 9_999_991 + step) * self.num_shards + self.shard)
+        nv = self.num_vertices
+        n_ins = int(round(self.batch_size * self.insert_frac))
+        n_del = self.batch_size - n_ins
+        if self.skew > 1.0:
+            u = (rng.zipf(self.skew, n_ins) % nv).astype(np.int32)
+            v = rng.integers(0, nv, n_ins).astype(np.int32)
+            ins = np.stack([u, v], 1)
+        else:
+            ins = rng.integers(0, nv, (n_ins, 2)).astype(np.int32)
+        parts = [ins]
+        n_live = 0
+        if n_del and live is not None and np.asarray(live).size:
+            live = np.asarray(live, np.int32).reshape(-1, 2)
+            n_live = max(n_del - n_del // 4, 1)
+            parts.append(live[rng.integers(0, live.shape[0], n_live)])
+        if n_del - n_live > 0:  # absent-edge deletes: must normalize away
+            parts.append(rng.integers(0, nv, (n_del - n_live, 2)
+                                      ).astype(np.int32))
+        upd = np.concatenate(parts, axis=0)
+        w = np.concatenate([np.ones(n_ins, np.int32),
+                            -np.ones(upd.shape[0] - n_ins, np.int32)])
+        return upd, w
+
+
 def recsys_events(num_users: int, num_items: int, batch: int, step: int,
                   table_sizes: Tuple[int, ...], multi_hot: int = 8,
                   seed: int = 0):

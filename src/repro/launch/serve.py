@@ -1,8 +1,24 @@
-"""Serving driver: batched decode with a KV cache.
+"""Serving drivers.
 
-``python -m repro.launch.serve --arch gemma2-2b --batch 4 --steps 32``
-runs prefill + autoregressive decode on the smoke config and reports
-per-step latency; ``--full`` builds the assigned config (accelerators).
+Two serving modes share this entry point:
+
+**LM decode** (the original path): batched prefill + autoregressive decode
+with a KV cache::
+
+    python -m repro.launch.serve --arch gemma2-2b --batch 4 --steps 32
+
+**Streaming subgraph monitoring** (the paper's deployment, §5.3): load a
+graph, then run the distributed Delta-BiGJoin epoch loop
+``normalize -> dAQ_1..dAQ_n -> commit`` on the local device mesh as edge
+updates stream in::
+
+    python -m repro.launch.serve --stream --query triangle --scale 10 \
+        --epochs 12 --batch-size 512
+
+Every epoch applies one mixed insert/delete batch from
+``data.synthetic.EdgeUpdateStream`` through ``DistDeltaBigJoin`` (all local
+devices are mesh workers; ``--local`` falls back to the host engine) and
+reports per-epoch latency and update/output-change throughput.
 """
 from __future__ import annotations
 
@@ -14,16 +30,62 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def serve_stream(args):
+    from repro.core import query as Q
+    from repro.core.csr import Graph
+    from repro.core.distributed import make_delta_monitor
+    from repro.data.synthetic import EdgeUpdateStream, rmat_graph
 
+    g = Graph.from_edges(rmat_graph(args.scale, args.edge_factor,
+                                    seed=args.seed))
+    q = Q.PAPER_QUERIES[args.query]()
+    eng = make_delta_monitor(q, g.edges, local=args.local,
+                             batch=args.bprime,
+                             out_capacity=args.out_capacity,
+                             balance=args.balance)
+    mode = "host-local" if args.local else (
+        f"{jax.device_count()}-worker mesh"
+        + (" (balanced)" if args.balance else ""))
+    stream = EdgeUpdateStream(g.num_vertices, args.batch_size,
+                              insert_frac=args.insert_frac,
+                              skew=args.stream_skew, seed=args.seed + 1)
+    print(f"monitoring {args.query} over {g.num_edges:,} edges on {mode}; "
+          f"{args.epochs} epochs x {args.batch_size} updates")
+
+    total = 0
+    times = []
+    for step in range(args.epochs):
+        upd, wts = stream.batch_at(step, live=eng.edges)
+        t0 = time.time()
+        res = eng.apply(upd, wts)
+        dt = max(time.time() - t0, 1e-9)  # no-op epochs can be ~0s
+        times.append(dt)
+        total += res.count_delta
+        changes = 0 if res.weights is None else int(
+            np.abs(res.weights).sum())
+        print(f"  epoch {step}: {res.count_delta:+,} net "
+              f"({changes:,} changes) in {dt*1e3:.0f} ms — "
+              f"{upd.shape[0]/dt:,.0f} upd/s, {changes/dt:,.0f} changes/s")
+    warm = times[2:] or times
+    print(f"steady state: {np.median(warm)*1e3:.0f} ms/epoch, "
+          f"{args.batch_size/np.median(warm):,.0f} upd/s; "
+          f"net instance change {total:+,}")
+
+    if args.verify:
+        from repro.core.generic_join import generic_join
+        ref = generic_join(q, {Q.EDGE: eng.edges},
+                           enumerate_results=False)[1]
+        ref0 = generic_join(q, {Q.EDGE: g.edges},
+                            enumerate_results=False)[1]
+        if total != ref - ref0:  # not assert: must survive python -O
+            raise RuntimeError(
+                f"maintained total {total} != recompute diff {ref - ref0}")
+        print(f"verified: maintained total == recompute diff "
+              f"({ref:,} instances now) ✓")
+    return total
+
+
+def serve_lm(args):
     from repro.configs import get_arch
     from repro.models import transformer as T
 
@@ -70,6 +132,48 @@ def main(argv=None):
           f"aggregate; sample: {toks[0][:16].tolist()}")
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     return toks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="LM arch to serve (decode mode)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # streaming subgraph monitor mode
+    ap.add_argument("--stream", action="store_true",
+                    help="serve a streaming subgraph monitor instead of an "
+                    "LM (distributed Delta-BiGJoin epoch loop)")
+    ap.add_argument("--query", default="triangle",
+                    help="paper query to monitor (stream mode)")
+    ap.add_argument("--scale", type=int, default=10,
+                    help="rmat scale of the base graph (stream mode)")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=512,
+                    help="updates per epoch (stream mode)")
+    ap.add_argument("--insert-frac", type=float, default=0.75)
+    ap.add_argument("--stream-skew", type=float, default=0.0,
+                    help="zipf exponent for insert endpoints (0 = uniform)")
+    ap.add_argument("--bprime", type=int, default=2048,
+                    help="B' per-worker proposal budget (stream mode)")
+    ap.add_argument("--out-capacity", type=int, default=1 << 20)
+    ap.add_argument("--balance", action="store_true",
+                    help="BiGJoin-S Balance operator (stream mode)")
+    ap.add_argument("--local", action="store_true",
+                    help="host-local DeltaBigJoin baseline (stream mode)")
+    ap.add_argument("--verify", action="store_true",
+                    help="check the maintained total against full "
+                    "recomputation at the end (stream mode)")
+    args = ap.parse_args(argv)
+
+    if args.stream:
+        return serve_stream(args)
+    if not args.arch:
+        ap.error("--arch is required unless --stream is given")
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

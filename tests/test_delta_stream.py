@@ -1,0 +1,396 @@
+"""Differential stress suite: streaming Delta-BiGJoin vs full-recompute
+oracle, host-local AND mesh-distributed, under adversarial update sequences
+(mixed insert/delete weights, duplicate edges, self-loops, inserts of live
+edges, deletes of absent edges, re-insert-after-committed-delete, net-zero
+batches).  Everything is checked as bit-exact SIGNED tuple sets, not counts.
+
+Multi-worker in-process cases need virtual host devices; CI runs this file
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so w in
+{1, 2, 4} all execute.  Locally (1 device) the w > 1 cases are covered by
+the slow subprocess tests at the bottom (repro.core._delta_dist_check).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.bigjoin import BigJoinConfig
+from repro.core.delta import DeltaBigJoin, delta_oracle, rows_isin
+
+from tests.test_delta import canon
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # container image may lack hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def settings(**_kw):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in so strategy expressions still evaluate
+        integers = staticmethod(lambda *a, **k: None)
+
+    def given(*_a, **_k):
+        def deco(f):
+            def stub():
+                pytest.skip("hypothesis not installed")
+            stub.__name__ = f.__name__
+            return stub
+        return deco
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CFG = BigJoinConfig(batch=128, seed_chunk=128, out_capacity=1 << 15)
+
+
+def _device_count():
+    import jax
+    return jax.device_count()
+
+
+def _mesh(w):
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.distributed import AXIS
+    return Mesh(np.array(jax.devices()[:w]), (AXIS,))
+
+
+def _dist_engine(q, edges, w, batch=128, balance=False):
+    from repro.core.distributed import (DistDeltaBigJoin,
+                                        default_delta_config)
+    dcfg = default_delta_config(w, batch=batch, out_capacity=1 << 15,
+                                balance=balance)
+    return DistDeltaBigJoin(q, edges, mesh=_mesh(w), dcfg=dcfg)
+
+
+# ---------------------------------------------------------------------------
+# adversarial update-sequence generator + independent host state model
+# ---------------------------------------------------------------------------
+
+def _pack(rows):
+    rows = np.asarray(rows, np.int64).reshape(-1, 2)
+    return (rows[:, 0] << 32) | rows[:, 1]
+
+
+def _unpack(packed):
+    return np.stack([(packed >> 32).astype(np.int32),
+                     (packed & 0xFFFFFFFF).astype(np.int32)], 1)
+
+
+def apply_net(live, upd, w):
+    """Reference semantics of one update batch on the live edge set:
+    self-loops dropped, per-edge net weight, net>0 inserts if absent,
+    net<0 deletes if present — everything else is a no-op."""
+    upd = np.asarray(upd, np.int64).reshape(-1, 2)
+    w = np.asarray(w, np.int64)
+    keep = upd[:, 0] != upd[:, 1]
+    upd, w = upd[keep], w[keep]
+    pk = (upd[:, 0] << 32) | upd[:, 1]
+    uniq, inv = np.unique(pk, return_inverse=True)
+    net = np.zeros(uniq.shape[0], np.int64)
+    np.add.at(net, inv.reshape(-1), w)
+    lk = _pack(live) if np.asarray(live).size else np.zeros(0, np.int64)
+    exists = np.isin(uniq, lk)
+    add = uniq[(net > 0) & ~exists]
+    rem = uniq[(net < 0) & exists]
+    new = np.concatenate([lk[~np.isin(lk, rem)], add])
+    new.sort()
+    return _unpack(new)
+
+
+def random_batch(rng, nv, live, size):
+    """One dirty batch: inserts (self-loops/dups/live collisions included),
+    deletes of live and absent edges, contradictory duplicate rows, and an
+    occasional all-noise batch that must net to zero."""
+    flavor = rng.integers(0, 5)
+    if flavor == 0 and live.shape[0]:  # pure-noise: nets to an exact no-op
+        rows = live[rng.integers(0, live.shape[0], max(size // 2, 1))]
+        dup = np.concatenate([rows, rows])  # +1 then -1 on the same edges
+        w = np.concatenate([np.ones(rows.shape[0], np.int32),
+                            -np.ones(rows.shape[0], np.int32)])
+        loops = np.stack([np.arange(2, dtype=np.int32)] * 2, 1)
+        return (np.concatenate([dup, loops]),
+                np.concatenate([w, np.ones(2, np.int32)]))
+    n_ins = int(rng.integers(0, size + 1))
+    n_del = int(rng.integers(0, size // 2 + 1))
+    ins = rng.integers(0, nv, (n_ins, 2)).astype(np.int32)  # dups/self-loops
+    parts, wparts = [ins], [np.ones(n_ins, np.int32)]
+    if n_del:
+        n_live = min(n_del, live.shape[0])
+        if n_live:
+            parts.append(live[rng.choice(live.shape[0], n_live,
+                                         replace=False)])
+            wparts.append(-np.ones(n_live, np.int32))
+        parts.append(rng.integers(0, nv, (n_del - n_live + 1, 2)
+                                  ).astype(np.int32))  # absent deletes
+        wparts.append(-np.ones(n_del - n_live + 1, np.int32))
+    if flavor == 2 and n_ins:  # duplicate some insert rows (weight piles)
+        k = rng.integers(0, n_ins)
+        parts.append(ins[k:k + 1].repeat(3, 0))
+        wparts.append(np.ones(3, np.int32))
+    upd = np.concatenate(parts, axis=0)
+    w = np.concatenate(wparts)
+    return upd, w
+
+
+def run_stream(q, engine, rng, nv, n_batches, size):
+    """Drive ``engine`` with adversarial batches; assert every epoch's
+    signed output tuples match delta_oracle on the before/after edge sets
+    and that the engine's live set tracks the reference model."""
+    cur = engine.edges.copy()
+    for step in range(n_batches):
+        upd, w = random_batch(rng, nv, cur, size)
+        res = engine.apply(upd, w)
+        after = apply_net(cur, upd, w)
+        np.testing.assert_array_equal(engine.edges, after)
+        ot, ow = delta_oracle(q, cur, after)
+        assert canon(res.tuples, res.weights) == canon(ot, ow), \
+            f"epoch {step}: signed tuple mismatch"
+        assert res.count_delta == int(ow.sum()) if ow.size else \
+            res.count_delta == 0
+        cur = after
+
+
+def _start_edges(nv, ne, seed):
+    rng = np.random.default_rng(seed)
+    u, v = rng.integers(0, nv, ne), rng.integers(0, nv, ne)
+    keep = u != v
+    return np.unique(np.stack([u[keep], v[keep]], 1).astype(np.int32),
+                     axis=0)
+
+
+# ---------------------------------------------------------------------------
+# host-local engine differential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [Q.triangle(), Q.diamond(), Q.four_clique()],
+                         ids=lambda q: q.name)
+def test_local_stream_differential(q):
+    nv, size = 16, 14
+    edges = _start_edges(nv, 90, 11)
+    engine = DeltaBigJoin(q, edges, cfg=CFG)
+    run_stream(q, engine, np.random.default_rng(12), nv,
+               n_batches=8, size=size)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_local_stream_differential_hypothesis(seed):
+    q = Q.triangle()
+    rng = np.random.default_rng(seed)
+    nv = int(rng.integers(6, 20))
+    edges = _start_edges(nv, int(rng.integers(10, 80)), seed)
+    engine = DeltaBigJoin(q, edges, cfg=CFG,
+                          compact_ratio=float(rng.choice([0.01, 0.5, 50.0])))
+    run_stream(q, engine, rng, nv, n_batches=4, size=10)
+
+
+# ---------------------------------------------------------------------------
+# distributed engine differential (w gated on available devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", [1, 2, 4])
+@pytest.mark.parametrize("q", [Q.triangle(), Q.diamond()],
+                         ids=lambda q: q.name)
+def test_dist_stream_differential(q, w):
+    if _device_count() < w:
+        pytest.skip(f"needs {w} devices (CI runs with 4 virtual devices)")
+    nv, size = 16, 12
+    edges = _start_edges(nv, 90, 21)
+    engine = _dist_engine(q, edges, w)
+    run_stream(q, engine, np.random.default_rng(22), nv,
+               n_batches=6, size=size)
+
+
+@pytest.mark.parametrize("w", [2])
+def test_dist_stream_differential_balance(w):
+    """BiGJoin-S balance mode under maintenance: same bit-exact contract."""
+    if _device_count() < w:
+        pytest.skip(f"needs {w} devices (CI runs with 4 virtual devices)")
+    q = Q.triangle()
+    nv = 16
+    edges = _start_edges(nv, 100, 31)
+    engine = _dist_engine(q, edges, w, balance=True)
+    run_stream(q, engine, np.random.default_rng(32), nv,
+               n_batches=6, size=12)
+
+
+def test_dist_matches_local_bit_exact():
+    """Local and 1-worker mesh engines agree epoch-by-epoch (same host
+    bookkeeping, different dataflow), including work-independent count."""
+    q = Q.diamond()
+    nv = 14
+    edges = _start_edges(nv, 80, 41)
+    loc = DeltaBigJoin(q, edges, cfg=CFG)
+    dist = _dist_engine(q, edges, 1)
+    rng = np.random.default_rng(42)
+    cur = edges.copy()
+    for _ in range(5):
+        upd, w = random_batch(rng, nv, cur, 12)
+        a = loc.apply(upd, w)
+        b = dist.apply(upd, w)
+        assert canon(a.tuples, a.weights) == canon(b.tuples, b.weights)
+        assert a.count_delta == b.count_delta
+        np.testing.assert_array_equal(loc.edges, dist.edges)
+        cur = loc.edges.copy()
+
+
+# ---------------------------------------------------------------------------
+# subprocess multi-worker differentials (run even with 1 local device)
+# ---------------------------------------------------------------------------
+
+def run_check(*args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core._delta_dist_check", *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_subprocess_w4_triangle_20_batches():
+    r = run_check("--workers", "4", "--query", "triangle", "--nv", "30",
+                  "--ne", "250", "--batches", "20", "--batch-size", "24")
+    assert r["all_exact"] and r["workers"] == 4 and r["batches"] == 20
+
+
+@pytest.mark.slow
+def test_subprocess_w2_diamond_20_batches():
+    r = run_check("--workers", "2", "--query", "diamond", "--nv", "24",
+                  "--ne", "160", "--batches", "20", "--batch-size", "16")
+    assert r["all_exact"]
+
+
+@pytest.mark.slow
+def test_subprocess_w4_four_clique_20_batches():
+    r = run_check("--workers", "4", "--query", "4-clique", "--nv", "18",
+                  "--ne", "110", "--batches", "20", "--batch-size", "12")
+    assert r["all_exact"]
+
+
+# ---------------------------------------------------------------------------
+# normalize edge-case semantics (regression tests for the no-op contract)
+# ---------------------------------------------------------------------------
+
+def test_net_negative_on_non_live_edge_is_noop():
+    q = Q.triangle()
+    edges = _start_edges(12, 50, 5)
+    engine = DeltaBigJoin(q, edges, cfg=CFG)
+    absent = np.array([[900, 901], [7, 7], [901, 900]], np.int32)
+    before = engine.edges.copy()
+    res = engine.apply(absent, -np.ones(3, np.int32))
+    assert res.count_delta == 0 and res.tuples is None
+    np.testing.assert_array_equal(engine.edges, before)
+    ins, dels = engine.normalize(absent, -np.ones(3, np.int32))
+    assert ins.size == 0 and dels.size == 0
+
+
+def test_net_zero_batch_is_exact_noop():
+    """+1/-1 cancellations, live-edge inserts, absent deletes and self-loops
+    netting to zero must not touch the engine at all: no region rebuilds,
+    no compaction, no dataflow run."""
+    q = Q.triangle()
+    edges = _start_edges(12, 60, 6)
+    engine = DeltaBigJoin(q, edges, cfg=CFG, compact_ratio=0.0)  # eager
+    live = engine.edges
+    upd = np.concatenate([live[:4], live[:4], live[5:8],
+                          np.array([[3, 3]], np.int32),
+                          np.array([[800, 801]], np.int32)])
+    w = np.concatenate([np.ones(4, np.int32), -np.ones(4, np.int32),
+                        np.ones(3, np.int32),  # live inserts: no-op
+                        np.ones(1, np.int32),  # self-loop
+                        -np.ones(1, np.int32)])  # absent delete
+    regions_before = {
+        proj: (reg.d_base, reg.d_cins, reg.d_cdel)
+        for proj, reg in engine.projections.items()}
+    res = engine.apply(upd, w)
+    assert res.count_delta == 0 and res.tuples is None and res.per_dq == []
+    for proj, reg in engine.projections.items():
+        # identical OBJECTS: nothing was rebuilt, not merely equal values
+        assert (reg.d_base, reg.d_cins, reg.d_cdel) is not None
+        assert regions_before[proj][0] is reg.d_base
+        assert regions_before[proj][1] is reg.d_cins
+        assert regions_before[proj][2] is reg.d_cdel
+
+
+def test_duplicate_rows_pile_net_weights():
+    q = Q.triangle()
+    edges = _start_edges(12, 50, 7)
+    engine = DeltaBigJoin(q, edges, cfg=CFG)
+    absent = np.array([[1, 9]], np.int32)
+    if rows_isin(absent, engine.edges)[0]:
+        engine.apply(absent, -np.ones(1, np.int32))
+    before = engine.edges.copy()
+    # +3 then -2 on the same new edge nets to a single insert
+    upd = absent.repeat(5, 0)
+    w = np.array([1, 1, 1, -1, -1], np.int32)
+    engine.apply(upd, w)
+    assert rows_isin(absent, engine.edges)[0]
+    after_expected = apply_net(before, upd, w)
+    np.testing.assert_array_equal(engine.edges, after_expected)
+
+
+def test_reinsert_after_committed_delete_stream():
+    """delete -> commit -> re-insert across separate batches (the eager
+    compaction guard) under the differential check."""
+    q = Q.triangle()
+    edges = _start_edges(14, 70, 8)
+    engine = DeltaBigJoin(q, edges, cfg=CFG, compact_ratio=1e9)  # never
+    victim = edges[:6]
+    cur = engine.edges.copy()
+    for upd, w in ((victim, -np.ones(6, np.int32)),
+                   (victim, np.ones(6, np.int32)),
+                   (victim, -np.ones(6, np.int32))):
+        res = engine.apply(upd, w)
+        after = apply_net(cur, upd, w)
+        ot, ow = delta_oracle(q, cur, after)
+        assert canon(res.tuples, res.weights) == canon(ot, ow)
+        cur = after
+
+
+# ---------------------------------------------------------------------------
+# vectorized oracle internals
+# ---------------------------------------------------------------------------
+
+def test_rows_isin_matches_set_semantics():
+    rng = np.random.default_rng(0)
+    for m in (2, 3, 4):
+        a = rng.integers(0, 6, (40, m)).astype(np.int32)
+        b = rng.integers(0, 6, (25, m)).astype(np.int32)
+        want = np.array([tuple(r) in set(map(tuple, b.tolist()))
+                         for r in a.tolist()])
+        np.testing.assert_array_equal(rows_isin(a, b), want)
+    assert rows_isin(np.zeros((0, 3), np.int32),
+                     np.zeros((4, 3), np.int32)).shape == (0,)
+    assert not rows_isin(np.ones((2, 3), np.int32),
+                         np.zeros((0, 3), np.int32)).any()
+
+
+def test_delta_oracle_matches_set_reference():
+    """The packed-row np.isin oracle reproduces the old set-of-tuples diff
+    exactly (content AND ordering contract: added block then removed block,
+    each lexicographically sorted)."""
+    from repro.core.generic_join import generic_join
+    rng = np.random.default_rng(3)
+    q = Q.diamond()
+    before = _start_edges(13, 70, 30)
+    after = apply_net(before, rng.integers(0, 13, (30, 2)),
+                      rng.choice([1, -1], 30).astype(np.int32))
+    t, w = delta_oracle(q, before, after)
+    a, _ = generic_join(q, {"edge": before})
+    b, _ = generic_join(q, {"edge": after})
+    pa = set(map(tuple, a.tolist()))
+    pb = set(map(tuple, b.tolist()))
+    added = sorted(pb - pa)
+    removed = sorted(pa - pb)
+    ref_t = np.array(added + removed, np.int32).reshape(-1, q.num_attrs)
+    ref_w = np.array([1] * len(added) + [-1] * len(removed), np.int32)
+    np.testing.assert_array_equal(t, ref_t)
+    np.testing.assert_array_equal(w, ref_w)
