@@ -24,8 +24,7 @@ def main(scale=11, edge_factor=8):
     rels = {Q.EDGE: g.edges}
     for qname in ("triangle", "4-clique", "diamond"):
         sym = qname in ("triangle", "4-clique")
-        q = Q.PAPER_QUERIES[qname](symmetric=True) if sym \
-            else Q.PAPER_QUERIES[qname]()
+        q = Q.query_by_name(qname, symmetric=sym)
         plan = make_plan(q)
 
         t0 = time.time()

@@ -105,6 +105,21 @@ def render_delta_stream(path):
               f"| {r['all_exact']} |")
 
 
+def render_multi_query(path):
+    """Render a BENCH_multi_query.json shared-session record."""
+    rec = json.load(open(path))
+    print(f"{rec['epochs']} epochs x {rec['batch_size']} updates, "
+          f"B'={rec['bprime']}\n")
+    print("| N queries | shared epochs/s | independent epochs/s | speedup "
+          "| commits (shared/indep) | exact |")
+    print("|" + "---|" * 6)
+    for n, r in sorted(rec.get("configs", {}).items()):
+        print(f"| {n} | {r['shared_warm_epochs_per_s']} "
+              f"| {r['independent_warm_epochs_per_s']} | {r['speedup']}x "
+              f"| {r['shared_commits']} / {r['independent_commits']} "
+              f"| {r['exact']} |")
+
+
 if __name__ == "__main__":
     for p in sys.argv[1:]:
         print(f"\n### {p}\n")
@@ -112,5 +127,7 @@ if __name__ == "__main__":
             render_intersect(p)
         elif "BENCH_delta_stream" in p:
             render_delta_stream(p)
+        elif "BENCH_multi_query" in p:
+            render_multi_query(p)
         else:
             render(p)

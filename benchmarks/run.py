@@ -13,12 +13,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4,"
-                    "intersect,delta_stream")
+                    "intersect,delta_stream,multi_query")
     args = ap.parse_args()
 
     from benchmarks import (baseline_compare, batch_size, cost_table,
-                            delta_stream, intersect_bench, optimizations,
-                            scaling, throughput)
+                            delta_stream, intersect_bench, multi_query,
+                            optimizations, scaling, throughput)
     table = {
         "fig4": cost_table.main,
         "tab2_3": baseline_compare.main,
@@ -28,6 +28,7 @@ def main() -> None:
         "tab4": throughput.main,
         "intersect": intersect_bench.main,  # -> BENCH_intersect.json
         "delta_stream": delta_stream.main,  # -> BENCH_delta_stream.json
+        "multi_query": multi_query.main,  # -> BENCH_multi_query.json
     }
     picks = list(table) if args.only == "all" else args.only.split(",")
     print("table,name,us_per_call,derived")

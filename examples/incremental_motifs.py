@@ -1,14 +1,16 @@
-"""End-to-end serving driver: continuous subgraph-query monitoring.
+"""End-to-end serving driver: continuous MULTI-query subgraph monitoring.
 
-This is the paper's deployment scenario (§5.3): load a large graph, then
-*monitor* motif counts as edge updates stream in — Delta-BiGJoin evaluates
-only the delta queries, never recomputing from scratch.  Mixed
-insert/delete batches exercise the multi-version LSM index.
+The paper's deployment scenario (§5.3) through the facade: one
+:class:`repro.api.GraphSession` owns the graph; triangle and diamond
+register as standing queries against it.  Every update epoch the session
+runs ONE normalize, evaluates BOTH queries' delta pipelines off the same
+shared multi-version index regions, and performs ONE commit — Delta-BiGJoin
+evaluates only the delta queries, never recomputing from scratch, and the
+queries do not pay per-query index copies or commits.
 
-By default the monitors run on the MESH: every local device is a dataflow
-worker holding one hash-partitioned shard of every index region
-(``DistDeltaBigJoin``).  ``--local`` uses the host-local engine instead —
-same host bookkeeping, no mesh.
+By default the session runs on the MESH: every local device is a dataflow
+worker holding one hash-partitioned shard of every index region.
+``--local`` keeps the session on the host — same bookkeeping, no mesh.
 
     PYTHONPATH=src python examples/incremental_motifs.py          # mesh
     PYTHONPATH=src python examples/incremental_motifs.py --local  # 1-host
@@ -21,63 +23,59 @@ import time
 
 import numpy as np
 
-from repro.core import query as Q
-from repro.core.csr import Graph
+from repro.api import GraphSession, oracle_count
 from repro.data.synthetic import rmat_graph
 
 
-def make_monitor(name, edges, local, bprime=8192):
-    from repro.core.distributed import make_delta_monitor
-    return make_delta_monitor(Q.PAPER_QUERIES[name](), edges, local=local,
-                              batch=bprime, out_capacity=1 << 22)
-
-
 def main(scale=11, edge_factor=8, batches=6, batch_size=800, local=False):
-    g = Graph.from_edges(rmat_graph(scale, edge_factor, seed=7))
-    n0 = g.num_edges - batches * batch_size
-    backend = "host-local engine" if local else "mesh-backed engine"
-    print(f"loading {n0:,} edges; monitoring triangle + diamond on the "
-          f"{backend} under {batches} update batches of {batch_size}")
+    edges = rmat_graph(scale, edge_factor, seed=7)
+    n0 = edges.shape[0] - batches * batch_size
+    session = GraphSession(edges[:n0], local=local,
+                           update_batch=batch_size + batch_size // 8)
+    names = ("triangle", "diamond")
+    handles = [session.register(n) for n in names]
+    backend = "host-local session" if session.local else \
+        f"{session.w}-worker mesh session"
+    print(f"loading {session.num_edges:,} edges; monitoring "
+          f"{' + '.join(names)} on ONE {backend} under {batches} update "
+          f"batches of {batch_size} (single commit per epoch)")
 
-    monitors = {name: make_monitor(name, g.edges[:n0], local)
-                for name in ("triangle", "diamond")}
-    totals = {name: 0 for name in monitors}
     rng = np.random.default_rng(0)
-    live = g.edges[:n0].copy()
-
+    start = session.edges.copy()
     for i in range(batches):
         lo = n0 + i * batch_size
-        ins = g.edges[lo:lo + batch_size]
+        ins = edges[lo:lo + batch_size]
         # delete a few random live edges too (mixed workload)
+        live = session.edges
         dels = live[rng.choice(live.shape[0], size=batch_size // 8,
                                replace=False)]
         batch = np.concatenate([ins, dels])
         weights = np.concatenate([
             np.ones(len(ins), np.int32), -np.ones(len(dels), np.int32)])
+        t0 = time.time()
+        res = session.update(batch, weights)
+        dt = max(time.time() - t0, 1e-9)
         line = [f"batch {i}:"]
-        for name, eng in monitors.items():
-            t0 = time.time()
-            res = eng.apply(batch, weights)
-            dt = max(time.time() - t0, 1e-9)
-            totals[name] += res.count_delta
-            changes = 0 if res.weights is None else int(
-                np.abs(res.weights).sum())
-            line.append(f"{name} {res.count_delta:+,} "
+        for h in handles:
+            d = res.deltas[h.name]
+            changes = 0 if d.weights is None else int(
+                np.abs(d.weights).sum())
+            line.append(f"{h.name} {d.count_delta:+,} "
                         f"({changes / dt:,.0f} changes/s)")
         print("  " + "  ".join(line))
-        live = monitors["triangle"].edges  # engine tracks the live set
 
     # verify the maintained totals against full recomputation
-    from repro.core.generic_join import generic_join
-    for name, eng in monitors.items():
-        _, ref = generic_join(Q.PAPER_QUERIES[name](), {Q.EDGE: live},
-                              enumerate_results=False)
-        _, ref0 = generic_join(Q.PAPER_QUERIES[name](),
-                               {Q.EDGE: g.edges[:n0]},
-                               enumerate_results=False)
-        assert totals[name] == ref - ref0, (name, totals[name], ref - ref0)
-        print(f"{name}: maintained total change {totals[name]:+,} == "
+    st = session.stats
+    assert st.commit_calls == st.normalize_calls == batches, st
+    for h in handles:
+        ref = oracle_count(h.query, session.edges)
+        ref0 = oracle_count(h.query, start)
+        assert h.net_change == ref - ref0, (h.name, h.net_change, ref - ref0)
+        print(f"{h.name}: maintained total change {h.net_change:+,} == "
               f"recompute diff ✓ (now {ref:,} instances)")
+    print(f"epoch accounting: {st.commit_calls} commits / "
+          f"{st.normalize_calls} normalizes for {len(handles)} standing "
+          "queries ✓")
 
 
 if __name__ == "__main__":
@@ -87,6 +85,6 @@ if __name__ == "__main__":
     ap.add_argument("--batches", type=int, default=6)
     ap.add_argument("--batch-size", type=int, default=800)
     ap.add_argument("--local", action="store_true",
-                    help="host-local DeltaBigJoin instead of the mesh")
+                    help="host-local session instead of the mesh")
     a = ap.parse_args()
     main(a.scale, a.edge_factor, a.batches, a.batch_size, a.local)

@@ -1,45 +1,46 @@
-"""Quickstart: count and enumerate triangles with the BiGJoin dataflow.
+"""Quickstart: count and enumerate triangles through the GraphSession facade.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--scale 11]
+
+A session owns the graph (and every index built over it); queries register
+against the session — by name, or as a textual pattern — and evaluate with
+the worst-case-optimal BiGJoin dataflow.
 """
+import argparse
+
 import numpy as np
 
-from repro.core import query as Q
-from repro.core.bigjoin import (BigJoinConfig, build_indices, run_bigjoin,
-                                seed_tuples_for)
-from repro.core.csr import Graph
-from repro.core.generic_join import generic_join
-from repro.core.plan import make_plan
+from repro.api import GraphSession, oracle_count
 from repro.data.synthetic import rmat_graph
 
 
-def main():
+def main(scale=11, edge_factor=8):
     # a skewed power-law graph — the regime the paper targets
-    g = Graph.from_edges(rmat_graph(scale=11, edge_factor=8, seed=0))
-    print(f"graph: {g.num_vertices:,} vertices, {g.num_edges:,} edges, "
-          f"max out-degree {np.bincount(g.edges[:, 0]).max():,}")
+    edges = rmat_graph(scale=scale, edge_factor=edge_factor, seed=0)
+    session = GraphSession(edges, local=True)
+    print(f"graph: {session.num_edges:,} edges, "
+          f"max out-degree {np.bincount(session.edges[:, 0]).max():,}")
 
-    # triangles via the worst-case-optimal dataflow
-    q = Q.triangle()
-    plan = make_plan(q)  # count-min -> propose -> intersect levels
-    print(f"attribute order: {plan.attr_order}; "
-          f"{len(plan.levels)} extension level(s)")
+    # triangles, registered by name (capacities auto-sized via AGM bounds)
+    tri = session.register("triangle")
+    count = tri.count()
+    tuples, weights = tri.enumerate()
+    print(f"BiGJoin: {count:,} triangles; first 3: "
+          f"{tuples[:3].tolist()}")
 
-    idx = build_indices(plan, {Q.EDGE: g.edges})
-    cfg = BigJoinConfig(batch=4096, seed_chunk=4096, mode="collect",
-                        out_capacity=1 << 22)
-    res = run_bigjoin(plan, idx, seed_tuples_for(plan, {Q.EDGE: g.edges}),
-                      cfg=cfg)
-    print(f"BiGJoin: {res.count:,} triangles in {res.steps} rounds "
-          f"({res.proposals:,} proposals, {res.intersections:,} "
-          f"intersections)")
-    print(f"first 3: {res.tuples[:3].tolist()}")
+    # the same motif written as a pattern — the DSL parses to the same query
+    tri2 = session.register("tri2(a, b, c) := e(a, b), e(a, c), e(b, c)")
+    assert tri2.count() == count
 
     # cross-check against the serial Generic Join oracle
-    _, ref = generic_join(q, {Q.EDGE: g.edges}, enumerate_results=False)
-    assert res.count == ref, (res.count, ref)
+    ref = oracle_count("triangle", session.edges)
+    assert count == int(weights.sum()) == ref, (count, ref)
     print(f"matches serial GJ oracle ({ref:,}) ✓")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=11)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    a = ap.parse_args()
+    main(a.scale, a.edge_factor)

@@ -1,0 +1,45 @@
+"""repro.api — the public facade over the WCOJ dataflow engines.
+
+Everything a driver, example, or service needs lives here::
+
+    from repro.api import GraphSession
+
+    session = GraphSession(initial_edges)            # owns the graph
+    tri = session.register("triangle")               # named motif
+    diam = session.register(
+        "diam(a,b,c,d) := e(a,b), e(b,c), e(d,a), e(d,c)")  # pattern DSL
+    print(tri.count())                               # static count
+    res = session.update(edge_batch, weights)        # ONE commit per epoch
+    print(res.deltas["triangle"].count_delta)        # per-query signed delta
+
+The engine modules under ``repro.core`` (``run_bigjoin``,
+``distributed_join``, ``DeltaBigJoin``, ``DistDeltaBigJoin``) remain the
+implementation layer; importing them directly is deprecated for
+application code — register queries on a session instead.
+"""
+from repro.api.dsl import PatternSyntaxError, parse_pattern, pattern_of
+from repro.api.session import (EpochResult, GraphSession, QueryHandle,
+                               Sizing, auto_sizing)
+from repro.core.csr import Graph
+from repro.core.query import (PAPER_QUERIES, QUERY_NAMES, QUERY_REGISTRY,
+                              Query, agm_bound, query_by_name)
+
+__all__ = [
+    "GraphSession", "QueryHandle", "EpochResult", "Sizing", "auto_sizing",
+    "parse_pattern", "pattern_of", "PatternSyntaxError",
+    "Query", "query_by_name", "QUERY_NAMES", "QUERY_REGISTRY",
+    "PAPER_QUERIES", "agm_bound", "Graph", "oracle_count",
+]
+
+
+def oracle_count(query, edges) -> int:
+    """Serial Generic-Join ground truth over an edge array (the COST-style
+    single-core baseline) — for verification in examples and drivers
+    without reaching into ``repro.core``."""
+    from repro.core.generic_join import generic_join
+    from repro.core.query import EDGE
+    if isinstance(query, str):
+        query = query_by_name(query) if ":=" not in query \
+            else parse_pattern(query)
+    _, cnt = generic_join(query, {EDGE: edges}, enumerate_results=False)
+    return int(cnt)

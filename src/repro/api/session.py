@@ -1,0 +1,342 @@
+"""GraphSession: one graph, many standing queries, one commit per epoch.
+
+The facade over the paper's engines (ROADMAP north-star shape, cf. HUGE
+arXiv:2103.14294 / DDSL arXiv:1810.05972): a session OWNS the dynamic graph
+— one :class:`~repro.core.delta.RegionStore` holding every multi-version
+index projection (host-local, or hash-sharded over a device mesh) — and is
+the sole public entry point.  Queries register against the session and get a
+:class:`QueryHandle` (static count/enumerate + standing delta subscription);
+``session.update`` runs ONE normalize → dAQ_1..dAQ_n (for every registered
+query) → commit per epoch off the shared regions, so N standing queries pay
+neither N index copies nor N commits.
+
+Compiled artifacts are cached at every layer: plans per (query, mode),
+single-host dataflows per (plan, config) (``bigjoin._compiled_fns``), and
+mesh programs per (plan, config, mesh)
+(``distributed.get_distributed_program``) — steady-state epochs recompile
+nothing.
+
+Capacities (B' proposal budget, output buffers, route slots) are sized
+automatically from the query's AGM bound; pass overrides only when you know
+better.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import delta as _delta
+from repro.core.bigjoin import BigJoinConfig, run_bigjoin
+from repro.core.plan import Plan, make_plan
+from repro.core.query import Query, fractional_edge_cover, query_by_name
+from repro.api.dsl import parse_pattern
+
+
+def _pow2(n: int) -> int:
+    return _delta._pow2(max(int(n), 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sizing:
+    """Derived capacities for one query (see :func:`auto_sizing`)."""
+
+    batch: int  # B' — per-step proposal budget
+    out_capacity: int  # collect-mode output rows per dataflow run
+    route_capacity: int  # per peer-pair request slots (mesh only)
+
+
+def auto_sizing(query: Query, num_edges: int, num_workers: int = 1,
+                update_batch: int = 2048) -> Sizing:
+    """Capacity defaults from the AGM bound (§1.1): with |E| = IN and
+    fractional edge-cover number rho*, MaxOut = IN^rho* and one seed edge
+    extends to at most IN^(rho*-1) results.
+
+    - ``batch`` (B', PER WORKER): enough proposals per step to amortize a
+      launch but bounded for VMEM — the per-seed extension bound, clamped
+      to [1024, 8192] globally and split across workers no lower than 256.
+    - ``out_capacity``: one epoch's worst-case signed output,
+      n_atoms · |dR| · IN^(rho*-1), clamped to [2^14, 2^22].
+    - ``route_capacity``: the BiGJoin-S balls-into-bins regime — each
+      worker's B' per-step requests spread over w owners, 4x slack:
+      4·batch/w per peer pair, floor 64 (matches
+      ``distributed.default_delta_config``).
+    """
+    E = max(int(num_edges), 2)
+    rho = fractional_edge_cover(query)
+    per_seed = float(E) ** max(rho - 1.0, 0.0)
+    batch = int(np.clip(_pow2(per_seed), 1024, 8192))
+    batch = max(batch // max(num_workers, 1), 256)
+    out_rows = query.num_atoms * update_batch * per_seed
+    out_capacity = int(np.clip(_pow2(out_rows), 1 << 14, 1 << 22))
+    return Sizing(batch, out_capacity, _route_for(batch, num_workers))
+
+
+def _route_for(batch: int, num_workers: int) -> int:
+    return max(4 * batch // max(num_workers, 1), 64)
+
+
+@dataclasses.dataclass
+class EpochResult:
+    """What one ``session.update`` produced: the normalized batch and each
+    registered query's signed output delta (keyed by handle name)."""
+
+    epoch: int
+    ins: np.ndarray
+    dels: np.ndarray
+    deltas: Dict[str, _delta.DeltaResult]
+
+    @property
+    def is_noop(self) -> bool:
+        return self.ins.size == 0 and self.dels.size == 0
+
+
+class QueryHandle:
+    """One standing query registered on a :class:`GraphSession`.
+
+    Static evaluation (:meth:`count` / :meth:`enumerate`) reads the live
+    graph through the session's shared regions; the standing side is fed by
+    ``session.update`` — every epoch's :class:`~repro.core.delta.DeltaResult`
+    lands in :attr:`last_delta`, accumulates into :attr:`net_change`, and is
+    pushed to any :meth:`subscribe` callbacks.
+    """
+
+    def __init__(self, session: "GraphSession", name: str, query: Query,
+                 batch: Optional[int] = None,
+                 out_capacity: Optional[int] = None):
+        self.session = session
+        self.name = name
+        self.query = query
+        self._batch = batch
+        self._out_capacity = out_capacity
+        self._engine: Optional[_delta.DeltaBigJoin] = None
+        self.last_delta: Optional[_delta.DeltaResult] = None
+        self.net_change = 0
+        self._subscribers: List[Callable] = []
+
+    @property
+    def engine(self) -> _delta.DeltaBigJoin:
+        """The standing delta engine (shares the session's RegionStore).
+        Built lazily on the first update epoch, so static-only handles
+        never pay the delta plans' region construction."""
+        if self._engine is None:
+            self._engine = self.session._make_engine(
+                self.query, self._batch, self._out_capacity)
+        return self._engine
+
+    def count(self) -> int:
+        """Exact instance count over the CURRENT graph (worst-case optimal
+        static dataflow over the shared live regions)."""
+        return self.session._static_eval(self.query, "count").count
+
+    def enumerate(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All instances over the current graph: (tuples [N, m], weights)."""
+        res = self.session._static_eval(self.query, "collect")
+        m = self.query.num_attrs
+        if res.tuples is None:
+            return (np.zeros((0, m), np.int32), np.zeros(0, np.int32))
+        return res.tuples, res.weights
+
+    def subscribe(self, fn: Callable[[int, _delta.DeltaResult], None]):
+        """Call ``fn(epoch, delta_result)`` after every update epoch."""
+        self._subscribers.append(fn)
+        return fn
+
+    def _deliver(self, epoch: int, res: _delta.DeltaResult):
+        self.last_delta = res
+        self.net_change += res.count_delta
+        for fn in self._subscribers:
+            fn(epoch, res)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return (f"QueryHandle({self.name!r}, atoms={self.query.num_atoms}, "
+                f"net_change={self.net_change:+d})")
+
+
+class GraphSession:
+    """The facade: owns one dynamic graph and serves many standing queries.
+
+    Engine selection: ``local=True`` keeps everything on the host
+    (single-process BiGJoin); ``local=False`` hash-shards every index region
+    over the device mesh and runs the request/response dataflow of §3.4.
+    Default (``local=None``): the mesh when more than one device (or an
+    explicit ``mesh``) is available, the host engine otherwise.
+    """
+
+    def __init__(self, initial_edges: np.ndarray, *, local: bool = None,
+                 mesh=None, balance: bool = False,
+                 batch: Optional[int] = None,
+                 out_capacity: Optional[int] = None,
+                 update_batch: int = 2048,
+                 compact_ratio: float = 0.5):
+        import jax
+        if local is None:
+            local = mesh is None and jax.device_count() == 1
+        self.local = bool(local)
+        self.balance = balance
+        self._batch_override = batch
+        self._out_override = out_capacity
+        self.update_batch = update_batch
+        if self.local:
+            self.mesh = None
+            self.w = 1
+        else:
+            if mesh is None:
+                from jax.sharding import Mesh
+                from repro.core.distributed import AXIS
+                mesh = Mesh(np.array(jax.devices()), (AXIS,))
+            self.mesh = mesh
+            self.w = int(np.prod(
+                [mesh.shape[a] for a in mesh.axis_names]))
+        self.store = _delta.RegionStore(
+            initial_edges, shard_w=0 if self.local else self.w,
+            compact_ratio=compact_ratio)
+        self.handles: Dict[str, QueryHandle] = {}
+        self.epoch = 0
+        self._static_plans: Dict[Query, Plan] = {}
+        self.programs_built = 0  # engine/program constructions (cache proof)
+
+    # -- registration -------------------------------------------------------
+    def register(self, pattern, name: Optional[str] = None,
+                 symmetric: bool = False,
+                 batch: Optional[int] = None,
+                 out_capacity: Optional[int] = None) -> QueryHandle:
+        """Register a standing query and return its handle.
+
+        ``pattern`` is a :class:`Query`, a DSL string (``"tri(a,b,c) :=
+        e(a,b), e(a,c), e(b,c)"``), or a registry name (``"4-clique"``).
+        Registering the same name twice returns the existing handle.
+        """
+        if isinstance(pattern, Query):
+            q = pattern
+        elif ":=" in pattern:
+            q = parse_pattern(pattern, name=name)
+        else:
+            q = query_by_name(pattern, symmetric=symmetric)
+        name = name or q.name
+        if name in self.handles:
+            if self.handles[name].query != q:
+                raise ValueError(
+                    f"query name {name!r} already registered with a "
+                    "different pattern")
+            return self.handles[name]
+        handle = QueryHandle(self, name, q, batch, out_capacity)
+        self.handles[name] = handle
+        return handle
+
+    def query_by_name(self, name: str) -> QueryHandle:
+        """Fetch a registered handle; registers the named motif on miss."""
+        return self.handles.get(name) or self.register(name)
+
+    def __getitem__(self, name: str) -> QueryHandle:
+        return self.handles[name]
+
+    def _sizing(self, q: Query, batch, out_capacity) -> Sizing:
+        s = auto_sizing(q, self.num_edges or self.update_batch, self.w,
+                        self.update_batch)
+        b = batch or self._batch_override or s.batch
+        return Sizing(b,
+                      out_capacity or self._out_override or s.out_capacity,
+                      _route_for(b, self.w))  # route follows the FINAL B'
+
+    def _make_engine(self, q: Query, batch, out_capacity
+                     ) -> _delta.DeltaBigJoin:
+        s = self._sizing(q, batch, out_capacity)
+        self.programs_built += 1
+        if self.local:
+            cfg = BigJoinConfig(batch=s.batch, seed_chunk=s.batch,
+                                mode="collect", out_capacity=s.out_capacity)
+            return _delta.DeltaBigJoin(q, None, cfg=cfg, store=self.store)
+        from repro.core.distributed import (DistDeltaBigJoin,
+                                            default_delta_config)
+        dcfg = default_delta_config(self.w, batch=s.batch,
+                                    out_capacity=s.out_capacity,
+                                    balance=self.balance)
+        return DistDeltaBigJoin(q, None, mesh=self.mesh, dcfg=dcfg,
+                                store=self.store)
+
+    # -- the epoch loop -----------------------------------------------------
+    def update(self, updates: np.ndarray,
+               weights: Optional[np.ndarray] = None) -> EpochResult:
+        """Apply one update batch to the graph and every standing query:
+        ONE normalize, one staged uncommitted region set, each registered
+        query's dAQ pipeline off the shared regions, ONE commit."""
+        updates = np.asarray(updates, np.int32).reshape(-1, 2)
+        if weights is None:
+            weights = np.ones(updates.shape[0], np.int32)
+        ins, dels = self.store.normalize(updates, weights)
+        self.epoch += 1
+        if ins.size == 0 and dels.size == 0:
+            zero = _delta.DeltaResult(0, None, None, [])
+            deltas = {name: zero for name in self.handles}
+            for name, h in self.handles.items():
+                h._deliver(self.epoch, zero)
+            return EpochResult(self.epoch, ins, dels, deltas)
+        # touch every handle's engine BEFORE staging: a lazily-built engine
+        # must create its projections first, or they would miss the
+        # uncommitted batch begin_epoch installs on existing regions
+        engines = [(name, h.engine) for name, h in self.handles.items()]
+        self.store.begin_epoch(ins, dels)
+        deltas: Dict[str, _delta.DeltaResult] = {}
+        for name, engine in engines:
+            deltas[name] = engine.run_delta_plans(ins, dels)
+        self.store.commit(ins, dels)
+        for name, h in self.handles.items():
+            h._deliver(self.epoch, deltas[name])
+        return EpochResult(self.epoch, ins, dels, deltas)
+
+    # -- static evaluation over the shared regions --------------------------
+    def _static_plan(self, q: Query) -> Plan:
+        """Plan reading version "old" = base + cins − cdel, i.e. the live
+        committed graph, through the SAME shared regions the delta path
+        maintains — a static query costs no extra index build."""
+        plan = self._static_plans.get(q)
+        if plan is None:
+            plan = make_plan(q, versions=("old",) * q.num_atoms)
+            self.store.ensure_plan(plan)
+            self._static_plans[q] = plan
+        return plan
+
+    def _static_eval(self, q: Query, mode: str):
+        from repro.core.bigjoin import seed_tuples_for
+        from repro.core.query import EDGE
+        plan = self._static_plan(q)
+        seed = seed_tuples_for(plan, {EDGE: self.store.edges})
+        s = self._sizing(q, None, None)
+        out_cap = s.out_capacity if mode == "collect" else 1
+        indices = self.store.indices_for(plan)
+        if self.local:
+            cfg = BigJoinConfig(batch=s.batch, seed_chunk=s.batch,
+                                mode=mode, out_capacity=out_cap)
+            return run_bigjoin(plan, indices, seed, cfg=cfg)
+        from repro.core.distributed import (DistConfig,
+                                            get_distributed_program,
+                                            run_program)
+        base = BigJoinConfig(batch=s.batch, seed_chunk=s.batch, mode=mode,
+                             out_capacity=out_cap)
+        dcfg = DistConfig(base, self.w, route_capacity=s.route_capacity,
+                          balance=self.balance)
+        program = get_distributed_program(plan, dcfg, self.mesh)
+        return run_program(program, self.w, mode == "collect", indices,
+                           seed, np.ones(seed.shape[0], np.int32))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def edges(self) -> np.ndarray:
+        """The live edge set (host truth)."""
+        return self.store.edges
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.store.edges.shape[0])
+
+    @property
+    def stats(self) -> _delta.StoreStats:
+        return self.store.stats
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        where = "local" if self.local else f"{self.w}-worker mesh"
+        return (f"GraphSession({self.num_edges:,} edges, "
+                f"{len(self.handles)} queries, {where}, "
+                f"epoch {self.epoch})")

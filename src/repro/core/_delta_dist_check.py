@@ -62,7 +62,7 @@ if __name__ == "__main__":
     else:
         e = uniform_graph(args.nv, args.ne, args.seed)
 
-    q = Q.PAPER_QUERIES[args.query]()
+    q = Q.query_by_name(args.query)
     if args.local:
         from repro.core.bigjoin import BigJoinConfig
         eng = DeltaBigJoin(q, e, cfg=BigJoinConfig(

@@ -50,7 +50,7 @@ if __name__ == "__main__":
     keep = u != v
     e = np.unique(np.stack([u[keep], v[keep]], 1).astype(np.int32), axis=0)
 
-    q = Q.PAPER_QUERIES[args.query]()
+    q = Q.query_by_name(args.query)
     plan = make_plan(q)
     rels = {Q.EDGE: e}
     base = BigJoinConfig(batch=args.batch, mode="collect",

@@ -135,57 +135,75 @@ class DeltaResult:
     per_dq: List[JoinResult]
 
 
-class DeltaBigJoin:
-    """Incremental maintenance of one query over one dynamic edge relation.
+@dataclasses.dataclass
+class StoreStats:
+    """Per-store epoch accounting.  ``normalize_calls`` / ``commit_calls``
+    are the facade's one-commit-per-epoch contract: with N standing queries
+    on one store both advance by exactly 1 per update epoch."""
 
-    General n-ary dynamic relations follow the same structure; the engine is
-    specialized (as the paper's implementation is, §4) to graph workloads
-    where every atom reads the single ``edge`` relation.
+    normalize_calls: int = 0
+    commit_calls: int = 0
+    compactions: int = 0
+    epochs: int = 0
+
+
+class RegionStore:
+    """Owner of the live edge set and every projection's LSM regions.
+
+    This is the shared substrate under both the single-query engines and the
+    :class:`repro.api.GraphSession` facade: projections are created on demand
+    (:meth:`ensure`) and SHARED between every query registered against the
+    store, so N standing queries pay one region build, one ``normalize`` and
+    one ``commit`` per epoch instead of N copies of each.
+
+    ``shard_w > 0`` builds every device mirror hash-partitioned over that
+    many mesh workers (the distributed engine's layout); ``shard_w == 0``
+    keeps single-host mirrors.
     """
 
-    def __init__(self, query: Query, initial_edges: np.ndarray,
-                 cfg: BigJoinConfig = BigJoinConfig(mode="collect"),
+    def __init__(self, initial_edges: np.ndarray, shard_w: int = 0,
                  compact_ratio: float = 0.5):
-        self.query = query
-        self.cfg = cfg
+        self.edges = np.unique(
+            np.asarray(initial_edges, np.int32).reshape(-1, 2), axis=0)
+        self.shard_w = shard_w
         self.compact_ratio = compact_ratio
-        self.plans: List[Plan] = [make_delta_plan(dq)
-                                  for dq in delta_queries(query)]
-        edges = np.unique(np.asarray(initial_edges, np.int32).reshape(-1, 2),
-                          axis=0)
-        self.edges = edges  # live edge set, host truth
-
-        # one region set per distinct projection used by any delta plan
         self.projections: Dict[Projection, _Regions] = {}
-        for plan in self.plans:
-            for _id, rel, key_pos, ext_pos, _v in plan.index_ids():
-                if rel != "edge":
-                    raise NotImplementedError(
-                        "dynamic non-edge relations: extend _Regions storage")
-                proj = (rel, key_pos, ext_pos)
-                if proj not in self.projections:
-                    self.projections[proj] = self._new_regions(
-                        key_pos, ext_pos, edges)
-        for reg in self.projections.values():
+        self.stats = StoreStats()
+
+    def ensure(self, rel: str, key_pos: Tuple[int, ...], ext_pos: int
+               ) -> _Regions:
+        """Region storage for one projection, built from the CURRENT live
+        edge set on first use and reused by every later query that needs the
+        same projection (the hoisted per-query path of old DeltaBigJoin)."""
+        if rel != "edge":
+            raise NotImplementedError(
+                "dynamic non-edge relations: extend _Regions storage")
+        proj = (rel, key_pos, ext_pos)
+        reg = self.projections.get(proj)
+        if reg is None:
+            empty = self.edges[:0]
+            reg = _Regions(key_pos, ext_pos, self.edges, empty, empty,
+                           shard_w=self.shard_w)
             reg.refresh()
-            reg.set_uncommitted(edges[:0], edges[:0])
+            reg.set_uncommitted(empty, empty)
+            self.projections[proj] = reg
+        return reg
 
-    def _new_regions(self, key_pos: Tuple[int, ...], ext_pos: int,
-                     edges: np.ndarray) -> _Regions:
-        """Region storage for one projection; the distributed engine
-        overrides this to build worker-sharded device mirrors."""
-        empty = edges[:0]
-        return _Regions(key_pos, ext_pos, edges, empty, empty)
+    def ensure_plan(self, plan: Plan):
+        for _id, rel, key_pos, ext_pos, _v in plan.index_ids():
+            self.ensure(rel, key_pos, ext_pos)
 
-    def _run_plan(self, plan: Plan, indices: Indices, seed: np.ndarray,
-                  weights: np.ndarray) -> JoinResult:
-        """Run one delta query's dataflow; overridden by the mesh engine."""
-        return run_bigjoin(plan, indices, seed, weights, cfg=self.cfg)
+    def indices_for(self, plan: Plan) -> Indices:
+        """Assemble the plan's VersionedIndex dict off the shared regions."""
+        return {
+            _id: self.ensure(rel, key_pos, ext_pos).versioned(version)
+            for _id, rel, key_pos, ext_pos, version in plan.index_ids()}
 
     # ------------------------------------------------------------------
     def normalize(self, updates: np.ndarray, weights: np.ndarray
                   ) -> Tuple[np.ndarray, np.ndarray]:
         """Net out a batch against the live edge set: returns (ins, del)."""
+        self.stats.normalize_calls += 1
         updates = np.asarray(updates, np.int32).reshape(-1, 2)
         weights = np.asarray(weights, np.int32)
         keep = updates[:, 0] != updates[:, 1]
@@ -208,59 +226,30 @@ class DeltaBigJoin:
             committed = reg.cins.shape[0] + reg.cdel.shape[0]
             if force or committed > self.compact_ratio * max(
                     reg.base.shape[0], 1):
-                reg.base = np.unique(np.concatenate(
-                    [_diff_rows(reg.base, reg.cdel), reg.cins]), axis=0) \
-                    if (reg.cins.size or reg.cdel.size) else reg.base
+                if reg.cins.size or reg.cdel.size:
+                    reg.base = np.unique(np.concatenate(
+                        [_diff_rows(reg.base, reg.cdel), reg.cins]), axis=0)
+                    self.stats.compactions += 1
                 reg.cins = reg.cins[:0]
                 reg.cdel = reg.cdel[:0]
                 reg.refresh()
 
-    def apply(self, updates: np.ndarray,
-              weights: Optional[np.ndarray] = None) -> DeltaResult:
-        """Process one update batch: emit output changes, then commit."""
-        updates = np.asarray(updates, np.int32).reshape(-1, 2)
-        if weights is None:
-            weights = np.ones(updates.shape[0], np.int32)
-        ins, dels = self.normalize(updates, weights)
-        if ins.size == 0 and dels.size == 0:
-            # net-zero batch (no-op inserts of live edges, deletes of absent
-            # edges, +/- cancellations): an EXACT no-op — no region rebuilds,
-            # no compaction, no dataflow run (tests/test_delta_stream.py).
-            return DeltaResult(0, None, None, [])
-
+    def begin_epoch(self, ins: np.ndarray, dels: np.ndarray):
+        """Stage one normalized batch as the uncommitted region of EVERY
+        projection (after the eager re-insertion compaction check)."""
         # eager compaction iff a committed delete is being re-inserted
         # (would create a positive/negative region overlap, DESIGN.md §2)
         need = any(_inter_rows(ins, reg.cdel).size
                    for reg in self.projections.values())
         self._maybe_compact(force=bool(need))
-
         for reg in self.projections.values():
             reg.set_uncommitted(ins, dels)
 
-        delta_edges = np.concatenate([ins, dels], axis=0)
-        delta_w = np.concatenate([
-            np.ones(ins.shape[0], np.int32),
-            -np.ones(dels.shape[0], np.int32)])
-
-        per_dq: List[JoinResult] = []
-        total = 0
-        tuples, wts = [], []
-        for plan in self.plans:
-            if delta_edges.size == 0:
-                break
-            indices: Indices = {}
-            for _id, rel, key_pos, ext_pos, version in plan.index_ids():
-                reg = self.projections[(rel, key_pos, ext_pos)]
-                indices[_id] = reg.versioned(version)
-            seed = delta_edges[:, list(plan.seed_cols)]
-            res = self._run_plan(plan, indices, seed, delta_w)
-            per_dq.append(res)
-            total += res.count
-            if res.tuples is not None and res.tuples.size:
-                tuples.append(res.tuples)
-                wts.append(res.weights)
-
-        # ---- commit uins/udel into the committed regions -----------------
+    def commit(self, ins: np.ndarray, dels: np.ndarray):
+        """Fold uins/udel into the committed regions (with cancellation) and
+        advance the live edge set — once per epoch, shared by every query."""
+        self.stats.commit_calls += 1
+        self.stats.epochs += 1
         for reg in self.projections.values():
             cins = np.unique(np.concatenate(
                 [_diff_rows(reg.cins, dels), _diff_rows(ins, reg.cdel)]),
@@ -277,9 +266,107 @@ class DeltaBigJoin:
             self.edges = _diff_rows(self.edges, dels)
         self._maybe_compact()
 
+
+class DeltaBigJoin:
+    """Incremental maintenance of one query over one dynamic edge relation.
+
+    General n-ary dynamic relations follow the same structure; the engine is
+    specialized (as the paper's implementation is, §4) to graph workloads
+    where every atom reads the single ``edge`` relation.
+
+    Region/commit bookkeeping lives in a :class:`RegionStore`; by default the
+    engine owns a private one, but a shared store may be injected (``store=``)
+    so many engines ride one graph with one commit per epoch — that is what
+    :class:`repro.api.GraphSession` does.  Prefer the session facade for new
+    code; this class remains the single-query engine underneath it.
+    """
+
+    def __init__(self, query: Query, initial_edges: Optional[np.ndarray],
+                 cfg: BigJoinConfig = BigJoinConfig(mode="collect"),
+                 compact_ratio: float = 0.5,
+                 store: Optional[RegionStore] = None):
+        self.query = query
+        self.cfg = cfg
+        self.compact_ratio = compact_ratio
+        self.plans: List[Plan] = [make_delta_plan(dq)
+                                  for dq in delta_queries(query)]
+        if store is None:
+            store = self._new_store(initial_edges, compact_ratio)
+        self.store = store
+        for plan in self.plans:
+            self.store.ensure_plan(plan)
+
+    def _new_store(self, edges: np.ndarray, compact_ratio: float
+                   ) -> RegionStore:
+        """Private store; the distributed engine overrides this to build
+        worker-sharded device mirrors."""
+        return RegionStore(edges, shard_w=0, compact_ratio=compact_ratio)
+
+    # store delegation (public surface predating RegionStore) --------------
+    @property
+    def edges(self) -> np.ndarray:
+        return self.store.edges
+
+    @property
+    def projections(self) -> Dict[Projection, _Regions]:
+        return self.store.projections
+
+    def normalize(self, updates, weights):
+        return self.store.normalize(updates, weights)
+
+    def _maybe_compact(self, force: bool = False):
+        self.store._maybe_compact(force)
+
+    def _run_plan(self, plan: Plan, indices: Indices, seed: np.ndarray,
+                  weights: np.ndarray) -> JoinResult:
+        """Run one delta query's dataflow; overridden by the mesh engine."""
+        return run_bigjoin(plan, indices, seed, weights, cfg=self.cfg)
+
+    # ------------------------------------------------------------------
+    def run_delta_plans(self, ins: np.ndarray, dels: np.ndarray
+                        ) -> DeltaResult:
+        """Evaluate dAQ_1..dAQ_n for one staged batch (the store must have
+        ``begin_epoch``-ed it); does NOT commit — the caller owns the epoch
+        boundary, so a facade can run many queries off one staged batch."""
+        delta_edges = np.concatenate([ins, dels], axis=0)
+        delta_w = np.concatenate([
+            np.ones(ins.shape[0], np.int32),
+            -np.ones(dels.shape[0], np.int32)])
+
+        per_dq: List[JoinResult] = []
+        total = 0
+        tuples, wts = [], []
+        for plan in self.plans:
+            if delta_edges.size == 0:
+                break
+            seed = delta_edges[:, list(plan.seed_cols)]
+            res = self._run_plan(plan, self.store.indices_for(plan), seed,
+                                 delta_w)
+            per_dq.append(res)
+            total += res.count
+            if res.tuples is not None and res.tuples.size:
+                tuples.append(res.tuples)
+                wts.append(res.weights)
         out_t = np.concatenate(tuples) if tuples else None
         out_w = np.concatenate(wts) if wts else None
         return DeltaResult(total, out_t, out_w, per_dq)
+
+    def apply(self, updates: np.ndarray,
+              weights: Optional[np.ndarray] = None) -> DeltaResult:
+        """Process one update batch: emit output changes, then commit."""
+        updates = np.asarray(updates, np.int32).reshape(-1, 2)
+        if weights is None:
+            weights = np.ones(updates.shape[0], np.int32)
+        ins, dels = self.store.normalize(updates, weights)
+        if ins.size == 0 and dels.size == 0:
+            # net-zero batch (no-op inserts of live edges, deletes of absent
+            # edges, +/- cancellations): an EXACT no-op — no region rebuilds,
+            # no compaction, no dataflow run (tests/test_delta_stream.py).
+            return DeltaResult(0, None, None, [])
+        self.store.begin_epoch(ins, dels)
+        result = self.run_delta_plans(ins, dels)
+        self.store.commit(ins, dels)
+        return result
 
 
 def rows_isin(a: np.ndarray, b: np.ndarray) -> np.ndarray:

@@ -537,6 +537,70 @@ def build_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
     return run
 
 
+# ---------------------------------------------------------------------------
+# compiled-program cache: one shard_map program per (plan, config, mesh)
+# ---------------------------------------------------------------------------
+
+_PROGRAM_CACHE: Dict[Tuple[Plan, "DistConfig", Mesh], object] = {}
+_PROGRAM_BUILDS = 0  # monotonic build counter (cache-hit assertions in tests)
+
+
+def get_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
+    """The process-wide compiled-program cache.  Plans, configs and meshes
+    all hash structurally, so every engine/session asking for the same
+    (plan, config, mesh) triple shares ONE shard_map program — and with the
+    pow2-padded region/seed shapes, one XLA executable."""
+    global _PROGRAM_BUILDS
+    key = (plan, dcfg, mesh)
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is None:
+        _PROGRAM_BUILDS += 1
+        prog = build_distributed_program(plan, dcfg, mesh)
+        _PROGRAM_CACHE[key] = prog
+    return prog
+
+
+def deal_seed(seed: np.ndarray, weights: np.ndarray, w: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Round-robin deal of a seed batch across ``w`` workers, padded to a
+    stable pow2 per-worker chunk (keeps the jitted program's shapes — and
+    hence its compile cache — warm across epochs).  Returns
+    (chunks [w,S,2], seed_n [w], wchunks [w,S])."""
+    seed = np.asarray(seed, np.int32).reshape(-1, 2)
+    weights = np.asarray(weights, np.int32)
+    per = -(-seed.shape[0] // w)
+    S = _delta._pow2(per)
+    chunks = np.zeros((w, S, 2), np.int32)
+    wchunks = np.zeros((w, S), np.int32)
+    seed_n = np.zeros(w, np.int32)
+    for k in range(w):
+        rows = seed[k::w]
+        chunks[k, :rows.shape[0]] = rows
+        wchunks[k, :rows.shape[0]] = weights[k::w]
+        seed_n[k] = rows.shape[0]
+    return chunks, seed_n, wchunks
+
+
+def run_program(program, w: int, collect: bool, indices,
+                seed: np.ndarray, weights: np.ndarray):
+    """Deal the seed, launch one compiled program, unpack psum'd outputs."""
+    chunks, seed_n, wchunks = deal_seed(seed, weights, w)
+    out = program(indices, jnp.asarray(chunks), jnp.asarray(seed_n),
+                  jnp.asarray(wchunks))
+    if bool(out[4]):
+        raise RuntimeError(
+            "distributed join overflow (raise batch/out_capacity)")
+    tuples = wts = None
+    if collect:
+        bufs, ws, ns = (np.asarray(out[7]), np.asarray(out[8]),
+                        np.asarray(out[9]))
+        tuples = np.concatenate([bufs[i, :ns[i]] for i in range(w)])
+        wts = np.concatenate([ws[i, :ns[i]] for i in range(w)])
+    from repro.core.bigjoin import JoinResult
+    return JoinResult(int(out[0]), tuples, wts, int(out[1]),
+                      int(out[2]), int(out[3]))
+
+
 @dataclasses.dataclass
 class DistJoinResult:
     count: int
@@ -556,6 +620,8 @@ def distributed_join(plan: Plan, relations: Dict[str, np.ndarray],
     from repro.core.bigjoin import seed_tuples_for
     if mesh is None:
         devs = np.array(jax.devices())
+        if cfg is not None:  # honor the caller's worker count on the
+            devs = devs[:cfg.num_workers]  # default mesh (w <= devices)
         mesh = Mesh(devs, (AXIS,))
     w = mesh.shape[AXIS]
     if cfg is None:
@@ -606,9 +672,16 @@ def default_delta_config(w: int, batch: int = 1024,
 def make_delta_monitor(query, initial_edges, local: bool = False,
                        batch: int = 2048, out_capacity: int = 1 << 20,
                        balance: bool = False, mesh: Optional[Mesh] = None):
-    """The one engine-selection switch shared by drivers and examples:
-    host-local :class:`~repro.core.delta.DeltaBigJoin` or the mesh-backed
-    :class:`DistDeltaBigJoin`, with matching B'/output budgets."""
+    """Deprecated: use :class:`repro.api.GraphSession` — one session owns the
+    graph and serves many standing queries off a single commit per epoch.
+    Kept as a thin wrapper for old callers; selects the host-local
+    :class:`~repro.core.delta.DeltaBigJoin` or mesh-backed
+    :class:`DistDeltaBigJoin` with matching B'/output budgets."""
+    import warnings
+    warnings.warn(
+        "make_delta_monitor is deprecated; use repro.api.GraphSession "
+        "(register() one or more queries, update() once per epoch)",
+        DeprecationWarning, stacklevel=2)
     if local:
         cfg = BigJoinConfig(batch=batch, seed_chunk=batch, mode="collect",
                             out_capacity=out_capacity)
@@ -646,7 +719,8 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
 
     def __init__(self, query, initial_edges, mesh: Optional[Mesh] = None,
                  dcfg: Optional[DistConfig] = None,
-                 compact_ratio: float = 0.5):
+                 compact_ratio: float = 0.5,
+                 store: Optional[_delta.RegionStore] = None):
         if mesh is None:
             mesh = Mesh(np.array(jax.devices()), (AXIS,))
         self.mesh = mesh
@@ -659,47 +733,24 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
                 "dcfg does not match the mesh: "
                 f"{dcfg.num_workers} workers on axes {axes} vs mesh "
                 f"{dict(mesh.shape)}")
+        if store is not None and store.shard_w != self.w:
+            raise ValueError(
+                f"shared store is sharded over {store.shard_w} workers, "
+                f"mesh has {self.w}")
         self.dcfg = dcfg
         self._programs: Dict[int, object] = {}
         super().__init__(query, initial_edges, cfg=dcfg.base,
-                         compact_ratio=compact_ratio)
+                         compact_ratio=compact_ratio, store=store)
 
-    def _new_regions(self, key_pos, ext_pos, edges):
-        empty = edges[:0]
-        return _delta._Regions(key_pos, ext_pos, edges, empty, empty,
-                               shard_w=self.w)
+    def _new_store(self, edges, compact_ratio):
+        return _delta.RegionStore(edges, shard_w=self.w,
+                                  compact_ratio=compact_ratio)
 
     def _run_plan(self, plan, indices, seed, weights):
-        w = self.w
         pi = self.plans.index(plan)
         if pi not in self._programs:
-            self._programs[pi] = build_distributed_program(
+            self._programs[pi] = get_distributed_program(
                 plan, self.dcfg, self.mesh)
-        seed = np.asarray(seed, np.int32).reshape(-1, 2)
-        weights = np.asarray(weights, np.int32)
-        # round-robin deal, padded to a stable pow2 per-worker chunk
-        per = -(-seed.shape[0] // w)
-        S = _delta._pow2(per)
-        chunks = np.zeros((w, S, 2), np.int32)
-        wchunks = np.zeros((w, S), np.int32)
-        seed_n = np.zeros(w, np.int32)
-        for k in range(w):
-            rows = seed[k::w]
-            chunks[k, :rows.shape[0]] = rows
-            wchunks[k, :rows.shape[0]] = weights[k::w]
-            seed_n[k] = rows.shape[0]
-        out = self._programs[pi](
-            indices, jnp.asarray(chunks), jnp.asarray(seed_n),
-            jnp.asarray(wchunks))
-        if bool(out[4]):
-            raise RuntimeError(
-                "distributed delta overflow (raise batch/out_capacity)")
-        tuples = wts = None
-        if self.dcfg.base.mode == "collect":
-            bufs, ws, ns = (np.asarray(out[7]), np.asarray(out[8]),
-                            np.asarray(out[9]))
-            tuples = np.concatenate([bufs[i, :ns[i]] for i in range(w)])
-            wts = np.concatenate([ws[i, :ns[i]] for i in range(w)])
-        from repro.core.bigjoin import JoinResult
-        return JoinResult(int(out[0]), tuples, wts, int(out[1]),
-                          int(out[2]), int(out[3]))
+        return run_program(self._programs[pi], self.w,
+                           self.dcfg.base.mode == "collect", indices,
+                           seed, weights)

@@ -163,6 +163,50 @@ PAPER_QUERIES = {
     "4-clique-tri": four_clique_tri,
 }
 
+# ---------------------------------------------------------------------------
+# Named-query registry: the ONE query-name -> builder mapping shared by every
+# driver (launch/run_query, launch/serve, benchmarks, examples, repro.api).
+# ---------------------------------------------------------------------------
+
+# builders that accept the ``symmetric`` keyword (symmetry-breaking filters)
+_SYMMETRIC_OK = frozenset({"triangle", "4-clique", "5-clique", "house"})
+
+# alternate spellings accepted by query_by_name (normalized form -> canonical)
+_ALIASES = {
+    "tri": "triangle",
+    "four-clique": "4-clique",
+    "five-clique": "5-clique",
+    "4clique": "4-clique",
+    "5clique": "5-clique",
+    "four-clique-tri": "4-clique-tri",
+}
+
+QUERY_REGISTRY = dict(PAPER_QUERIES)
+QUERY_NAMES = tuple(QUERY_REGISTRY)
+
+
+def query_by_name(name: str, symmetric: bool = False) -> Query:
+    """Build a named query: the paper's five benchmark motifs plus
+    ``path-N``.  Accepts underscore/case variants (``four_clique``) and
+    threads ``symmetric`` only to the builders that support it."""
+    norm = name.strip().lower().replace("_", "-")
+    norm = _ALIASES.get(norm, norm)
+    if norm.startswith("path-"):
+        if symmetric:
+            raise ValueError(f"query {norm!r} has no symmetric variant")
+        try:
+            return path(int(norm[len("path-"):]))
+        except ValueError:
+            raise KeyError(f"bad path length in query name {name!r}")
+    if norm not in QUERY_REGISTRY:
+        raise KeyError(
+            f"unknown query {name!r}; known: {', '.join(QUERY_NAMES)} "
+            "or path-N")
+    build = QUERY_REGISTRY[norm]
+    if symmetric and norm not in _SYMMETRIC_OK:
+        raise ValueError(f"query {norm!r} has no symmetric variant")
+    return build(symmetric=symmetric) if norm in _SYMMETRIC_OK else build()
+
 
 # ---------------------------------------------------------------------------
 # Delta queries (§3.3.1).

@@ -21,8 +21,8 @@ def motif_counts(graph: Graph, motif: str = "triangle",
                  cfg: BigJoinConfig | None = None) -> np.ndarray:
     """[num_vertices] float32 count of motif instances per vertex."""
     g = graph.degree_relabel()
-    q = Q.PAPER_QUERIES[motif](symmetric=True) if motif in (
-        "triangle", "4-clique", "5-clique") else Q.PAPER_QUERIES[motif]()
+    q = Q.query_by_name(motif, symmetric=motif in (
+        "triangle", "4-clique", "5-clique"))
     plan = make_plan(q)
     rels = {Q.EDGE: g.edges}
     cfg = cfg or BigJoinConfig(batch=4096, seed_chunk=4096,

@@ -1,7 +1,11 @@
-"""The paper's engine as a CLI: static and incremental subgraph queries.
+"""The paper's engine as a CLI, driven through the GraphSession facade.
 
     python -m repro.launch.run_query --query triangle --scale 12 \
-        --mode static|delta|distributed
+        --mode static|delta|distributed|serial
+
+``static`` counts on a host-local session, ``distributed`` on the device
+mesh (every local device a worker), ``delta`` streams update batches through
+a standing registration, ``serial`` runs the Generic-Join oracle baseline.
 """
 from __future__ import annotations
 
@@ -10,19 +14,22 @@ import time
 
 import numpy as np
 
+from repro.api import Graph, GraphSession, QUERY_NAMES, oracle_count
+from repro.data.synthetic import rmat_graph
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--query", default="triangle",
-                    choices=["triangle", "4-clique", "diamond", "house",
-                             "5-clique"])
+                    help=f"named motif ({', '.join(QUERY_NAMES)}, path-N) "
+                    "or a DSL pattern 'name(a,b,..) := e(a,b), ...'")
     ap.add_argument("--mode", default="static",
                     choices=["static", "delta", "distributed", "serial"])
     ap.add_argument("--scale", type=int, default=11,
                     help="RMAT scale (2^scale vertices)")
     ap.add_argument("--edge-factor", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4096,
-                    help="B' dataflow batch")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="B' dataflow batch (default: AGM auto-sizing)")
     ap.add_argument("--update-batches", type=int, default=5)
     ap.add_argument("--update-size", type=int, default=1000)
     ap.add_argument("--symmetric", action="store_true",
@@ -30,69 +37,49 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    from repro.core import query as Q
-    from repro.core.bigjoin import (BigJoinConfig, build_indices,
-                                    run_bigjoin, seed_tuples_for)
-    from repro.core.csr import Graph
-    from repro.core.plan import make_plan
-    from repro.data.synthetic import rmat_graph
-
-    edges = rmat_graph(args.scale, args.edge_factor, seed=args.seed)
-    g = Graph.from_edges(edges)
+    g = Graph.from_edges(rmat_graph(args.scale, args.edge_factor,
+                                    seed=args.seed))
     if args.symmetric:
         g = g.degree_relabel()
-    q = Q.PAPER_QUERIES[args.query](symmetric=args.symmetric) \
-        if args.query in ("triangle", "4-clique", "5-clique") \
-        else Q.PAPER_QUERIES[args.query]()
-    rels = {Q.EDGE: g.edges}
     print(f"graph: {g.num_vertices:,} vertices {g.num_edges:,} edges "
           f"(max outdeg {np.bincount(g.edges[:, 0]).max():,})")
 
     if args.mode == "serial":
-        from repro.core.generic_join import generic_join
         t0 = time.time()
-        _, cnt = generic_join(q, rels, enumerate_results=False)
+        cnt = oracle_count(args.query, g.edges)
         print(f"serial GJ: {cnt:,} results in {time.time()-t0:.2f}s")
-    elif args.mode == "static":
-        plan = make_plan(q)
-        cfg = BigJoinConfig(batch=args.batch, seed_chunk=args.batch,
-                            mode="count")
-        t0 = time.time()
-        idx = build_indices(plan, rels)
-        t_index = time.time() - t0
-        t0 = time.time()
-        res = run_bigjoin(plan, idx, seed_tuples_for(plan, rels), cfg=cfg)
-        print(f"BiGJoin: {res.count:,} results in {time.time()-t0:.2f}s "
-              f"(index {t_index:.2f}s, {res.steps} rounds, "
-              f"{res.proposals:,} proposals)")
-    elif args.mode == "delta":
-        from repro.core.delta import DeltaBigJoin
-        cfg = BigJoinConfig(batch=args.batch, seed_chunk=args.batch,
-                            mode="collect", out_capacity=1 << 22)
+        return
+
+    if args.mode == "delta":
         n0 = g.num_edges - args.update_batches * args.update_size
-        engine = DeltaBigJoin(q, g.edges[:n0], cfg=cfg)
+        session = GraphSession(g.edges[:n0], local=True, batch=args.batch,
+                               update_batch=args.update_size)
+        handle = session.register(args.query, symmetric=args.symmetric)
         print(f"loaded {n0:,} edges; streaming "
               f"{args.update_batches} x {args.update_size} updates")
         for i in range(args.update_batches):
             lo = n0 + i * args.update_size
             batch = g.edges[lo:lo + args.update_size]
             t0 = time.time()
-            res = engine.apply(batch)
+            res = session.update(batch)
             dt = time.time() - t0
-            print(f"  batch {i}: +{res.count_delta:,} results "
+            d = res.deltas[handle.name]
+            print(f"  batch {i}: +{d.count_delta:,} results "
                   f"({batch.shape[0]/dt:,.0f} updates/s, "
-                  f"{abs(res.count_delta)/dt:,.0f} changes/s)")
-    else:  # distributed
-        from repro.core.distributed import DistConfig, distributed_join
-        plan = make_plan(q)
-        cfg = DistConfig(
-            BigJoinConfig(batch=args.batch, mode="count"),
-            1, route_capacity=args.batch)
-        t0 = time.time()
-        res = distributed_join(plan, rels, cfg=cfg)
-        print(f"distributed BiGJoin (w=1): {res.count:,} results in "
-              f"{time.time()-t0:.2f}s ({res.steps} rounds, max load "
-              f"{res.max_load:,})")
+                  f"{abs(d.count_delta)/dt:,.0f} changes/s)")
+        return
+
+    # static count — host-local or on the device mesh
+    session = GraphSession(g.edges, local=(args.mode == "static"),
+                           batch=args.batch)
+    t0 = time.time()
+    handle = session.register(args.query, symmetric=args.symmetric)
+    t_reg = time.time() - t0
+    t0 = time.time()
+    count = handle.count()
+    where = "host-local" if session.local else f"w={session.w} mesh"
+    print(f"BiGJoin: {count:,} results in {time.time()-t0:.2f}s "
+          f"({where}, register {t_reg:.2f}s)")
 
 
 if __name__ == "__main__":

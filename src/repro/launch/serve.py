@@ -8,17 +8,18 @@ with a KV cache::
     python -m repro.launch.serve --arch gemma2-2b --batch 4 --steps 32
 
 **Streaming subgraph monitoring** (the paper's deployment, §5.3): load a
-graph, then run the distributed Delta-BiGJoin epoch loop
-``normalize -> dAQ_1..dAQ_n -> commit`` on the local device mesh as edge
-updates stream in::
+graph into a :class:`repro.api.GraphSession`, register one or more standing
+queries, then run the Delta-BiGJoin epoch loop ``normalize ->
+dAQ_1..dAQ_n (every query) -> commit`` as edge updates stream in::
 
-    python -m repro.launch.serve --stream --query triangle --scale 10 \
-        --epochs 12 --batch-size 512
+    python -m repro.launch.serve --stream --query triangle,diamond \
+        --scale 10 --epochs 12 --batch-size 512
 
 Every epoch applies one mixed insert/delete batch from
-``data.synthetic.EdgeUpdateStream`` through ``DistDeltaBigJoin`` (all local
-devices are mesh workers; ``--local`` falls back to the host engine) and
-reports per-epoch latency and update/output-change throughput.
+``data.synthetic.EdgeUpdateStream`` through the session — all registered
+queries ride the SAME shared index regions and the same single commit (all
+local devices are mesh workers; ``--local`` keeps the session on the host)
+— and reports per-epoch latency and update/output-change throughput.
 """
 from __future__ import annotations
 
@@ -31,58 +32,73 @@ import numpy as np
 
 
 def serve_stream(args):
-    from repro.core import query as Q
-    from repro.core.csr import Graph
-    from repro.core.distributed import make_delta_monitor
+    from repro.api import Graph, GraphSession, oracle_count
     from repro.data.synthetic import EdgeUpdateStream, rmat_graph
 
     g = Graph.from_edges(rmat_graph(args.scale, args.edge_factor,
                                     seed=args.seed))
-    q = Q.PAPER_QUERIES[args.query]()
-    eng = make_delta_monitor(q, g.edges, local=args.local,
-                             batch=args.bprime,
-                             out_capacity=args.out_capacity,
-                             balance=args.balance)
-    mode = "host-local" if args.local else (
-        f"{jax.device_count()}-worker mesh"
-        + (" (balanced)" if args.balance else ""))
+    session = GraphSession(g.edges, local=args.local, balance=args.balance,
+                           batch=args.bprime,
+                           out_capacity=args.out_capacity,
+                           update_batch=args.batch_size)
+    names = [n.strip() for n in args.query.split(",") if n.strip()]
+    handles = [session.register(n) for n in names]
+    mode = "host-local" if session.local else (
+        f"{session.w}-worker mesh" + (" (balanced)" if args.balance else ""))
     stream = EdgeUpdateStream(g.num_vertices, args.batch_size,
                               insert_frac=args.insert_frac,
                               skew=args.stream_skew, seed=args.seed + 1)
-    print(f"monitoring {args.query} over {g.num_edges:,} edges on {mode}; "
-          f"{args.epochs} epochs x {args.batch_size} updates")
+    print(f"monitoring {', '.join(names)} over {g.num_edges:,} edges on "
+          f"{mode}; {args.epochs} epochs x {args.batch_size} updates "
+          "(one shared commit per epoch)")
 
-    total = 0
     times = []
+    noops = 0
     for step in range(args.epochs):
-        upd, wts = stream.batch_at(step, live=eng.edges)
+        upd, wts = stream.batch_at(step, live=session.edges)
         t0 = time.time()
-        res = eng.apply(upd, wts)
+        res = session.update(upd, wts)
         dt = max(time.time() - t0, 1e-9)  # no-op epochs can be ~0s
         times.append(dt)
-        total += res.count_delta
-        changes = 0 if res.weights is None else int(
-            np.abs(res.weights).sum())
-        print(f"  epoch {step}: {res.count_delta:+,} net "
+        noops += int(res.is_noop)
+        parts = []
+        changes = 0
+        for h in handles:
+            d = res.deltas[h.name]
+            chg = 0 if d.weights is None else int(np.abs(d.weights).sum())
+            changes += chg
+            parts.append(f"{h.name} {d.count_delta:+,}")
+        print(f"  epoch {step}: {'  '.join(parts)} "
               f"({changes:,} changes) in {dt*1e3:.0f} ms — "
               f"{upd.shape[0]/dt:,.0f} upd/s, {changes/dt:,.0f} changes/s")
     warm = times[2:] or times
+    st = session.stats
     print(f"steady state: {np.median(warm)*1e3:.0f} ms/epoch, "
-          f"{args.batch_size/np.median(warm):,.0f} upd/s; "
-          f"net instance change {total:+,}")
+          f"{args.batch_size/np.median(warm):,.0f} upd/s; net "
+          + " ".join(f"{h.name} {h.net_change:+,}" for h in handles)
+          + f"; {st.commit_calls} commits / {st.normalize_calls} "
+          f"normalizes over {st.epochs} epochs")
 
     if args.verify:
-        from repro.core.generic_join import generic_join
-        ref = generic_join(q, {Q.EDGE: eng.edges},
-                           enumerate_results=False)[1]
-        ref0 = generic_join(q, {Q.EDGE: g.edges},
-                            enumerate_results=False)[1]
-        if total != ref - ref0:  # not assert: must survive python -O
+        for h in handles:
+            ref = oracle_count(h.query, session.edges)
+            ref0 = oracle_count(h.query, g.edges)
+            if h.net_change != ref - ref0:  # not assert: survives python -O
+                raise RuntimeError(
+                    f"{h.name}: maintained total {h.net_change} != "
+                    f"recompute diff {ref - ref0}")
+            print(f"verified {h.name}: maintained total == recompute diff "
+                  f"({ref:,} instances now) ✓")
+        # one normalize per update, one commit per NON-no-op epoch,
+        # regardless of how many standing queries are registered
+        if st.normalize_calls != args.epochs or \
+                st.commit_calls != args.epochs - noops or \
+                st.commit_calls != st.epochs:
             raise RuntimeError(
-                f"maintained total {total} != recompute diff {ref - ref0}")
-        print(f"verified: maintained total == recompute diff "
-              f"({ref:,} instances now) ✓")
-    return total
+                f"epoch contract violated: {st.commit_calls} commits / "
+                f"{st.normalize_calls} normalizes for {args.epochs} "
+                f"updates ({noops} no-ops)")
+    return sum(h.net_change for h in handles)
 
 
 def serve_lm(args):
@@ -147,7 +163,8 @@ def main(argv=None):
                     help="serve a streaming subgraph monitor instead of an "
                     "LM (distributed Delta-BiGJoin epoch loop)")
     ap.add_argument("--query", default="triangle",
-                    help="paper query to monitor (stream mode)")
+                    help="comma list of named queries to monitor on ONE "
+                    "shared session (stream mode)")
     ap.add_argument("--scale", type=int, default=10,
                     help="rmat scale of the base graph (stream mode)")
     ap.add_argument("--edge-factor", type=int, default=8)

@@ -1,0 +1,364 @@
+"""GraphSession facade lockdown: pattern DSL, shared-store epoch contract,
+multi-query differential vs independent engines, and compile-cache hits.
+
+The acceptance bar (ISSUE 3): with 4 standing queries registered,
+``session.update`` performs exactly ONE normalize/commit per epoch and ZERO
+recompilations after warmup, with every query's signed output delta
+bit-exact against an independently-maintained engine.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (GraphSession, PatternSyntaxError, oracle_count,
+                       parse_pattern, pattern_of, query_by_name)
+from repro.core import query as Q
+from repro.core.bigjoin import BigJoinConfig, _compiled_fns
+from repro.core.delta import DeltaBigJoin, RegionStore
+
+from tests.test_delta import canon
+from tests.test_delta_stream import random_batch
+
+CFG = BigJoinConfig(batch=128, seed_chunk=128, out_capacity=1 << 15)
+
+
+def _start_edges(nv, ne, seed):
+    from repro.data.synthetic import uniform_graph
+    return uniform_graph(nv, ne, seed)
+
+
+def _local_session(edges, **kw):
+    kw.setdefault("batch", 128)
+    kw.setdefault("out_capacity", 1 << 15)
+    return GraphSession(edges, local=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# pattern DSL
+# ---------------------------------------------------------------------------
+
+NAMED = ["triangle", "4-clique", "5-clique", "diamond", "house",
+         "4-clique-tri"]
+
+
+@pytest.mark.parametrize("name", NAMED)
+def test_dsl_round_trip_equals_builder(name):
+    q = query_by_name(name)
+    assert parse_pattern(pattern_of(q)) == q
+
+
+@pytest.mark.parametrize("name", ["triangle", "4-clique", "house"])
+def test_dsl_round_trip_symmetric(name):
+    q = query_by_name(name, symmetric=True)
+    assert parse_pattern(pattern_of(q)) == q
+
+
+def test_dsl_explicit_triangle_text():
+    q = parse_pattern("triangle(a, b, c) := e(a, b), e(a, c), e(b, c)")
+    assert q == Q.triangle()
+
+
+def test_dsl_ternary_relation_and_filters():
+    q = parse_pattern(
+        "4-clique-tri(a,b,c,d) := tri(a,b,c), tri(a,b,d), tri(a,c,d)")
+    assert q == Q.four_clique_tri()
+    f = parse_pattern("t(a,b,c) := e(a,b), e(a,c), e(b,c), a < b, b < c")
+    assert f.filters == (Q.Filter(0, 1), Q.Filter(1, 2))
+
+
+def test_dsl_unbound_variable_rejected():
+    with pytest.raises(ValueError, match="unbound variable 'd'"):
+        parse_pattern("t(a,b,c) := e(a,b), e(b,d)")
+    with pytest.raises(ValueError, match="unbound variable"):
+        parse_pattern("t(a,b) := e(a,b), a < z")
+
+
+def test_dsl_arity_mismatch_rejected():
+    with pytest.raises(ValueError, match="arity mismatch"):
+        parse_pattern("t(a,b,c) := tri(a,b,c), tri(a,b)")
+    with pytest.raises(ValueError, match="arity mismatch"):
+        parse_pattern("t(a,b,c) := e(a,b,c)")
+
+
+def test_dsl_syntax_errors():
+    for bad in ("tri(a,b,c)", "(a,b) := e(a,b)", "t(a,b) := e(a,b",
+                "t(a,a) := e(a,a)", "t() := e(a,b)", "t(a,b) := "):
+        with pytest.raises(ValueError):
+            parse_pattern(bad)
+
+
+def test_dsl_uncovered_head_attr_rejected():
+    with pytest.raises(ValueError, match="every attribute"):
+        parse_pattern("t(a,b,c) := e(a,b)")
+
+
+def test_query_by_name_aliases():
+    assert query_by_name("four_clique") == Q.four_clique()
+    assert query_by_name("TRIANGLE") == Q.triangle()
+    assert query_by_name("tri") == Q.triangle()
+    assert query_by_name("path-3") == Q.path(3)
+    with pytest.raises(KeyError):
+        query_by_name("nonagon")
+    with pytest.raises(ValueError, match="no symmetric"):
+        query_by_name("diamond", symmetric=True)
+    with pytest.raises(ValueError, match="no symmetric"):
+        query_by_name("path-3", symmetric=True)
+
+
+# ---------------------------------------------------------------------------
+# session basics: static eval, registration reuse, subscriptions
+# ---------------------------------------------------------------------------
+
+def test_static_count_and_enumerate_match_oracle():
+    e = _start_edges(30, 260, 0)
+    sess = _local_session(e)
+    tri = sess.register("triangle")
+    ref = oracle_count("triangle", e)
+    assert tri.count() == ref
+    t, w = tri.enumerate()
+    assert int(w.sum()) == ref
+    assert canon(t, w) == canon(*_enumerate_oracle(Q.triangle(), e))
+
+
+def _enumerate_oracle(q, edges):
+    from repro.core.generic_join import generic_join
+    t, _ = generic_join(q, {Q.EDGE: edges})
+    t = np.unique(np.asarray(t, np.int32).reshape(-1, q.num_attrs), axis=0)
+    return t, np.ones(t.shape[0], np.int32)
+
+
+def test_register_same_name_returns_same_handle():
+    sess = _local_session(_start_edges(20, 80, 1))
+    a = sess.register("triangle")
+    b = sess.register("triangle")
+    assert a is b
+    with pytest.raises(ValueError, match="different pattern"):
+        sess.register("diam(a,b,c,d) := e(a,b), e(b,c), e(d,a), e(d,c)",
+                      name="triangle")
+    assert sess.query_by_name("triangle") is a
+
+
+def test_registered_queries_share_region_objects():
+    """Satellite: repeated registrations reuse _Regions projections instead
+    of re-deriving them — same store, same region OBJECTS, no copies."""
+    sess = _local_session(_start_edges(20, 120, 2))
+    tri = sess.register("triangle")
+    # engines (and their projections) build lazily: registration alone
+    # touches no regions, so a static-only handle pays nothing extra
+    assert not sess.store.projections
+    tri.engine  # force the standing engine
+    ids_before = {k: id(v) for k, v in sess.store.projections.items()}
+    assert ids_before
+    clique = sess.register("4-clique")
+    clique.engine
+    # triangle's projections were reused untouched (same objects)...
+    for k, i in ids_before.items():
+        assert id(sess.store.projections[k]) == i
+    # ...and both engines resolve through the ONE shared store
+    assert tri.engine.store is clique.engine.store is sess.store
+    # a second same-shape registration creates no new projections at all
+    n = len(sess.store.projections)
+    sess.register("tri2(x,y,z) := e(x,y), e(x,z), e(y,z)").engine
+    assert len(sess.store.projections) == n
+
+
+def test_lazy_engine_first_update_is_exact():
+    """An engine built lazily INSIDE the first update must see the staged
+    batch: projections are created before begin_epoch (ordering contract)."""
+    nv = 20
+    e = _start_edges(nv, 110, 13)
+    sess = _local_session(e)
+    sess.register("triangle")  # no engine, no projections yet
+    ref = DeltaBigJoin(query_by_name("triangle"), e, cfg=CFG)
+    rng = np.random.default_rng(14)
+    upd, w = random_batch(rng, nv, sess.edges, 12)
+    res = sess.update(upd, w)
+    want = ref.apply(upd, w)
+    assert canon(res.deltas["triangle"].tuples,
+                 res.deltas["triangle"].weights) == \
+        canon(want.tuples, want.weights)
+
+
+def test_subscription_and_noop_epoch():
+    e = _start_edges(25, 150, 3)
+    sess = _local_session(e)
+    tri = sess.register("triangle")
+    got = []
+    tri.subscribe(lambda epoch, res: got.append((epoch, res.count_delta)))
+    commits0 = sess.stats.commit_calls
+    # net-zero batch: +1 then -1 on a live edge — an exact no-op epoch
+    live = sess.edges[:1]
+    res = sess.update(np.concatenate([live, live]),
+                      np.array([1, -1], np.int32))
+    assert res.is_noop and res.deltas["triangle"].count_delta == 0
+    assert sess.stats.commit_calls == commits0  # no-op commits nothing
+    upd = np.array([[1, 2], [2, 3], [3, 1]], np.int32)
+    sess.update(upd)
+    assert len(got) == 2 and got[0][1] == 0
+    assert tri.net_change == got[1][1]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: 4 standing queries, one commit, zero recompiles,
+# bit-exact vs independent engines
+# ---------------------------------------------------------------------------
+
+FOUR = ("triangle", "diamond", "4-clique", "house")
+
+
+def test_four_standing_queries_one_commit_bitexact_no_recompile():
+    nv, ne, epochs = 24, 170, 8
+    e = _start_edges(nv, ne, 4)
+    sess = _local_session(e)
+    handles = [sess.register(n) for n in FOUR]
+    independents = {n: DeltaBigJoin(query_by_name(n), e, cfg=CFG)
+                    for n in FOUR}
+    rng = np.random.default_rng(7)
+
+    jit_sizes = None
+    for step in range(epochs):
+        upd, w = random_batch(rng, nv, sess.edges, 14)
+        before = (sess.stats.normalize_calls, sess.stats.commit_calls)
+        res = sess.update(upd, w)
+        # exactly one normalize and AT MOST one commit (zero on no-ops),
+        # regardless of 4 standing queries
+        assert sess.stats.normalize_calls == before[0] + 1
+        assert sess.stats.commit_calls in (before[1], before[1] + 1)
+        for n in FOUR:
+            ref = independents[n].apply(upd, w)
+            assert canon(res.deltas[n].tuples, res.deltas[n].weights) == \
+                canon(ref.tuples, ref.weights), (n, step)
+            np.testing.assert_array_equal(sess.edges, independents[n].edges)
+        if step == 2:  # warmup done: snapshot every jitted fn's cache
+            jit_sizes = _session_jit_sizes(sess)
+    # zero recompilations after warmup: same jitted fns, same cache sizes
+    assert jit_sizes, "warmup snapshot missing"
+    assert _session_jit_sizes(sess) == jit_sizes
+    # and the totals stand up to full recomputation
+    for h in handles:
+        ref = oracle_count(h.query, sess.edges) - oracle_count(h.query, e)
+        assert h.net_change == ref, (h.name, h.net_change, ref)
+
+
+def _session_jit_sizes(sess):
+    """(plan, cfg) -> executable-cache sizes for every compiled dataflow the
+    session's standing queries use.  ``_compiled_fns`` is lru-cached, so
+    identical (plan, cfg) hits the same jitted callables; their
+    ``_cache_size`` growing would mean a re-trace/re-compile."""
+    sizes = {}
+    for h in sess.handles.values():
+        for pi, plan in enumerate(h.engine.plans):
+            step, seed_step = _compiled_fns(plan, h.engine.cfg)
+            key = (h.name, pi)
+            if hasattr(step, "_cache_size"):
+                sizes[key] = (step._cache_size(), seed_step._cache_size())
+            else:  # pragma: no cover - older jax
+                sizes[key] = (0, 0)
+    return sizes
+
+
+def test_mid_stream_registration_is_consistent():
+    """A query registered AFTER some epochs sees the live graph: its static
+    count is exact at registration and its deltas are exact afterwards."""
+    nv = 20
+    e = _start_edges(nv, 110, 6)
+    sess = _local_session(e)
+    sess.register("triangle")
+    rng = np.random.default_rng(8)
+    for step in range(3):
+        upd, w = random_batch(rng, nv, sess.edges, 10)
+        sess.update(upd, w)
+    mid = sess.edges.copy()
+    diam = sess.register("diamond")
+    assert diam.count() == oracle_count("diamond", mid)
+    for step in range(3):
+        upd, w = random_batch(rng, nv, sess.edges, 10)
+        sess.update(upd, w)
+    want = oracle_count("diamond", sess.edges) - oracle_count("diamond", mid)
+    assert diam.net_change == want
+
+
+@pytest.mark.parametrize("w", [2])
+def test_mesh_session_matches_local(w):
+    """One mesh-backed session (w workers), two standing queries, exact vs
+    the host-local session on the same stream."""
+    import jax
+    if jax.device_count() < w:
+        pytest.skip(f"needs {w} devices (CI runs with 4 virtual devices)")
+    nv = 18
+    e = _start_edges(nv, 100, 9)
+    from tests.test_delta_stream import _mesh
+    mesh_sess = GraphSession(e, mesh=_mesh(w), batch=128,
+                             out_capacity=1 << 15)
+    local_sess = _local_session(e)
+    for s in (mesh_sess, local_sess):
+        s.register("triangle")
+        s.register("diamond")
+    assert not mesh_sess.local and mesh_sess.w == w
+    assert mesh_sess["triangle"].count() == \
+        local_sess["triangle"].count() == oracle_count("triangle", e)
+    rng = np.random.default_rng(10)
+    for step in range(4):
+        upd, wts = random_batch(rng, nv, local_sess.edges, 10)
+        a = mesh_sess.update(upd, wts)
+        b = local_sess.update(upd, wts)
+        for n in ("triangle", "diamond"):
+            assert canon(a.deltas[n].tuples, a.deltas[n].weights) == \
+                canon(b.deltas[n].tuples, b.deltas[n].weights), (n, step)
+        np.testing.assert_array_equal(mesh_sess.edges, local_sess.edges)
+
+
+def test_mesh_session_program_cache_stable():
+    """Distributed program builds stop after warmup: later epochs and
+    re-registrations hit the (plan, config, mesh) cache."""
+    import jax
+    from repro.core import distributed as D
+    nv = 16
+    e = _start_edges(nv, 90, 11)
+    from tests.test_delta_stream import _mesh
+    sess = GraphSession(e, mesh=_mesh(1), batch=128, out_capacity=1 << 15)
+    sess.register("triangle")
+    rng = np.random.default_rng(12)
+    for step in range(2):
+        upd, w = random_batch(rng, nv, sess.edges, 8)
+        sess.update(upd, w)
+    builds = D._PROGRAM_BUILDS
+    for step in range(3):
+        upd, w = random_batch(rng, nv, sess.edges, 8)
+        sess.update(upd, w)
+    assert D._PROGRAM_BUILDS == builds
+
+
+# ---------------------------------------------------------------------------
+# facade purity: examples and CLIs import only repro.api (+ repro.data)
+# ---------------------------------------------------------------------------
+
+def test_examples_and_clis_import_only_the_facade():
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..")
+    targets = [
+        os.path.join(root, "examples", "quickstart.py"),
+        os.path.join(root, "examples", "incremental_motifs.py"),
+        os.path.join(root, "src", "repro", "launch", "run_query.py"),
+    ]
+    for path in targets:
+        src = open(path).read()
+        assert "repro.core" not in src and "repro.distributed" not in src, \
+            f"{os.path.basename(path)} bypasses repro.api"
+        assert "repro.api" in src
+    # serve.py: the stream path must go through the facade
+    serve = open(os.path.join(root, "src", "repro", "launch",
+                              "serve.py")).read()
+    stream_body = serve.split("def serve_stream", 1)[1].split("def ", 1)[0]
+    assert "repro.api" in stream_body
+    assert "repro.core" not in stream_body
+
+
+def test_auto_sizing_respects_agm():
+    from repro.api import auto_sizing
+    s_tri = auto_sizing(Q.triangle(), 1 << 14, num_workers=1)
+    s_clq = auto_sizing(Q.five_clique(), 1 << 14, num_workers=1)
+    assert s_tri.batch >= 256 and s_tri.out_capacity >= 1 << 14
+    # denser query, larger worst-case output => no smaller capacities
+    assert s_clq.out_capacity >= s_tri.out_capacity
+    s_w4 = auto_sizing(Q.triangle(), 1 << 14, num_workers=4)
+    assert s_w4.batch <= s_tri.batch  # B' splits across workers
