@@ -1,0 +1,117 @@
+"""Warm epoch latency vs graph scale -> BENCH_epoch_latency.json.
+
+The device-resident store's claim (DESIGN.md §6): steady-state epoch cost is
+a function of |Δ| + |committed|, not |E| — normalize is an O(|Δ|·log|E|)
+probe and commit folds only the committed regions and the delta, so warm
+latency at a fixed batch size should be nearly flat in graph scale, where
+the legacy host store rescans the live set.
+
+This benchmark isolates the store path (normalize → begin_epoch → commit on
+a store with both edge projections ensured; no query dataflow rides along)
+at a fixed 64-update batch over |E| ∈ {1e4, 1e5, 1.6e5, 1e6}, with the
+update batches pre-generated so the timed loop is exactly the epoch work.
+The 1.6e5 point exists so the acceptance ratio is a clean 16× span from
+1e4: the device path must grow < 2× in warm latency across it (the legacy
+host path is recorded alongside for contrast, not gated).
+
+Run via ``python -m benchmarks.run --only epoch_latency`` (or directly).
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_epoch_latency.json")
+
+SCALES = [10_000, 100_000, 160_000, 1_000_000]
+BASE, SIXTEEN_X = 10_000, 160_000
+BATCH = 64
+WARMUP, EPOCHS = 4, 16
+
+
+def _graph(ne: int):
+    from repro.data.synthetic import uniform_graph
+    nv = max(ne // 8, 64)  # mean degree ~8 at every scale
+    # oversample: uniform_graph dedups, so ask for ~8% extra edges
+    return nv, uniform_graph(nv, int(ne * 1.08), seed=ne % 97)
+
+
+def _batches(nv, edges, n_epochs):
+    """Pre-generate the update stream + its live-set evolution so the timed
+    loop contains ONLY store work.  The untimed tracker store replays the
+    exact normalize/commit semantics the timed stores will see (same
+    pattern as benchmarks/multi_query.py)."""
+    from repro.core.delta import RegionStore
+    from repro.data.synthetic import EdgeUpdateStream
+    stream = EdgeUpdateStream(nv, BATCH, seed=3)
+    tracker = RegionStore(edges, device_resident=False)  # no projections
+    out = []
+    for step in range(n_epochs):
+        upd, w = stream.batch_at(step, live=tracker.edges)
+        out.append((upd, w))
+        ins, dels = tracker.normalize(upd, w)
+        if ins.size or dels.size:
+            tracker.begin_epoch(ins, dels)
+            tracker.commit(ins, dels)
+    return out
+
+
+def _time_store(edges, batches, device: bool):
+    from repro.core.delta import RegionStore
+    store = RegionStore(edges, device_resident=device)
+    store.ensure("edge", (0,), 1)
+    store.ensure("edge", (1,), 0)
+    lat = []
+    for upd, w in batches:
+        t0 = time.time()
+        ins, dels = store.normalize(upd, w)
+        if ins.size or dels.size:
+            store.begin_epoch(ins, dels)
+            store.commit(ins, dels)
+        lat.append(time.time() - t0)
+    warm = sorted(lat[WARMUP:])
+    return warm[len(warm) // 2] * 1e3, [round(t * 1e3, 3) for t in lat], \
+        store.stats
+
+
+def main():
+    rec = {"bench": "epoch_latency", "batch_size": BATCH,
+           "warmup": WARMUP, "epochs": EPOCHS, "scales": {}}
+    med = {}
+    for ne in SCALES:
+        nv, edges = _graph(ne)
+        batches = _batches(nv, edges, WARMUP + EPOCHS)
+        entry = {"edges": int(edges.shape[0]), "num_vertices": nv}
+        for device in (True, False):
+            name = "device" if device else "legacy"
+            m, per_epoch, stats = _time_store(edges, batches, device)
+            entry[f"{name}_warm_ms"] = round(m, 3)
+            entry[f"{name}_epoch_ms"] = per_epoch
+            entry[f"{name}_compactions"] = stats.compactions
+            med[(name, ne)] = m
+            row("epoch_latency", f"{name}_E{ne}", m / 1e3,
+                f"|E|={edges.shape[0]} warm_ms={m:.2f}")
+        rec["scales"][str(ne)] = entry
+    growth = {
+        "span": f"{BASE}->{SIXTEEN_X} (16x |E|)",
+        "device": round(med[("device", SIXTEEN_X)]
+                        / max(med[("device", BASE)], 1e-9), 3),
+        "legacy": round(med[("legacy", SIXTEEN_X)]
+                        / max(med[("legacy", BASE)], 1e-9), 3),
+    }
+    rec["growth_16x"] = growth
+    rec["device_growth_lt_2x"] = bool(growth["device"] < 2.0)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    row("epoch_latency", "growth_16x_device", 0.0,
+        f"{growth['device']}x (<2x: {rec['device_growth_lt_2x']})")
+    row("epoch_latency", "json", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,19 +40,18 @@ def _canon(t, w):
 def _batches(live0):
     """The same deterministic update sequence for both arrangements (one
     tracker store replays the live-set evolution the engines will see)."""
-    from repro.core.delta import RegionStore, _diff_rows
+    from repro.core.delta import RegionStore
     from repro.data.synthetic import EdgeUpdateStream
     stream = EdgeUpdateStream(NV, BATCH_SIZE, seed=11)
-    tracker = RegionStore(live0)
+    # host store: pure untimed bookkeeping, no fold compilation
+    tracker = RegionStore(live0, device_resident=False)
     out = []
     for step in range(EPOCHS):
         upd, w = stream.batch_at(step, live=tracker.edges)
         ins, dels = tracker.normalize(upd, w)
-        if ins.size:
-            tracker.edges = np.unique(
-                np.concatenate([tracker.edges, ins]), axis=0)
-        if dels.size:
-            tracker.edges = _diff_rows(tracker.edges, dels)
+        if ins.size or dels.size:
+            tracker.begin_epoch(ins, dels)
+            tracker.commit(ins, dels)
         out.append((upd, w))
     return out
 

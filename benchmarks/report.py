@@ -105,6 +105,23 @@ def render_delta_stream(path):
               f"| {r['all_exact']} |")
 
 
+def render_epoch_latency(path):
+    """Render a BENCH_epoch_latency.json warm-epoch-scaling record."""
+    rec = json.load(open(path))
+    print(f"batch={rec['batch_size']} updates/epoch, "
+          f"{rec['epochs']} warm epochs (median)\n")
+    print("| |E| | device warm ms | legacy warm ms | device/legacy |")
+    print("|" + "---|" * 4)
+    for ne, r in sorted(rec.get("scales", {}).items(), key=lambda kv:
+                        int(kv[0])):
+        d, l = r["device_warm_ms"], r["legacy_warm_ms"]
+        print(f"| {r['edges']:,} | {d} | {l} | {d / max(l, 1e-9):.2f}x |")
+    g = rec.get("growth_16x", {})
+    print(f"\ngrowth over {g.get('span', '?')}: device {g.get('device')}x, "
+          f"legacy {g.get('legacy')}x "
+          f"(acceptance <2x: {rec.get('device_growth_lt_2x')})")
+
+
 def render_multi_query(path):
     """Render a BENCH_multi_query.json shared-session record."""
     rec = json.load(open(path))
@@ -129,5 +146,7 @@ if __name__ == "__main__":
             render_delta_stream(p)
         elif "BENCH_multi_query" in p:
             render_multi_query(p)
+        elif "BENCH_epoch_latency" in p:
+            render_epoch_latency(p)
         else:
             render(p)

@@ -13,12 +13,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4,"
-                    "intersect,delta_stream,multi_query")
+                    "intersect,delta_stream,multi_query,epoch_latency")
     args = ap.parse_args()
 
     from benchmarks import (baseline_compare, batch_size, cost_table,
-                            delta_stream, intersect_bench, multi_query,
-                            optimizations, scaling, throughput)
+                            delta_stream, epoch_latency, intersect_bench,
+                            multi_query, optimizations, scaling, throughput)
     table = {
         "fig4": cost_table.main,
         "tab2_3": baseline_compare.main,
@@ -29,6 +29,7 @@ def main() -> None:
         "intersect": intersect_bench.main,  # -> BENCH_intersect.json
         "delta_stream": delta_stream.main,  # -> BENCH_delta_stream.json
         "multi_query": multi_query.main,  # -> BENCH_multi_query.json
+        "epoch_latency": epoch_latency.main,  # -> BENCH_epoch_latency.json
     }
     picks = list(table) if args.only == "all" else args.only.split(",")
     print("table,name,us_per_call,derived")

@@ -91,6 +91,16 @@ class EpochResult:
     def is_noop(self) -> bool:
         return self.ins.size == 0 and self.dels.size == 0
 
+    def advance(self, live: np.ndarray) -> np.ndarray:
+        """Advance a host live-edge array by this epoch's normalized delta
+        (np.unique row order, same as ``session.edges``) — lets stream
+        drivers track the live set without pulling the device-resident
+        store's O(|E|) mirror every epoch."""
+        if self.is_noop:
+            return live
+        kept = _delta._diff_rows(live, self.dels)
+        return np.unique(np.concatenate([kept, self.ins]), axis=0)
+
 
 class QueryHandle:
     """One standing query registered on a :class:`GraphSession`.
@@ -162,6 +172,12 @@ class GraphSession:
     over the device mesh and runs the request/response dataflow of §3.4.
     Default (``local=None``): the mesh when more than one device (or an
     explicit ``mesh``) is available, the host engine otherwise.
+
+    Either way the session's RegionStore is DEVICE-RESIDENT by default
+    (DESIGN.md §6): one jitted normalize probe and one jitted sorted-merge
+    commit per epoch serve every registered query, with warm epoch cost
+    proportional to the delta, not the graph.  ``device_resident=False``
+    selects the legacy host-truth store (contrast benchmarks only).
     """
 
     def __init__(self, initial_edges: np.ndarray, *, local: bool = None,
@@ -169,7 +185,8 @@ class GraphSession:
                  batch: Optional[int] = None,
                  out_capacity: Optional[int] = None,
                  update_batch: int = 2048,
-                 compact_ratio: float = 0.5):
+                 compact_ratio: float = 0.5,
+                 device_resident: bool = True):
         import jax
         if local is None:
             local = mesh is None and jax.device_count() == 1
@@ -191,7 +208,7 @@ class GraphSession:
                 [mesh.shape[a] for a in mesh.axis_names]))
         self.store = _delta.RegionStore(
             initial_edges, shard_w=0 if self.local else self.w,
-            compact_ratio=compact_ratio)
+            compact_ratio=compact_ratio, device_resident=device_resident)
         self.handles: Dict[str, QueryHandle] = {}
         self.epoch = 0
         self._static_plans: Dict[Query, Plan] = {}
@@ -329,7 +346,7 @@ class GraphSession:
 
     @property
     def num_edges(self) -> int:
-        return int(self.store.edges.shape[0])
+        return int(self.store.num_edges)  # O(1): no mirror materialization
 
     @property
     def stats(self) -> _delta.StoreStats:

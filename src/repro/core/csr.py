@@ -18,14 +18,19 @@ Everything here is a pytree of jnp arrays, so indices shard with
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-# Sentinel keys larger than any real key (vertex ids < 2^31 - 1).
-SENTINEL = np.int64(2**62)
+# Sentinel keys strictly larger than any real key.  Wide (int64) keys pack
+# two int32 columns as a<<32|b with a, b < 2^31, so their maximum is below
+# int64-max and the int64 sentinel covers the FULL vertex-id range; narrow
+# (int32) keys use int32-max, so ids must stay < 2^31 - 1 (builds auto-widen
+# when they don't, and the store's id-domain guard rejects the boundary).
+SENTINEL = np.int64(np.iinfo(np.int64).max)
 SENTINEL32 = np.int32(2**31 - 1)
 
 # Canonical segment length of the two-level membership kernels (one VPU lane
@@ -78,11 +83,15 @@ def pack_key(cols: Tuple[np.ndarray, ...] | Tuple[jax.Array, ...]):
 
 
 def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
-                capacity: int | None = None) -> IndexData:
+                capacity: int | None = None,
+                narrow: bool | None = None) -> IndexData:
     """Build an IndexData from relation tuples [T, arity] (numpy, host).
 
     Projects to (key columns, ext column), dedups, sorts.  ``capacity``
-    (>= live size) allows preallocating room for future deltas.
+    (>= live size) allows preallocating room for future deltas.  ``narrow``
+    overrides the key-dtype choice — the device-resident region folds merge
+    deltas into long-lived indices, so both sides must agree on one dtype
+    decided once per projection, not per build.
     """
     tuples = np.asarray(tuples)
     if tuples.ndim != 2:
@@ -95,7 +104,8 @@ def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
     n = key.shape[0]
     cap = round_capacity(max(int(capacity or n), n, 1))
     # single-column keys fit int32 -> halve index bytes (perf: HBM traffic)
-    narrow = len(key_pos) <= 1 and (n == 0 or key.max() < SENTINEL32)
+    if narrow is None:
+        narrow = len(key_pos) <= 1 and (n == 0 or key.max() < SENTINEL32)
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
     out_k = np.full(cap, sent, kdt)
     out_v = np.zeros(cap, np.int32)
@@ -123,7 +133,8 @@ def _pow2_capacity(n: int) -> int:
 
 def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
                         ext_pos: int, num_shards: int,
-                        capacity: int | None = None) -> IndexData:
+                        capacity: int | None = None,
+                        narrow: bool | None = None) -> IndexData:
     """Hash-partition one extension index over ``num_shards`` workers.
 
     Returns an IndexData whose arrays carry a leading [w] worker axis
@@ -151,7 +162,9 @@ def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
     counts = np.bincount(own, minlength=w).astype(np.int64)
     cmax = int(counts.max()) if counts.size else 0
     cap = max(_pow2_capacity(cmax), round_capacity(int(capacity or 1)))
-    narrow = len(key_pos) <= 1 and (key.size == 0 or key.max() < SENTINEL32)
+    if narrow is None:
+        narrow = len(key_pos) <= 1 and (key.size == 0
+                                        or key.max() < SENTINEL32)
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
     out_k = np.full((w, cap), sent, kdt)
     out_v = np.zeros((w, cap), np.int32)
@@ -198,14 +211,18 @@ def index_kth(idx: IndexData, start: jax.Array, k: jax.Array) -> jax.Array:
 
 
 def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
-                     qk: jax.Array, qv: jax.Array) -> jax.Array:
-    """Lower bound of (qk,qv) in the lexicographically sorted (key,val) pairs.
+                     qk: jax.Array, qv: jax.Array,
+                     side: str = "left") -> jax.Array:
+    """Lower/upper bound of (qk,qv) in the lex-sorted (key,val) pairs.
 
     Fixed-depth binary search (depth = ceil(log2 capacity)), vectorized over
     the query batch; this is the pure-jnp oracle mirrored by the Pallas
-    ``intersect`` kernel.
+    ``intersect`` kernel.  ``side="left"`` returns the count of entries
+    strictly below each query, ``side="right"`` the count of entries <= it —
+    the two merge ranks of the device-resident region folds.
     """
     cap = key.shape[0]
+    right = side == "right"
     # +1: an interval of length 1 still needs one comparison to collapse
     depth = max(int(np.ceil(np.log2(max(cap, 2)))), 1) + 1
     lo = jnp.zeros(qk.shape, jnp.int32)
@@ -217,7 +234,10 @@ def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
         mid = (lo + hi) >> 1
         mk = key[jnp.clip(mid, 0, cap - 1)]
         mv = val[jnp.clip(mid, 0, cap - 1)]
-        less = (mk < qk) | ((mk == qk) & (mv < qv))
+        if right:
+            less = (mk < qk) | ((mk == qk) & (mv <= qv))
+        else:
+            less = (mk < qk) | ((mk == qk) & (mv < qv))
         lo = jnp.where(less & (lo < hi), mid + 1, lo)
         hi = jnp.where(~less & (lo < hi), mid, hi)
         return lo, hi
@@ -238,6 +258,117 @@ def index_member(idx: IndexData, qkey: jax.Array, qval: jax.Array
     pos_c = jnp.clip(pos, 0, idx.capacity - 1)
     hit = (idx.key[pos_c] == qkey) & (idx.val[pos_c] == qval.astype(jnp.int32))
     return hit & (pos < idx.n)
+
+
+# ---------------------------------------------------------------------------
+# Sorted-merge fold primitives (device-resident region maintenance).
+#
+# The incremental entry points of this module: instead of re-hashing and
+# re-sorting all rows (``build_index``), an existing device-resident
+# IndexData is updated by *rank-based sorted merge* against a sorted delta.
+# The only non-trivial step is computing, for each entry of one set, its
+# rank in the other (count of entries lexicographically < / <= it); with
+# both ranks union/diff/intersect are pure static-shape scatters:
+#
+#     merge position of a[i] in a ∪ b  =  i + |{kept b < a[i]}|
+#     merge position of b[j] in a ∪ b  =  |{a < b[j]}| + |{kept b before j}|
+#     a[i] ∈ b                         ⇔  |{b <= a[i]}| > |{b < a[i]}|
+#
+# Cost is O((|a|+|b|)·log), i.e. proportional to the operands — the commit
+# folds of `core/delta.py` only ever pass the committed regions and the
+# update delta here, never the compacted base, which is how warm epoch cost
+# stays a function of |Δ| + |committed| instead of |E|.
+# ---------------------------------------------------------------------------
+
+def index_ranks(a: IndexData, qk: jax.Array, qv: jax.Array,
+                use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """(lt, le) int32 [B]: entries of ``a`` lexicographically < / <= each
+    (qk, qv) query.  ``use_kernel`` routes through the Pallas rank kernel
+    (`kernels/merge`); the default is the two fixed-depth jnp searches."""
+    qk = qk.astype(a.key.dtype)
+    qv = qv.astype(jnp.int32)
+    if use_kernel:
+        from repro.kernels.merge.ops import rank_lt_le
+        return rank_lt_le(a.key, a.val, a.n, qk, qv)
+    lt = lex_searchsorted(a.key, a.val, a.n, qk, qv, side="left")
+    le = lex_searchsorted(a.key, a.val, a.n, qk, qv, side="right")
+    return lt, le
+
+
+def _empty_like_caps(key_dtype, capacity: int) -> Tuple[jax.Array, jax.Array]:
+    sent = SENTINEL32 if key_dtype == jnp.int32 else SENTINEL
+    return (jnp.full(capacity, sent, key_dtype),
+            jnp.zeros(capacity, jnp.int32))
+
+
+def _merge_core(a: IndexData, b: IndexData, capacity: int,
+                use_kernel: bool = False) -> IndexData:
+    """Sorted union a ∪ b into a fresh IndexData of static ``capacity``.
+
+    Both operands are deduped lex-sorted (the IndexData invariant); entries
+    present in both appear once (a's copy wins).  capacity must be
+    >= |a| + |b| in the worst case; overflowing entries would be dropped,
+    so callers size it from exact live counts."""
+    cap = int(capacity)
+    ii = jnp.arange(a.capacity, dtype=jnp.int32)
+    jj = jnp.arange(b.capacity, dtype=jnp.int32)
+    a_live = ii < a.n
+    b_live = jj < b.n
+    lt_a, le_a = index_ranks(a, b.key, b.val, use_kernel)  # ranks of b in a
+    keep_b = b_live & ~(le_a > lt_a)
+    kept_cum = jnp.cumsum(keep_b.astype(jnp.int32))
+    kept_excl = kept_cum - keep_b.astype(jnp.int32)
+    pos_b = jnp.where(keep_b, lt_a + kept_excl, cap)
+    lt_b, _ = index_ranks(b, a.key, a.val, use_kernel)  # ranks of a in b
+    # kept-b entries strictly below a[i] = prefix of keep_b over [0, lt_b)
+    below = jnp.where(lt_b > 0,
+                      kept_cum[jnp.clip(lt_b - 1, 0, b.capacity - 1)], 0)
+    pos_a = jnp.where(a_live, ii + below, cap)
+    out_k, out_v = _empty_like_caps(a.key.dtype, cap)
+    out_k = out_k.at[pos_a].set(a.key, mode="drop") \
+                 .at[pos_b].set(b.key.astype(a.key.dtype), mode="drop")
+    out_v = out_v.at[pos_a].set(a.val, mode="drop") \
+                 .at[pos_b].set(b.val, mode="drop")
+    n = a.n.astype(jnp.int32) + keep_b.sum(dtype=jnp.int32)
+    return IndexData(out_k, out_v, n)
+
+
+def _select_core(a: IndexData, b: IndexData, capacity: int, keep_in_b: bool,
+                 use_kernel: bool = False) -> IndexData:
+    """Compact the entries of ``a`` (not) in ``b`` into static ``capacity``:
+    keep_in_b=False is a \\ b (diff), True is a ∩ b (intersect)."""
+    cap = int(capacity)
+    ii = jnp.arange(a.capacity, dtype=jnp.int32)
+    lt, le = index_ranks(b, a.key, a.val, use_kernel)
+    in_b = le > lt
+    keep = (ii < a.n) & (in_b if keep_in_b else ~in_b)
+    cum = jnp.cumsum(keep.astype(jnp.int32))
+    pos = jnp.where(keep, cum - 1, cap)
+    out_k, out_v = _empty_like_caps(a.key.dtype, cap)
+    out_k = out_k.at[pos].set(a.key, mode="drop")
+    out_v = out_v.at[pos].set(a.val, mode="drop")
+    return IndexData(out_k, out_v, keep.sum(dtype=jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_kernel"))
+def merge_index(a: IndexData, b: IndexData, capacity: int,
+                use_kernel: bool = False) -> IndexData:
+    """Jitted sorted union (see `_merge_core`)."""
+    return _merge_core(a, b, capacity, use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_kernel"))
+def diff_index(a: IndexData, b: IndexData, capacity: int,
+               use_kernel: bool = False) -> IndexData:
+    """Jitted sorted difference a \\ b."""
+    return _select_core(a, b, capacity, False, use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_kernel"))
+def intersect_index(a: IndexData, b: IndexData, capacity: int,
+                    use_kernel: bool = False) -> IndexData:
+    """Jitted sorted intersection a ∩ b (probe-sized: O(|a|·log|b|))."""
+    return _select_core(a, b, capacity, True, use_kernel)
 
 
 # ---------------------------------------------------------------------------

@@ -24,14 +24,33 @@ regions never hold duplicates.  Compaction (merge committed into base) runs
 when the committed regions exceed ``compact_ratio`` × |base| — and eagerly in
 the rare re-insertion-of-committed-delete case, which would otherwise create
 a positive/negative overlap (see DESIGN.md §2).
+
+Region state is DEVICE-RESIDENT (DESIGN.md §6): the live edge set is a
+sorted packed-int64 device array maintained as its own three-region LSM,
+``normalize`` is a jitted searchsorted membership probe against it, and
+``commit`` is a jitted sorted-merge/diff fold (``csr.merge_index`` /
+``diff_index`` / ``intersect_index``) that touches only the committed
+regions and the delta — the compacted base is merged at (amortized)
+compaction only, so warm epoch cost is O(|Δ|·log|E| + |committed|) instead
+of the full-graph rescan the host path pays.  Host numpy arrays are a
+lazily-materialized debug mirror, pulled only by oracle/differential paths
+(``StoreStats.mirror_pulls`` counts the pulls).  ``device_resident=False``
+keeps the legacy host-truth store (with an incrementally-maintained packed
+live-edge cache) for contrast benchmarks.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
+import os
 from typing import Dict, List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import csr
 from repro.core.bigjoin import (BigJoinConfig, Indices, JoinResult,
                                 run_bigjoin)
 from repro.core.csr import IndexData, build_index
@@ -41,9 +60,44 @@ from repro.core.query import Query, delta_queries
 
 Projection = Tuple[str, Tuple[int, ...], int]  # (rel, key_pos, ext_pos)
 
+# With the strict flag every jitted device step of the store runs under
+# ``jax.transfer_guard("disallow")``: any host<->device copy on the warm
+# normalize/commit path raises instead of silently re-uploading an index.
+# The CI transfer-guard lane sets this for the delta-stream suites; the
+# delta-sized staging uploads and scalar count pulls happen OUTSIDE the
+# guarded scopes by construction (they are proportional to |Δ|, not |E|).
+STRICT_TRANSFERS = os.environ.get("REPRO_STRICT_TRANSFERS", "") not in ("",
+                                                                        "0")
+
+# Merge-rank kernel routing for the fold inner loop: None = compiled Pallas
+# on TPU / pure jnp elsewhere; True/False force.  The sharded (vmapped)
+# folds always use the jnp path.
+USE_MERGE_KERNEL: Optional[bool] = None
+
+
+def _merge_kernel_on() -> bool:
+    if USE_MERGE_KERNEL is None:
+        return jax.default_backend() == "tpu"
+    return bool(USE_MERGE_KERNEL)
+
+
+@contextlib.contextmanager
+def _device_scope():
+    if STRICT_TRANSFERS:
+        with jax.transfer_guard("disallow"):
+            yield
+    else:
+        yield
+
 
 def _pack2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return (a.astype(np.int64) << 32) | b.astype(np.int64)
+
+
+def _unpack2(packed: np.ndarray) -> np.ndarray:
+    packed = np.asarray(packed, np.int64)
+    return np.stack([(packed >> 32).astype(np.int32),
+                     (packed & 0xFFFFFFFF).astype(np.int32)], 1)
 
 
 def _pow2(n: int) -> int:
@@ -56,50 +110,285 @@ def _pow2(n: int) -> int:
     return _pow2_capacity(n)
 
 
+def _total(n) -> int:
+    return int(np.sum(n))
+
+
+def _maxn(n) -> int:
+    return int(np.max(n)) if np.ndim(np.asarray(n)) else int(n)
+
+
+def _count_of(d: IndexData):
+    """Exact live count(s) of a device region: int single-host, [w] int64
+    vector sharded.  One scalar/vector pull — never the index arrays."""
+    n = np.asarray(d.n)
+    return n.astype(np.int64) if n.ndim else int(n)
+
+
+# ---------------------------------------------------------------------------
+# jitted device cores (called by RegionStore under _device_scope; all
+# arguments are device arrays — no implicit transfers on the warm path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("sharded",))
+def _normalize_core(upd: jax.Array, w: jax.Array, base: IndexData,
+                    cins: IndexData, cdel: IndexData, sharded: bool = False):
+    """Net one padded update batch against the live LSM: (ins, n_ins,
+    dels, n_dels) as sentinel-padded sorted packed-int64 arrays.
+
+    upd [B,2] int32 / w [B] int32 (padding rows are self-loops with w=0);
+    base/cins/cdel: the store's packed live regions (IndexData, val≡0),
+    hash-partitioned over a leading [w] worker axis when ``sharded`` — a
+    key lives on exactly one shard, so membership is an OR over vmapped
+    per-shard probes and per-worker live memory stays O(|E|/w).
+    live = (base \\ cdel) ∪ cins under the commit invariants.
+    """
+    SENT = jnp.int64(csr.SENTINEL)
+    u, v = upd[:, 0], upd[:, 1]
+    valid = (u != v) & (w != 0)
+    p = jnp.where(valid, (u.astype(jnp.int64) << 32) | v.astype(jnp.int64),
+                  SENT)
+    order = jnp.argsort(p)
+    ps, ws = p[order], w[order]
+    first = jnp.concatenate([jnp.ones(1, bool), ps[1:] != ps[:-1]])
+    ids = jnp.cumsum(first.astype(jnp.int32)) - 1
+    net = jax.ops.segment_sum(ws.astype(jnp.int64), ids,
+                              num_segments=ps.shape[0])
+    uniq = jnp.full(ps.shape[0], SENT, jnp.int64).at[ids].set(ps)
+    zeros = jnp.zeros(ps.shape[0], jnp.int32)
+
+    def member(idx):
+        if sharded:
+            return jax.vmap(
+                lambda d: csr.index_member(d, uniq, zeros))(idx).any(0)
+        return csr.index_member(idx, uniq, zeros)
+
+    in_base = member(base)
+    in_cins = member(cins)
+    in_cdel = member(cdel)
+    exists = (in_base & ~in_cdel) | in_cins
+    alive = uniq < SENT
+    ins_m = alive & (net > 0) & ~exists
+    del_m = alive & (net < 0) & exists
+
+    def compact(mask):
+        cum = jnp.cumsum(mask.astype(jnp.int32))
+        pos = jnp.where(mask, cum - 1, mask.shape[0])
+        out = jnp.full(mask.shape[0], SENT, jnp.int64
+                       ).at[pos].set(uniq, mode="drop")
+        return out, mask.sum(dtype=jnp.int32)
+
+    oi, ni = compact(ins_m)
+    od, nd = compact(del_m)
+    return oi, ni, od, nd
+
+
+@functools.partial(jax.jit, static_argnames=("cins_cap", "cdel_cap",
+                                             "sharded", "use_kernel"))
+def _commit_fold(base: IndexData, cins: IndexData, cdel: IndexData,
+                 uins: IndexData, udel: IndexData, *, cins_cap: int,
+                 cdel_cap: int, sharded: bool, use_kernel: bool = False):
+    """The committed-region fold of one epoch, merged never rebuilt:
+
+        cins' = (cins \\ udel) ∪ (uins \\ cdel)
+        cdel' = cdel ∪ (udel ∩ base)
+
+    Touches only the committed regions and the delta — ``base`` is probed
+    (O(|Δ|·log|base|)), never scanned.  ``sharded`` vmaps the fold over the
+    leading worker axis: ownership is by packed key, so every merge is
+    shard-local and the distributed commit stays collective-free.
+    """
+    def fold(ba, ci, cd, ui, ud):
+        kept = csr._select_core(ci, ud, ci.capacity, False, use_kernel)
+        fresh = csr._select_core(ui, cd, ui.capacity, False, use_kernel)
+        new_cins = csr._merge_core(kept, fresh, cins_cap, use_kernel)
+        dead = csr._select_core(ud, ba, ud.capacity, True, use_kernel)
+        new_cdel = csr._merge_core(cd, dead, cdel_cap, use_kernel)
+        return new_cins, new_cdel
+
+    if sharded:
+        return jax.vmap(fold)(base, cins, cdel, uins, udel)
+    return fold(base, cins, cdel, uins, udel)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap", "sharded",
+                                             "use_kernel"))
+def _compact_fold(base: IndexData, cins: IndexData, cdel: IndexData, *,
+                  out_cap: int, sharded: bool, use_kernel: bool = False
+                  ) -> IndexData:
+    """base' = (base \\ cdel) ∪ cins — the amortized O(|base|) merge."""
+    def fold(ba, ci, cd):
+        kept = csr._select_core(ba, cd, ba.capacity, False, use_kernel)
+        return csr._merge_core(kept, ci, out_cap, use_kernel)
+
+    if sharded:
+        return jax.vmap(fold)(base, cins, cdel)
+    return fold(base, cins, cdel)
+
+
+@functools.partial(jax.jit, static_argnames=("sharded",))
+def _any_member(idx: IndexData, qk: jax.Array, qv: jax.Array,
+                sharded: bool = False) -> jax.Array:
+    """any((qk,qv) ∈ idx) — the eager re-insertion probe (delta-sized)."""
+    if sharded:
+        return jax.vmap(lambda d: csr.index_member(d, qk, qv))(idx).any()
+    return csr.index_member(idx, qk, qv).any()
+
+
+def _packed_index(rows: np.ndarray, shard_w: int = 0) -> IndexData:
+    """Packed-edge IndexData (key = src<<32|dst, val ≡ 0) from host rows —
+    only ever built for the initial graph and per-epoch deltas.  Delegates
+    to the csr builders over a zero ext column, so the sharded layout and
+    ownership (``csr.shard_of``) are THE SAME code path as the projections'
+    shards — the cross-structure shard agreement the distributed commit
+    folds rely on is not re-implemented here."""
+    rows3 = np.concatenate(
+        [np.asarray(rows, np.int32).reshape(-1, 2),
+         np.zeros((rows.shape[0], 1), np.int32)], axis=1)
+    if shard_w:
+        return csr.build_sharded_index(rows3, (0, 1), 2, shard_w,
+                                       narrow=False)
+    return csr.build_index(rows3, (0, 1), 2,
+                           capacity=_pow2(rows3.shape[0]), narrow=False)
+
+
+def _empty_packed(shard_w: int = 0) -> IndexData:
+    if not shard_w:
+        return csr.empty_index(narrow=False)
+    w = int(shard_w)
+    return IndexData(
+        jnp.full((w, csr.SEG), jnp.int64(csr.SENTINEL), jnp.int64),
+        jnp.zeros((w, csr.SEG), jnp.int32), jnp.zeros(w, jnp.int32))
+
+
+def _pad_probe(keys: np.ndarray, vals: np.ndarray, sent) -> Tuple:
+    B = _pow2(keys.shape[0])
+    k = np.full(B, sent, keys.dtype)
+    k[:keys.shape[0]] = keys
+    v = np.zeros(B, np.int32)
+    v[:vals.shape[0]] = vals
+    return jnp.asarray(k), jnp.asarray(v)
+
+
 @dataclasses.dataclass
 class _Regions:
-    """Host-truth + device mirrors of one projection's regions.
+    """Device truth of one projection's regions (+ optional mirrors).
 
-    With ``shard_w > 0`` the device mirrors are hash-partitioned over that
-    many mesh workers (``csr.build_sharded_index``): every region array
-    carries a leading [w] worker axis and each (key, val) entry is stored by
-    exactly one worker — the distributed engine's memory-linearity contract.
-    ``shard_w == 0`` keeps the single-host mirrors.
+    ``device_resident`` (default): ``d_base/d_cins/d_cdel`` ARE the state —
+    sorted device IndexData updated by the jitted folds above; ``base`` /
+    ``cins`` / ``cdel`` are lazily-materialized host mirrors for debug and
+    differential paths.  Legacy mode inverts this: ``_host`` numpy arrays
+    are the truth and ``refresh()`` rebuilds the device mirrors from them.
+
+    With ``shard_w > 0`` every region array carries a leading [w] worker
+    axis and each (key, val) entry is stored by exactly one worker
+    (``csr.build_sharded_index``) — the distributed engine's
+    memory-linearity contract; the folds vmap over the axis, so each worker
+    folds only its owned rows.
     """
 
     key_pos: Tuple[int, ...]
     ext_pos: int
-    base: np.ndarray  # [Nb, arity] tuples
-    cins: np.ndarray
-    cdel: np.ndarray
     shard_w: int = 0
+    device_resident: bool = True
+    narrow: bool = True
     d_base: IndexData = None
     d_cins: IndexData = None
     d_cdel: IndexData = None
     d_uins: IndexData = None
     d_udel: IndexData = None
-
-    def _build(self, tup: np.ndarray) -> IndexData:
-        rows = tup.reshape(-1, self.arity)
-        if self.shard_w:
-            from repro.core.csr import build_sharded_index
-            per = -(-max(rows.shape[0], 1) // self.shard_w)
-            return build_sharded_index(rows, self.key_pos, self.ext_pos,
-                                       self.shard_w, capacity=_pow2(per))
-        return build_index(rows, self.key_pos, self.ext_pos,
-                           capacity=_pow2(rows.shape[0]))
-
-    def refresh(self, which=("base", "cins", "cdel")):
-        for name in which:
-            setattr(self, "d_" + name, self._build(getattr(self, name)))
+    # exact live counts (host bookkeeping, pulled once per fold):
+    # ints single-host, [w] int64 vectors sharded
+    n_base: object = 0
+    n_cins: object = 0
+    n_cdel: object = 0
+    _host: dict = dataclasses.field(default_factory=dict)
+    _mirror: dict = dataclasses.field(default_factory=dict)
+    _store: object = None
 
     @property
     def arity(self) -> int:
         return max(max(self.key_pos, default=0), self.ext_pos) + 1
 
+    def _build(self, tup: np.ndarray) -> IndexData:
+        rows = np.asarray(tup).reshape(-1, self.arity)
+        if self.shard_w:
+            from repro.core.csr import build_sharded_index
+            per = -(-max(rows.shape[0], 1) // self.shard_w)
+            return build_sharded_index(rows, self.key_pos, self.ext_pos,
+                                       self.shard_w, capacity=_pow2(per),
+                                       narrow=self.narrow)
+        return build_index(rows, self.key_pos, self.ext_pos,
+                           capacity=_pow2(rows.shape[0]),
+                           narrow=self.narrow)
+
+    # -- host rows: legacy truth, or the device mode's lazy debug mirror ----
+    def _rows(self, name: str) -> np.ndarray:
+        if not self.device_resident:
+            return self._host[name]
+        if name not in self._mirror:
+            self._mirror[name] = self._materialize(getattr(self,
+                                                           "d_" + name))
+            if self._store is not None:
+                self._store.stats.mirror_pulls += 1
+        return self._mirror[name]
+
+    @property
+    def base(self) -> np.ndarray:
+        return self._rows("base")
+
+    @property
+    def cins(self) -> np.ndarray:
+        return self._rows("cins")
+
+    @property
+    def cdel(self) -> np.ndarray:
+        return self._rows("cdel")
+
+    def _materialize(self, d: IndexData) -> np.ndarray:
+        """Reconstruct host tuple rows from the device (key, val) arrays;
+        canonical row-lex (np.unique) order, like the old host truth."""
+        keys, vals, ns = np.asarray(d.key), np.asarray(d.val), np.asarray(d.n)
+        if self.shard_w:
+            key = np.concatenate([keys[k][:ns[k]]
+                                  for k in range(self.shard_w)])
+            val = np.concatenate([vals[k][:ns[k]]
+                                  for k in range(self.shard_w)])
+        else:
+            key, val = keys[:int(ns)], vals[:int(ns)]
+        rows = np.zeros((key.shape[0], self.arity), np.int32)
+        if len(self.key_pos) == 1:
+            rows[:, self.key_pos[0]] = key.astype(np.int64) & 0xFFFFFFFF
+        elif len(self.key_pos) == 2:
+            k64 = key.astype(np.int64)
+            rows[:, self.key_pos[0]] = (k64 >> 32).astype(np.int32)
+            rows[:, self.key_pos[1]] = (k64 & 0xFFFFFFFF).astype(np.int32)
+        rows[:, self.ext_pos] = val
+        order = np.lexsort(tuple(rows[:, c]
+                                 for c in range(rows.shape[1] - 1, -1, -1)))
+        return rows[order]
+
+    def refresh(self, which=("base", "cins", "cdel")):
+        """Legacy mode only: rebuild device mirrors from the host truth."""
+        assert not self.device_resident, \
+            "device-resident regions are merged, never rebuilt"
+        for name in which:
+            setattr(self, "d_" + name, self._build(self._host[name]))
+
     def set_uncommitted(self, uins: np.ndarray, udel: np.ndarray):
         self.d_uins = self._build(uins)
         self.d_udel = self._build(udel)
+
+    def probe_cdel(self, ins: np.ndarray) -> bool:
+        """any(ins ∈ cdel) — device probe, O(|Δ|·log|cdel|)."""
+        key = csr.pack_key(tuple(ins[:, p].astype(np.int32)
+                                 for p in self.key_pos))
+        kdt = np.dtype(self.d_cdel.key.dtype.name)
+        sent = csr.SENTINEL32 if kdt == np.int32 else csr.SENTINEL
+        qk, qv = _pad_probe(key.astype(kdt),
+                            ins[:, self.ext_pos].astype(np.int32), sent)
+        return bool(_any_member(self.d_cdel, qk, qv,
+                                sharded=bool(self.shard_w)))
 
     def versioned(self, version: str) -> VersionedIndex:
         if version == "old":
@@ -139,12 +428,18 @@ class DeltaResult:
 class StoreStats:
     """Per-store epoch accounting.  ``normalize_calls`` / ``commit_calls``
     are the facade's one-commit-per-epoch contract: with N standing queries
-    on one store both advance by exactly 1 per update epoch."""
+    on one store both advance by exactly 1 per update epoch.
+    ``mirror_pulls`` counts host materializations of device-resident state
+    (debug/differential paths only — zero on the warm epoch loop);
+    ``live_compactions`` tracks the store-level live-set LSM separately
+    from the per-projection ``compactions``."""
 
     normalize_calls: int = 0
     commit_calls: int = 0
     compactions: int = 0
     epochs: int = 0
+    live_compactions: int = 0
+    mirror_pulls: int = 0
 
 
 class RegionStore:
@@ -156,19 +451,76 @@ class RegionStore:
     store, so N standing queries pay one region build, one ``normalize`` and
     one ``commit`` per epoch instead of N copies of each.
 
-    ``shard_w > 0`` builds every device mirror hash-partitioned over that
-    many mesh workers (the distributed engine's layout); ``shard_w == 0``
-    keeps single-host mirrors.
+    ``device_resident=True`` (default): the source of truth is on device —
+    the live edge set is its own packed three-region LSM, ``normalize`` is
+    a jitted membership probe, ``commit``/compaction are jitted sorted-merge
+    folds, and ``edges`` / region rows are lazily-pulled debug mirrors.
+    ``device_resident=False`` keeps the legacy host-numpy truth (the old
+    behaviour, with an incrementally-maintained packed live-edge cache).
+
+    ``shard_w > 0`` builds every device region hash-partitioned over that
+    many mesh workers (the distributed engine's layout); the commit folds
+    vmap over the worker axis, so each worker folds only its owned rows and
+    the distributed commit needs no collectives.
     """
 
     def __init__(self, initial_edges: np.ndarray, shard_w: int = 0,
-                 compact_ratio: float = 0.5):
-        self.edges = np.unique(
+                 compact_ratio: float = 0.5, device_resident: bool = True):
+        edges = np.unique(
             np.asarray(initial_edges, np.int32).reshape(-1, 2), axis=0)
         self.shard_w = shard_w
         self.compact_ratio = compact_ratio
+        self.device_resident = bool(device_resident)
         self.projections: Dict[Projection, _Regions] = {}
         self.stats = StoreStats()
+        self._staged: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        if self.device_resident:
+            # the live-edge LSM shards like the projections (ownership by
+            # packed key), so per-worker live memory stays O(|E|/w)
+            self._lb = _packed_index(edges, shard_w)
+            self._lc_ins = _empty_packed(shard_w)
+            self._lc_del = _empty_packed(shard_w)
+            zero = np.zeros(shard_w, np.int64) if shard_w else 0
+            nb = _count_of(self._lb) if shard_w else edges.shape[0]
+            self._n_live = [nb, zero, zero]  # base, cins, cdel
+            self._edges_mirror: Optional[np.ndarray] = edges
+        else:
+            self._edges = edges
+            self._packed_live = np.sort(_pack2(edges[:, 0], edges[:, 1])) \
+                if edges.size else np.zeros(0, np.int64)
+
+    # -- the live edge set --------------------------------------------------
+    @property
+    def edges(self) -> np.ndarray:
+        """Live edges as host rows.  Legacy: the truth.  Device-resident:
+        a lazily-materialized mirror (oracle/differential paths only — the
+        warm epoch loop never touches it)."""
+        if not self.device_resident:
+            return self._edges
+        if self._edges_mirror is None:
+            nb, nci, _ = self._n_live
+            cap = _pow2(_maxn(np.asarray(nb) + np.asarray(nci)))
+            live = _compact_fold(self._lb, self._lc_ins, self._lc_del,
+                                 out_cap=cap, sharded=bool(self.shard_w))
+            if self.shard_w:
+                ns = np.asarray(live.n)
+                keys = np.asarray(live.key)
+                packed = np.sort(np.concatenate(
+                    [keys[k][:ns[k]] for k in range(self.shard_w)]))
+            else:
+                packed = np.asarray(live.key)[:int(live.n)]
+            self._edges_mirror = _unpack2(packed)
+            self.stats.mirror_pulls += 1
+        return self._edges_mirror
+
+    @property
+    def num_edges(self) -> int:
+        """Live edge count, O(1) from the tracked region sizes — no mirror
+        materialization (|live| = |base| + |cins| − |cdel|)."""
+        if not self.device_resident:
+            return int(self._edges.shape[0])
+        nb, nci, ncd = self._n_live
+        return _total(nb) + _total(nci) - _total(ncd)
 
     def ensure(self, rel: str, key_pos: Tuple[int, ...], ext_pos: int
                ) -> _Regions:
@@ -180,13 +532,42 @@ class RegionStore:
                 "dynamic non-edge relations: extend _Regions storage")
         proj = (rel, key_pos, ext_pos)
         reg = self.projections.get(proj)
-        if reg is None:
-            empty = self.edges[:0]
-            reg = _Regions(key_pos, ext_pos, self.edges, empty, empty,
-                           shard_w=self.shard_w)
+        if reg is not None:
+            return reg
+        rows = self.edges
+        # narrow is decided ONCE per projection (merges must keep one
+        # dtype): auto-widen when an id already collides with the int32
+        # sentinel, like build_index's per-build check did
+        narrow = len(key_pos) <= 1 and \
+            (rows.size == 0 or int(rows.max()) < int(csr.SENTINEL32))
+        reg = _Regions(key_pos, ext_pos, shard_w=self.shard_w,
+                       device_resident=self.device_resident, narrow=narrow,
+                       _store=self)
+        empty = rows[:0]
+        if self.device_resident:
+            reg.d_base = reg._build(rows)
+            reg.d_cins = reg._build(empty)
+            reg.d_cdel = reg._build(empty)
+            reg.n_base = _count_of(reg.d_base) if self.shard_w \
+                else rows.shape[0]
+            reg.n_cins = np.zeros(self.shard_w, np.int64) if self.shard_w \
+                else 0
+            reg.n_cdel = np.zeros(self.shard_w, np.int64) if self.shard_w \
+                else 0
+            reg._mirror["base"] = rows
+            reg._mirror["cins"] = empty
+            reg._mirror["cdel"] = empty
+        else:
+            reg._host = {"base": rows, "cins": empty, "cdel": empty}
             reg.refresh()
-            reg.set_uncommitted(empty, empty)
-            self.projections[proj] = reg
+        # a projection ensured mid-epoch (after begin_epoch, before commit)
+        # must see the staged batch: its base is the PRE-commit live set, so
+        # old = base and new = base + uins - udel stay consistent, and the
+        # commit fold picks the delta up instead of losing it
+        ins, dels = self._staged if self._staged is not None else \
+            (empty, empty)
+        reg.set_uncommitted(ins, dels)
+        self.projections[proj] = reg
         return reg
 
     def ensure_plan(self, plan: Plan):
@@ -202,36 +583,117 @@ class RegionStore:
     # ------------------------------------------------------------------
     def normalize(self, updates: np.ndarray, weights: np.ndarray
                   ) -> Tuple[np.ndarray, np.ndarray]:
-        """Net out a batch against the live edge set: returns (ins, del)."""
+        """Net out a batch against the live edge set: returns (ins, del).
+
+        Device-resident: one jitted probe against the packed live LSM —
+        O(|Δ|·log|E|), no full-graph scan, no mirror pull.
+        """
         self.stats.normalize_calls += 1
         updates = np.asarray(updates, np.int32).reshape(-1, 2)
         weights = np.asarray(weights, np.int32)
+        if not self.device_resident:
+            return self._normalize_host(updates, weights)
+        B = _pow2(updates.shape[0])
+        upd = np.zeros((B, 2), np.int32)  # pad rows are self-loops, w=0
+        wts = np.zeros(B, np.int32)
+        upd[:updates.shape[0]] = updates
+        wts[:weights.shape[0]] = weights
+        dup, dw = jnp.asarray(upd), jnp.asarray(wts)
+        with _device_scope():
+            oi, ni, od, nd = _normalize_core(dup, dw, self._lb,
+                                             self._lc_ins, self._lc_del,
+                                             sharded=bool(self.shard_w))
+        ins = _unpack2(np.asarray(oi)[:int(ni)])
+        dels = _unpack2(np.asarray(od)[:int(nd)])
+        return ins, dels
+
+    def _normalize_host(self, updates: np.ndarray, weights: np.ndarray):
+        """Legacy host path, probing the incrementally-maintained sorted
+        ``_packed_live`` cache (no per-call re-pack of the edge list)."""
         keep = updates[:, 0] != updates[:, 1]
         updates, weights = updates[keep], weights[keep]
         packed = _pack2(updates[:, 0], updates[:, 1])
         uniq, inv = np.unique(packed, return_inverse=True)
         net = np.zeros(uniq.shape[0], np.int64)
         np.add.at(net, inv, weights)
-        rows = np.stack([(uniq >> 32).astype(np.int32),
-                         (uniq & 0xFFFFFFFF).astype(np.int32)], 1)
-        live = _pack2(self.edges[:, 0], self.edges[:, 1]) if \
-            self.edges.size else np.zeros(0, np.int64)
-        exists = np.isin(uniq, live)
+        rows = _unpack2(uniq)
+        live = self._packed_live
+        if live.size:
+            pos = np.searchsorted(live, uniq)
+            exists = (pos < live.shape[0]) & \
+                (live[np.minimum(pos, live.shape[0] - 1)] == uniq)
+        else:
+            exists = np.zeros(uniq.shape[0], bool)
         ins = rows[(net > 0) & ~exists]
         dels = rows[(net < 0) & exists]
         return ins.astype(np.int32), dels.astype(np.int32)
 
+    # ------------------------------------------------------------------
     def _maybe_compact(self, force: bool = False):
+        if not self.device_resident:
+            self._maybe_compact_host(force)
+            return
+        use_k = _merge_kernel_on() and not self.shard_w
+        nb, nci, ncd = self._n_live
+        if (force or _total(nci) + _total(ncd) >
+                self.compact_ratio * max(_total(nb), 1)) and \
+                (_total(nci) or _total(ncd)):
+            new_nb = np.asarray(nb) - np.asarray(ncd) + np.asarray(nci)
+            with _device_scope():
+                self._lb = _compact_fold(self._lb, self._lc_ins,
+                                         self._lc_del,
+                                         out_cap=_pow2(_maxn(new_nb)),
+                                         sharded=bool(self.shard_w),
+                                         use_kernel=use_k)
+            zero = np.zeros(self.shard_w, np.int64) if self.shard_w else 0
+            self._lc_ins = _empty_packed(self.shard_w)
+            self._lc_del = _empty_packed(self.shard_w)
+            self._n_live = [new_nb if self.shard_w else int(new_nb),
+                            zero, zero]
+            self.stats.live_compactions += 1
+            self._edges_mirror = None
+            # invariant audit: cdel ⊆ base and cins ∩ base = ∅ make the
+            # compacted size exact arithmetic — a mismatch means corruption
+            assert (np.asarray(_count_of(self._lb)) == new_nb).all()
         for reg in self.projections.values():
-            committed = reg.cins.shape[0] + reg.cdel.shape[0]
+            committed = _total(reg.n_cins) + _total(reg.n_cdel)
+            if not (force or committed >
+                    self.compact_ratio * max(_total(reg.n_base), 1)):
+                continue
+            if committed:
+                new_n = np.asarray(reg.n_base) - np.asarray(reg.n_cdel) \
+                    + np.asarray(reg.n_cins)
+                with _device_scope():
+                    reg.d_base = _compact_fold(
+                        reg.d_base, reg.d_cins, reg.d_cdel,
+                        out_cap=_pow2(_maxn(new_n)),
+                        sharded=bool(self.shard_w), use_kernel=use_k)
+                assert (np.asarray(_count_of(reg.d_base)) == new_n).all()
+                reg.n_base = _count_of(reg.d_base) if self.shard_w \
+                    else int(new_n)
+                empty = np.zeros((0, reg.arity), np.int32)
+                reg.d_cins = reg._build(empty)
+                reg.d_cdel = reg._build(empty)
+                reg.n_cins = np.zeros(self.shard_w, np.int64) \
+                    if self.shard_w else 0
+                reg.n_cdel = np.zeros(self.shard_w, np.int64) \
+                    if self.shard_w else 0
+                self.stats.compactions += 1
+                reg._mirror.clear()
+
+    def _maybe_compact_host(self, force: bool = False):
+        for reg in self.projections.values():
+            h = reg._host
+            committed = h["cins"].shape[0] + h["cdel"].shape[0]
             if force or committed > self.compact_ratio * max(
-                    reg.base.shape[0], 1):
-                if reg.cins.size or reg.cdel.size:
-                    reg.base = np.unique(np.concatenate(
-                        [_diff_rows(reg.base, reg.cdel), reg.cins]), axis=0)
+                    h["base"].shape[0], 1):
+                if h["cins"].size or h["cdel"].size:
+                    h["base"] = np.unique(np.concatenate(
+                        [_diff_rows(h["base"], h["cdel"]), h["cins"]]),
+                        axis=0)
                     self.stats.compactions += 1
-                reg.cins = reg.cins[:0]
-                reg.cdel = reg.cdel[:0]
+                h["cins"] = h["cins"][:0]
+                h["cdel"] = h["cdel"][:0]
                 reg.refresh()
 
     def begin_epoch(self, ins: np.ndarray, dels: np.ndarray):
@@ -239,31 +701,128 @@ class RegionStore:
         projection (after the eager re-insertion compaction check)."""
         # eager compaction iff a committed delete is being re-inserted
         # (would create a positive/negative region overlap, DESIGN.md §2)
-        need = any(_inter_rows(ins, reg.cdel).size
-                   for reg in self.projections.values())
+        if self.device_resident:
+            need = False
+            if ins.size:
+                if _total(self._n_live[2]):
+                    pi = _pack2(ins[:, 0], ins[:, 1])
+                    qk, qv = _pad_probe(pi, np.zeros(pi.shape[0], np.int32),
+                                        np.int64(csr.SENTINEL))
+                    need = bool(_any_member(self._lc_del, qk, qv,
+                                            sharded=bool(self.shard_w)))
+                if not need:
+                    need = any(reg.probe_cdel(ins)
+                               for reg in self.projections.values()
+                               if _total(reg.n_cdel))
+        else:
+            need = any(_inter_rows(ins, reg._host["cdel"]).size
+                       for reg in self.projections.values())
+        if ins.size and int(ins.max()) >= int(csr.SENTINEL32) and \
+                any(reg.narrow for reg in self.projections.values()):
+            raise ValueError(
+                f"vertex id >= {int(csr.SENTINEL32)} collides with the "
+                "narrow int32 index sentinel of an existing projection; "
+                "ids this large must be present in the initial edge set "
+                "so the projection is built wide")
         self._maybe_compact(force=bool(need))
         for reg in self.projections.values():
             reg.set_uncommitted(ins, dels)
+        self._staged = (ins, dels)
 
     def commit(self, ins: np.ndarray, dels: np.ndarray):
         """Fold uins/udel into the committed regions (with cancellation) and
-        advance the live edge set — once per epoch, shared by every query."""
+        advance the live edge set — once per epoch, shared by every query.
+
+        Device-resident: jitted sorted-merge/diff folds over the committed
+        regions and the staged delta only; the compacted base region object
+        passes through UNTOUCHED (no rebuild, no re-upload).
+        """
         self.stats.commit_calls += 1
         self.stats.epochs += 1
+        if self._staged is None:
+            # raw commit without begin_epoch: net the args against the live
+            # set first (a live "insert" or absent "delete" must be a no-op,
+            # exactly as normalize guarantees on the staged path), then
+            # stage — so projections and the live set fold the SAME batch
+            ins = np.asarray(ins, np.int32).reshape(-1, 2)
+            dels = np.asarray(dels, np.int32).reshape(-1, 2)
+            ins, dels = self.normalize(
+                np.concatenate([ins, dels]),
+                np.concatenate([np.ones(ins.shape[0], np.int32),
+                                -np.ones(dels.shape[0], np.int32)]))
+            self.begin_epoch(ins, dels)
+        ins, dels = self._staged
+        self._staged = None
+        if not self.device_resident:
+            self._commit_host(ins, dels)
+            return
+        use_k = _merge_kernel_on() and not self.shard_w
+        # live-set LSM fold (store-level, packed; shard-local when sharded)
+        li = _packed_index(ins, self.shard_w)
+        ld = _packed_index(dels, self.shard_w)
+        nb, nci, ncd = self._n_live
+        live_cins_cap = _pow2(_maxn(np.asarray(nci)
+                                    + np.asarray(_count_of(li))))
+        live_cdel_cap = _pow2(_maxn(np.asarray(ncd)
+                                    + np.asarray(_count_of(ld))))
+        with _device_scope():
+            new_ci, new_cd = _commit_fold(
+                self._lb, self._lc_ins, self._lc_del, li, ld,
+                cins_cap=live_cins_cap, cdel_cap=live_cdel_cap,
+                sharded=bool(self.shard_w), use_kernel=use_k)
+        self._lc_ins, self._lc_del = new_ci, new_cd
+        self._n_live = [nb, _count_of(new_ci), _count_of(new_cd)]
+        self._edges_mirror = None
+        # per-projection folds (vmapped over shards when distributed)
         for reg in self.projections.values():
+            ci_cap = _pow2(_maxn(np.asarray(reg.n_cins)
+                                 + np.asarray(_count_of(reg.d_uins))))
+            cd_cap = _pow2(_maxn(np.asarray(reg.n_cdel)
+                                 + np.asarray(_count_of(reg.d_udel))))
+            with _device_scope():
+                d_cins, d_cdel = _commit_fold(
+                    reg.d_base, reg.d_cins, reg.d_cdel, reg.d_uins,
+                    reg.d_udel, cins_cap=ci_cap, cdel_cap=cd_cap,
+                    sharded=bool(self.shard_w), use_kernel=use_k)
+            reg.d_cins, reg.d_cdel = d_cins, d_cdel
+            reg.n_cins = _count_of(d_cins)
+            reg.n_cdel = _count_of(d_cdel)
+            reg.set_uncommitted(ins[:0], dels[:0])
+            # commit never touches d_base: keep its mirror (compaction's
+            # full clear is the one that must drop it)
+            reg._mirror.pop("cins", None)
+            reg._mirror.pop("cdel", None)
+        self._maybe_compact()
+
+    def _commit_host(self, ins: np.ndarray, dels: np.ndarray):
+        for reg in self.projections.values():
+            h = reg._host
             cins = np.unique(np.concatenate(
-                [_diff_rows(reg.cins, dels), _diff_rows(ins, reg.cdel)]),
-                axis=0) if (ins.size or reg.cins.size) else reg.cins
+                [_diff_rows(h["cins"], dels), _diff_rows(ins, h["cdel"])]),
+                axis=0) if (ins.size or h["cins"].size) else h["cins"]
             cdel = np.unique(np.concatenate(
-                [reg.cdel, _inter_rows(dels, reg.base)]), axis=0) \
-                if (dels.size or reg.cdel.size) else reg.cdel
-            reg.cins, reg.cdel = cins, cdel
+                [h["cdel"], _inter_rows(dels, h["base"])]), axis=0) \
+                if (dels.size or h["cdel"].size) else h["cdel"]
+            h["cins"], h["cdel"] = cins, cdel
             reg.refresh(("cins", "cdel"))
             reg.set_uncommitted(ins[:0], dels[:0])
+        # incremental sorted maintenance of the packed live cache (and the
+        # edge rows derived from it): O(|E|) memmove, no re-pack, no re-sort
         if ins.size:
-            self.edges = np.unique(np.concatenate([self.edges, ins]), axis=0)
+            pi = np.sort(_pack2(ins[:, 0], ins[:, 1]))
+            self._packed_live = np.insert(
+                self._packed_live, np.searchsorted(self._packed_live, pi),
+                pi)
         if dels.size:
-            self.edges = _diff_rows(self.edges, dels)
+            pd = np.sort(_pack2(dels[:, 0], dels[:, 1]))
+            pos = np.searchsorted(self._packed_live, pd)
+            # normalize guarantees dels ⊆ live, but stay tolerant of raw
+            # commit() calls: only positions that actually match are removed
+            hit = (pos < self._packed_live.shape[0]) & \
+                (self._packed_live[np.minimum(
+                    pos, max(self._packed_live.shape[0] - 1, 0))] == pd)
+            self._packed_live = np.delete(self._packed_live, pos[hit])
+        self._edges = _unpack2(self._packed_live)
         self._maybe_compact()
 
 
@@ -284,10 +843,12 @@ class DeltaBigJoin:
     def __init__(self, query: Query, initial_edges: Optional[np.ndarray],
                  cfg: BigJoinConfig = BigJoinConfig(mode="collect"),
                  compact_ratio: float = 0.5,
-                 store: Optional[RegionStore] = None):
+                 store: Optional[RegionStore] = None,
+                 device_resident: bool = True):
         self.query = query
         self.cfg = cfg
         self.compact_ratio = compact_ratio
+        self.device_resident = device_resident
         self.plans: List[Plan] = [make_delta_plan(dq)
                                   for dq in delta_queries(query)]
         if store is None:
@@ -299,8 +860,9 @@ class DeltaBigJoin:
     def _new_store(self, edges: np.ndarray, compact_ratio: float
                    ) -> RegionStore:
         """Private store; the distributed engine overrides this to build
-        worker-sharded device mirrors."""
-        return RegionStore(edges, shard_w=0, compact_ratio=compact_ratio)
+        worker-sharded device regions."""
+        return RegionStore(edges, shard_w=0, compact_ratio=compact_ratio,
+                           device_resident=self.device_resident)
 
     # store delegation (public surface predating RegionStore) --------------
     @property

@@ -698,16 +698,20 @@ def make_delta_monitor(query, initial_edges, local: bool = False,
 class DistDeltaBigJoin(_delta.DeltaBigJoin):
     """Delta-BiGJoin where every region shard lives on a mesh worker.
 
-    Inherits the host-truth bookkeeping of :class:`repro.core.delta.
+    Inherits the epoch bookkeeping of :class:`repro.core.delta.
     DeltaBigJoin` (normalize / commit / compaction semantics are identical —
-    asserted by the differential stress suite) and overrides only the device
-    side:
+    asserted by the differential stress suite) and overrides only the
+    worker layout:
 
     - every ``_Regions`` multi-version projection is hash-partitioned by
       packed key over the mesh workers (``csr.build_sharded_index``), so
       each region entry has exactly one owner and cluster memory is
       O(IN + delta) — the paper's memory-linearity carried over to the
-      maintained setting;
+      maintained setting.  The per-epoch commit folds run shard-local
+      (ownership is by key, so a delta entry and the committed entry it
+      cancels always share a worker): ``delta._commit_fold`` vmaps the
+      sorted-merge over the worker axis with no collectives, and each
+      worker folds only its owned rows;
     - each delta query dAQ_i seeds its SIGNED dR batch round-robin across
       workers and runs the request/response dataflow of §3.4
       (``build_dist_step`` / ``build_balanced_step`` under ``balance``),
@@ -720,7 +724,8 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
     def __init__(self, query, initial_edges, mesh: Optional[Mesh] = None,
                  dcfg: Optional[DistConfig] = None,
                  compact_ratio: float = 0.5,
-                 store: Optional[_delta.RegionStore] = None):
+                 store: Optional[_delta.RegionStore] = None,
+                 device_resident: bool = True):
         if mesh is None:
             mesh = Mesh(np.array(jax.devices()), (AXIS,))
         self.mesh = mesh
@@ -740,11 +745,13 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
         self.dcfg = dcfg
         self._programs: Dict[int, object] = {}
         super().__init__(query, initial_edges, cfg=dcfg.base,
-                         compact_ratio=compact_ratio, store=store)
+                         compact_ratio=compact_ratio, store=store,
+                         device_resident=device_resident)
 
     def _new_store(self, edges, compact_ratio):
         return _delta.RegionStore(edges, shard_w=self.w,
-                                  compact_ratio=compact_ratio)
+                                  compact_ratio=compact_ratio,
+                                  device_resident=self.device_resident)
 
     def _run_plan(self, plan, indices, seed, weights):
         pi = self.plans.index(plan)

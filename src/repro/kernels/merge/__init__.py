@@ -1,0 +1,3 @@
+"""Batched merge-rank kernel backing the device-resident RegionStore's
+sorted-merge/diff/intersect folds (see merge.py for the rank algebra)."""
+from repro.kernels.merge.ops import rank_lt_le  # noqa: F401

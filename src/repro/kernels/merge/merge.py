@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: batched merge ranks over a sorted (key, val) set.
+
+The device-resident RegionStore (core/delta.py) maintains every index region
+by *sorted merge*, never by rebuild.  The only non-trivial step of a sorted
+merge/diff/intersect between deduped sets is computing, for each entry of one
+set, its RANK in the other — the count of entries lexicographically `<` and
+`<=` it.  With both counts every set operation is a pure scatter:
+
+    merge position of a[i] in a ∪ b  =  i + |{b < a[i]}|
+    merge position of b[j] in a ∪ b  =  j + |{a <= b[j]}|
+    a[i] ∈ b                        ⇔  |{b <= a[i]}| > |{b < a[i]}|
+
+so union/diff/intersect all reduce to one rank pass + one O(n) scatter — the
+static-shape analogue of a two-pointer merge (the pointer advance *is* the
+rank).  This kernel computes both counts for a BQ query tile per grid step
+against the full VMEM-resident index, reusing the two-level segment-major
+layout of the intersect kernel (DESIGN.md §2): a router binary search picks
+each query's segment, one [BQ, SEG] row gather + lane-wise compares yield the
+in-segment counts, and the segment base contributes ``seg * SEG`` entries
+(everything in earlier segments is strictly below the query because the
+router leader of the query's segment is `<=` it and entries are unique).
+
+ref.py is the pure-jnp oracle (two fixed-depth lexicographic binary
+searches); parity is bit-exact.  ops.py routes: compiled Mosaic on TPU, the
+jnp oracle elsewhere (interpret mode is for parity tests only — the merge
+fold sits on the per-epoch commit path, where interpret overhead would
+swamp the win).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.csr import SEG  # canonical segment length (see csr.py)
+from repro.kernels.intersect.intersect import _router_depth
+
+BQ = 256  # queries per grid step
+
+
+def _rank_counts(keys2d: jax.Array, vals2d: jax.Array, n: jax.Array,
+                 qk: jax.Array, qv: jax.Array):
+    """(lt, le) int32 [BQ]: entries lexicographically < / <= each query.
+
+    keys2d/vals2d: [num_segments, SEG] sorted segment-major with sentinel
+    padding (unique live entries); n: [] live count; qk/qv: [BQ].
+    """
+    num_segments = keys2d.shape[0]
+    rk = keys2d[:, 0]
+    rv = vals2d[:, 0]
+
+    # ---- level 1: last segment whose leader <= query ----------------------
+    lo = jnp.zeros(qk.shape, jnp.int32)
+    hi = jnp.full(qk.shape, num_segments, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        mc = jnp.clip(mid, 0, num_segments - 1)
+        mk = rk[mc]
+        mv = rv[mc]
+        le = (mk < qk) | ((mk == qk) & (mv <= qv))
+        sel = lo < hi
+        lo = jnp.where(le & sel, mid + 1, lo)
+        hi = jnp.where(~le & sel, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, _router_depth(num_segments), body, (lo, hi))
+    seg = jnp.maximum(lo - 1, 0)
+
+    # ---- level 2: in-segment counts from one [BQ, SEG] gather --------------
+    kseg = keys2d[seg]
+    vseg = vals2d[seg]
+    col = jax.lax.broadcasted_iota(jnp.int32, kseg.shape, 1)
+    idx = seg[:, None] * SEG + col
+    live = idx < n
+    ltv = live & ((kseg < qk[:, None])
+                  | ((kseg == qk[:, None]) & (vseg < qv[:, None])))
+    eqv = live & (kseg == qk[:, None]) & (vseg == qv[:, None])
+    # entries in earlier segments are live (padding is a suffix) and < query
+    base = seg * SEG
+    lt = base + ltv.sum(axis=1).astype(jnp.int32)
+    return lt, lt + eqv.sum(axis=1).astype(jnp.int32)
+
+
+def rank_kernel(keys_ref, vals_ref, n_ref, qk_ref, qv_ref, lt_ref, le_ref):
+    """One grid step: BQ rank queries against the full segment-major index."""
+    lt, le = _rank_counts(keys_ref[...], vals_ref[...], n_ref[0],
+                          qk_ref[...], qv_ref[...])
+    lt_ref[...] = lt
+    le_ref[...] = le
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _rank_call(keys2d, vals2d, n, qk, qv, interpret: bool = True):
+    B = qk.shape[0]
+    num_segments = keys2d.shape[0]
+    grid = (B // BQ,)
+    return pl.pallas_call(
+        rank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((num_segments, SEG), lambda i: (0, 0)),  # full index
+            pl.BlockSpec((num_segments, SEG), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BQ,), lambda i: (i,)),  # query tile
+            pl.BlockSpec((BQ,), lambda i: (i,)),
+        ],
+        out_specs=(pl.BlockSpec((BQ,), lambda i: (i,)),
+                   pl.BlockSpec((BQ,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((B,), jnp.int32),
+                   jax.ShapeDtypeStruct((B,), jnp.int32)),
+        interpret=interpret,
+    )(keys2d, vals2d, n, qk, qv)
+
+
+def rank_counts(keys: jax.Array, vals: jax.Array, n: jax.Array,
+                qk: jax.Array, qv: jax.Array, interpret: bool = True):
+    """(lt, le) [B] via the Pallas kernel, padding handled here.
+
+    keys/vals: [cap] sorted lex (sentinel-padded, the IndexData layout);
+    qk/qv: [B] queries.  Pads the index to a SEG multiple (segment-major
+    reshape) and the query batch to a BQ multiple, then slices back.
+    """
+    from repro.kernels.intersect.ops import _pad_queries, _segment_major
+    B = qk.shape[0]
+    keys2d, vals2d = _segment_major(keys, vals.astype(jnp.int32))
+    qkp, qvp = _pad_queries(qk, qv, keys.dtype)
+    lt, le = _rank_call(keys2d, vals2d,
+                        n.astype(jnp.int32).reshape(1), qkp, qvp,
+                        interpret=bool(interpret))
+    return lt[:B], le[:B]

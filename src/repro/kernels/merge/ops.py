@@ -1,0 +1,37 @@
+"""Routing for the merge rank kernel: compiled Mosaic on TPU, jnp oracle
+elsewhere.
+
+Unlike the membership kernels, interpret mode is NOT a production fallback
+here — the rank pass sits on the per-epoch commit path, where interpret
+overhead would swamp the merge win — so off-TPU the jnp oracle runs
+directly and the interpreted kernel exists only for parity tests
+(``interpret=True``).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.merge.merge import rank_counts
+from repro.kernels.merge.ref import rank_ref
+
+
+def rank_lt_le(keys: jax.Array, vals: jax.Array, n: jax.Array,
+               qk: jax.Array, qv: jax.Array, interpret=None):
+    """(lt, le) merge ranks of each (qk, qv) in the sorted index arrays.
+
+    ``interpret=None``: compiled kernel on a TPU backend — IF the
+    VMEM-resident index fits the budget (compaction folds pass the full
+    base region here; an over-budget index falls back to the jnp oracle
+    instead of failing Mosaic, same policy as the intersect kernels) —
+    jnp oracle elsewhere.  ``interpret=True`` forces the interpreted
+    kernel (parity tests only); ``interpret=False`` forces compiled
+    Mosaic.
+    """
+    if interpret is None:
+        from repro.kernels.intersect.ops import FUSED_VMEM_BUDGET
+        idx_bytes = keys.shape[-1] * (keys.dtype.itemsize + 4)
+        if jax.default_backend() != "tpu" or \
+                idx_bytes > FUSED_VMEM_BUDGET:
+            return rank_ref(keys, vals, n, qk, qv)
+        interpret = False
+    return rank_counts(keys, vals, n, qk, qv, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the merge rank kernel.
+
+Two fixed-depth lexicographic binary searches over the sorted (key, val)
+dual arrays — exactly ``csr.lex_searchsorted`` with both sides.  The Pallas
+kernel (`merge.py`) must match this bit-exactly (tests/test_merge_kernel.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import lex_searchsorted
+
+
+def rank_ref(keys: jax.Array, vals: jax.Array, n: jax.Array,
+             qk: jax.Array, qv: jax.Array):
+    """(lt, le) int32 [B]: entries lexicographically < / <= each query."""
+    qk = qk.astype(keys.dtype)
+    qv = qv.astype(jnp.int32)
+    lt = lex_searchsorted(keys, vals, n, qk, qv, side="left")
+    le = lex_searchsorted(keys, vals, n, qk, qv, side="right")
+    return lt, le
