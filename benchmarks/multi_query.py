@@ -29,12 +29,8 @@ WARMUP = 2
 
 
 def _canon(t, w):
-    if t is None or t.size == 0:
-        return []
-    uniq, inv = np.unique(t, axis=0, return_inverse=True)
-    net = np.zeros(uniq.shape[0], np.int64)
-    np.add.at(net, inv.reshape(-1), w)
-    return sorted((tuple(r), int(n)) for r, n in zip(uniq, net) if n != 0)
+    from repro.core.delta import canon_signed
+    return canon_signed(t, w)
 
 
 def _batches(live0):

@@ -1,0 +1,146 @@
+"""Multi-relation maintenance throughput -> BENCH_nary_stream.json.
+
+The §5.4 claim, measured: maintaining 4-clique through the ternary ``tri``
+relation (3 ternary atoms, composite-key regions) vs through the binary
+edge relation (6 binary atoms).  Per scale |E| ∈ {1e4, 1e5}:
+
+- an UNTIMED feeder session runs the standing triangle query over the edge
+  stream and records every epoch's signed triangle delta — the tri
+  relation's update batches;
+- the TIMED edge side is a session holding only 4-clique (6 edge atoms,
+  6 delta plans per epoch) driven by the edge batches;
+- the TIMED tri side is a session holding only 4-clique-tri (3 tri atoms,
+  3 delta plans per epoch over n-ary composite-key regions) driven by the
+  recorded tri deltas.
+
+Every epoch both sides' signed output deltas are checked BIT-EXACT against
+each other (two completely different plans agreeing is the differential
+oracle); the small scale additionally verifies the maintained net against
+full recomputation.
+
+Run via ``python -m benchmarks.run --only nary_stream`` (or directly).
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_nary_stream.json")
+
+SCALES = [10_000, 100_000]
+BATCH = 64
+WARMUP, EPOCHS = 3, 12
+BPRIME, OUT_CAP = 1024, 1 << 18
+
+
+def _canon(t, w):
+    from repro.api import canon_signed
+    return canon_signed(t, w)
+
+
+def _graph(ne: int):
+    from repro.data.synthetic import uniform_graph
+    nv = max(ne // 8, 64)
+    return nv, uniform_graph(nv, int(ne * 1.08), seed=ne % 89)
+
+
+def _feeder(nv, edges, n_epochs):
+    """Untimed pass: evolve the edge stream, record every epoch's edge
+    batch AND the triangle query's signed delta (the tri batches)."""
+    from repro.api import GraphSession
+    from repro.data.synthetic import EdgeUpdateStream
+    sess = GraphSession(edges, local=True, batch=BPRIME,
+                        out_capacity=OUT_CAP, update_batch=BATCH)
+    tri = sess.register("triangle")
+    tri0, _ = tri.enumerate()
+    stream = EdgeUpdateStream(nv, BATCH, seed=5)
+    live = sess.edges
+    out = []
+    for step in range(n_epochs):
+        upd, w = stream.batch_at(step, live=live)
+        res = sess.update(upd, w)
+        live = res.advance(live)
+        d = res.deltas["triangle"]
+        t_upd = d.tuples if d.tuples is not None else \
+            np.zeros((0, 3), np.int32)
+        t_w = d.weights if d.weights is not None else np.zeros(0, np.int32)
+        out.append(((upd, w), (t_upd, t_w)))
+    return tri0, out
+
+
+def _drive(session, name, batches):
+    """Timed loop: one update per epoch, per-epoch latency + deltas."""
+    lat, deltas = [], []
+    for batch in batches:
+        t0 = time.time()
+        res = session.update(batch)
+        lat.append(time.time() - t0)
+        deltas.append(res.deltas[name])
+    warm = sorted(lat[WARMUP:])
+    return warm[len(warm) // 2] * 1e3, lat, deltas
+
+
+def main():
+    from repro.api import GraphSession, oracle_count
+    rec = {"bench": "nary_stream", "batch_size": BATCH, "warmup": WARMUP,
+           "epochs": EPOCHS, "scales": {}}
+    all_exact = True
+    for ne in SCALES:
+        nv, edges = _graph(ne)
+        tri0, epochs = _feeder(nv, edges, WARMUP + EPOCHS)
+
+        edge_sess = GraphSession(edges, local=True, batch=BPRIME,
+                                 out_capacity=OUT_CAP, update_batch=BATCH)
+        edge_sess.register("4-clique")
+        tri_sess = GraphSession({"tri": tri0}, local=True, batch=BPRIME,
+                                out_capacity=OUT_CAP, update_batch=BATCH)
+        tri_sess.register("4-clique-tri")
+
+        e_ms, e_lat, e_deltas = _drive(
+            edge_sess, "4-clique", [dict(edge=b[0]) for b in epochs])
+        t_ms, t_lat, t_deltas = _drive(
+            tri_sess, "4-clique-tri", [dict(tri=b[1]) for b in epochs])
+
+        exact = all(
+            _canon(a.tuples, a.weights) == _canon(b.tuples, b.weights)
+            for a, b in zip(e_deltas, t_deltas))
+        if ne == min(SCALES):  # recompute oracle at the small scale
+            net = sum(d.count_delta for d in e_deltas)
+            ref = oracle_count("4-clique", edge_sess.edges) - \
+                oracle_count("4-clique", edges)
+            exact = exact and net == ref == sum(
+                d.count_delta for d in t_deltas)
+        all_exact = all_exact and exact
+        entry = {
+            "edges": int(edges.shape[0]), "num_vertices": nv,
+            "tri_tuples": int(tri0.shape[0]),
+            "edge_plan_warm_ms": round(e_ms, 3),
+            "tri_plan_warm_ms": round(t_ms, 3),
+            "edge_plan_epochs_per_s": round(1e3 / max(e_ms, 1e-9), 2),
+            "tri_plan_epochs_per_s": round(1e3 / max(t_ms, 1e-9), 2),
+            "tri_over_edge": round(t_ms / max(e_ms, 1e-9), 3),
+            "edge_epoch_ms": [round(t * 1e3, 2) for t in e_lat],
+            "tri_epoch_ms": [round(t * 1e3, 2) for t in t_lat],
+            "exact": bool(exact),
+        }
+        rec["scales"][str(ne)] = entry
+        row("nary_stream", f"edge_plan_E{ne}", e_ms / 1e3,
+            f"|E|={edges.shape[0]} warm_ms={e_ms:.1f} exact={exact}")
+        row("nary_stream", f"tri_plan_E{ne}", t_ms / 1e3,
+            f"|tri|={tri0.shape[0]} warm_ms={t_ms:.1f} "
+            f"ratio={t_ms / max(e_ms, 1e-9):.2f}x")
+    rec["all_exact"] = bool(all_exact)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    row("nary_stream", "json", 0.0, OUT_PATH)
+    if not all_exact:
+        raise SystemExit("nary_stream: plan parity check FAILED")
+
+
+if __name__ == "__main__":
+    main()

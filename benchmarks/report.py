@@ -122,6 +122,21 @@ def render_epoch_latency(path):
           f"(acceptance <2x: {rec.get('device_growth_lt_2x')})")
 
 
+def render_nary_stream(path):
+    """Render a BENCH_nary_stream.json multi-relation-maintenance record."""
+    rec = json.load(open(path))
+    print(f"batch={rec['batch_size']} updates/epoch, {rec['epochs']} warm "
+          f"epochs (median); all_exact={rec.get('all_exact')}\n")
+    print("| |E| | |tri| | edge-plan warm ms | tri-plan warm ms | "
+          "tri/edge | exact |")
+    print("|" + "---|" * 6)
+    for ne, r in sorted(rec.get("scales", {}).items(),
+                        key=lambda kv: int(kv[0])):
+        print(f"| {r['edges']:,} | {r['tri_tuples']:,} "
+              f"| {r['edge_plan_warm_ms']} | {r['tri_plan_warm_ms']} "
+              f"| {r['tri_over_edge']}x | {r['exact']} |")
+
+
 def render_multi_query(path):
     """Render a BENCH_multi_query.json shared-session record."""
     rec = json.load(open(path))
@@ -146,6 +161,8 @@ if __name__ == "__main__":
             render_delta_stream(p)
         elif "BENCH_multi_query" in p:
             render_multi_query(p)
+        elif "BENCH_nary_stream" in p:
+            render_nary_stream(p)
         elif "BENCH_epoch_latency" in p:
             render_epoch_latency(p)
         else:

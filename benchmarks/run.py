@@ -13,12 +13,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4,"
-                    "intersect,delta_stream,multi_query,epoch_latency")
+                    "intersect,delta_stream,multi_query,epoch_latency,"
+                    "nary_stream")
     args = ap.parse_args()
 
     from benchmarks import (baseline_compare, batch_size, cost_table,
                             delta_stream, epoch_latency, intersect_bench,
-                            multi_query, optimizations, scaling, throughput)
+                            multi_query, nary_stream, optimizations,
+                            scaling, throughput)
     table = {
         "fig4": cost_table.main,
         "tab2_3": baseline_compare.main,
@@ -30,6 +32,7 @@ def main() -> None:
         "delta_stream": delta_stream.main,  # -> BENCH_delta_stream.json
         "multi_query": multi_query.main,  # -> BENCH_multi_query.json
         "epoch_latency": epoch_latency.main,  # -> BENCH_epoch_latency.json
+        "nary_stream": nary_stream.main,  # -> BENCH_nary_stream.json
     }
     picks = list(table) if args.only == "all" else args.only.split(",")
     print("table,name,us_per_call,derived")

@@ -21,6 +21,7 @@ from repro.api.dsl import PatternSyntaxError, parse_pattern, pattern_of
 from repro.api.session import (EpochResult, GraphSession, QueryHandle,
                                Sizing, auto_sizing)
 from repro.core.csr import Graph
+from repro.core.delta import canon_signed
 from repro.core.query import (PAPER_QUERIES, QUERY_NAMES, QUERY_REGISTRY,
                               Query, agm_bound, query_by_name)
 
@@ -28,18 +29,20 @@ __all__ = [
     "GraphSession", "QueryHandle", "EpochResult", "Sizing", "auto_sizing",
     "parse_pattern", "pattern_of", "PatternSyntaxError",
     "Query", "query_by_name", "QUERY_NAMES", "QUERY_REGISTRY",
-    "PAPER_QUERIES", "agm_bound", "Graph", "oracle_count",
+    "PAPER_QUERIES", "agm_bound", "Graph", "oracle_count", "canon_signed",
 ]
 
 
 def oracle_count(query, edges) -> int:
-    """Serial Generic-Join ground truth over an edge array (the COST-style
-    single-core baseline) — for verification in examples and drivers
-    without reaching into ``repro.core``."""
+    """Serial Generic-Join ground truth over an edge array — or a full
+    relations dict ``{"edge": ..., "tri": ...}`` for multi-relation queries
+    (the COST-style single-core baseline) — for verification in examples
+    and drivers without reaching into ``repro.core``."""
     from repro.core.generic_join import generic_join
     from repro.core.query import EDGE
     if isinstance(query, str):
         query = query_by_name(query) if ":=" not in query \
             else parse_pattern(query)
-    _, cnt = generic_join(query, {EDGE: edges}, enumerate_results=False)
+    relations = edges if isinstance(edges, dict) else {EDGE: edges}
+    _, cnt = generic_join(query, relations, enumerate_results=False)
     return int(cnt)

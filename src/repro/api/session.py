@@ -80,16 +80,25 @@ def _route_for(batch: int, num_workers: int) -> int:
 @dataclasses.dataclass
 class EpochResult:
     """What one ``session.update`` produced: the normalized batch and each
-    registered query's signed output delta (keyed by handle name)."""
+    registered query's signed output delta (keyed by handle name).
+
+    ``ins`` / ``dels`` are the EDGE relation's normalized rows (empty when
+    the epoch touched other relations only); ``by_rel`` carries every
+    relation's normalized ``(ins, dels)`` pair.
+    """
 
     epoch: int
     ins: np.ndarray
     dels: np.ndarray
     deltas: Dict[str, _delta.DeltaResult]
+    by_rel: Dict[str, Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def is_noop(self) -> bool:
-        return self.ins.size == 0 and self.dels.size == 0
+        return all(i.size == 0 and d.size == 0
+                   for i, d in self.by_rel.values()) \
+            if self.by_rel else (self.ins.size == 0 and self.dels.size == 0)
 
     def advance(self, live: np.ndarray) -> np.ndarray:
         """Advance a host live-edge array by this epoch's normalized delta
@@ -180,7 +189,7 @@ class GraphSession:
     selects the legacy host-truth store (contrast benchmarks only).
     """
 
-    def __init__(self, initial_edges: np.ndarray, *, local: bool = None,
+    def __init__(self, initial_edges, *, local: bool = None,
                  mesh=None, balance: bool = False,
                  batch: Optional[int] = None,
                  out_capacity: Optional[int] = None,
@@ -238,6 +247,14 @@ class GraphSession:
                     f"query name {name!r} already registered with a "
                     "different pattern")
             return self.handles[name]
+        # declare any relation the query reads that the store doesn't hold
+        # yet (created empty; add_relation() beforehand seeds real tuples)
+        # — so ``update({"tri": ...})`` works right after registration,
+        # without waiting for the lazily-built engine to declare it
+        for atom in q.atoms:
+            if atom.rel not in self.store.relations:
+                self.store.add_relation(
+                    atom.rel, np.zeros((0, atom.arity), np.int32))
         handle = QueryHandle(self, name, q, batch, out_capacity)
         self.handles[name] = handle
         return handle
@@ -249,8 +266,22 @@ class GraphSession:
     def __getitem__(self, name: str) -> QueryHandle:
         return self.handles[name]
 
+    def add_relation(self, rel: str, rows: np.ndarray,
+                     arity: Optional[int] = None):
+        """Register one more dynamic relation (e.g. a materialized ``tri``
+        relation) with its initial tuples; later ``update`` batches may
+        then address it by name."""
+        self.store.add_relation(rel, rows, arity=arity)
+
+    def relation(self, rel: str) -> np.ndarray:
+        """One relation's live tuples (host view)."""
+        return self.store.relation_rows(rel)
+
+    def num_tuples(self, rel: str) -> int:
+        return self.store.num_tuples(rel)
+
     def _sizing(self, q: Query, batch, out_capacity) -> Sizing:
-        s = auto_sizing(q, self.num_edges or self.update_batch, self.w,
+        s = auto_sizing(q, self.store.max_live or self.update_batch, self.w,
                         self.update_batch)
         b = batch or self._batch_override or s.batch
         return Sizing(b,
@@ -274,34 +305,39 @@ class GraphSession:
                                 store=self.store)
 
     # -- the epoch loop -----------------------------------------------------
-    def update(self, updates: np.ndarray,
-               weights: Optional[np.ndarray] = None) -> EpochResult:
+    def update(self, updates, weights=None) -> EpochResult:
         """Apply one update batch to the graph and every standing query:
         ONE normalize, one staged uncommitted region set, each registered
-        query's dAQ pipeline off the shared regions, ONE commit."""
-        updates = np.asarray(updates, np.int32).reshape(-1, 2)
-        if weights is None:
-            weights = np.ones(updates.shape[0], np.int32)
-        ins, dels = self.store.normalize(updates, weights)
+        query's dAQ pipeline off the shared regions, ONE commit.
+
+        ``updates`` is an [N, 2] edge array (with optional ``weights``), or
+        a per-relation dict ``{"edge": (rows, w), "tri": (rows, w), ...}``
+        updating any subset of the session's relations in one epoch.
+        """
+        batches = self.store.normalize(updates, weights)
+        if not isinstance(batches, dict):
+            batches = {"edge": batches}
         self.epoch += 1
-        if ins.size == 0 and dels.size == 0:
+        e_ins, e_dels = batches.get(
+            "edge", (np.zeros((0, 2), np.int32),) * 2)
+        if all(i.size == 0 and d.size == 0 for i, d in batches.values()):
             zero = _delta.DeltaResult(0, None, None, [])
             deltas = {name: zero for name in self.handles}
             for name, h in self.handles.items():
                 h._deliver(self.epoch, zero)
-            return EpochResult(self.epoch, ins, dels, deltas)
+            return EpochResult(self.epoch, e_ins, e_dels, deltas, batches)
         # touch every handle's engine BEFORE staging: a lazily-built engine
         # must create its projections first, or they would miss the
         # uncommitted batch begin_epoch installs on existing regions
         engines = [(name, h.engine) for name, h in self.handles.items()]
-        self.store.begin_epoch(ins, dels)
+        self.store.begin_epoch(batches)
         deltas: Dict[str, _delta.DeltaResult] = {}
         for name, engine in engines:
-            deltas[name] = engine.run_delta_plans(ins, dels)
-        self.store.commit(ins, dels)
+            deltas[name] = engine.run_delta_plans(batches)
+        self.store.commit(batches)
         for name, h in self.handles.items():
             h._deliver(self.epoch, deltas[name])
-        return EpochResult(self.epoch, ins, dels, deltas)
+        return EpochResult(self.epoch, e_ins, e_dels, deltas, batches)
 
     # -- static evaluation over the shared regions --------------------------
     def _static_plan(self, q: Query) -> Plan:
@@ -317,9 +353,11 @@ class GraphSession:
 
     def _static_eval(self, q: Query, mode: str):
         from repro.core.bigjoin import seed_tuples_for
-        from repro.core.query import EDGE
         plan = self._static_plan(q)
-        seed = seed_tuples_for(plan, {EDGE: self.store.edges})
+        seed_rel = q.atoms[plan.seed_atom].rel
+        seed = seed_tuples_for(plan,
+                               {seed_rel: self.store.relation_rows(
+                                   seed_rel)})
         s = self._sizing(q, None, None)
         out_cap = s.out_capacity if mode == "collect" else 1
         indices = self.store.indices_for(plan)
@@ -336,7 +374,8 @@ class GraphSession:
                           balance=self.balance)
         program = get_distributed_program(plan, dcfg, self.mesh)
         return run_program(program, self.w, mode == "collect", indices,
-                           seed, np.ones(seed.shape[0], np.int32))
+                           seed, np.ones(seed.shape[0], np.int32),
+                           width=plan.seed_width)
 
     # -- introspection ------------------------------------------------------
     @property

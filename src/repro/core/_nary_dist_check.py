@@ -1,0 +1,108 @@
+"""Multi-device multi-relation differential harness (§5.4 on a mesh).
+
+Run as a subprocess so the XLA host-platform device-count override applies
+before jax initializes (tests and benches must keep seeing 1 device):
+
+    python -m repro.core._nary_dist_check --workers 4 --batches 20
+
+One ``--workers``-way CPU-mesh :class:`repro.api.GraphSession` owns TWO
+dynamic relations — the binary ``edge`` stream and the materialized ternary
+``tri`` relation — and serves triangle (the tri feeder), 4-clique (the
+edge-only reference) and 4-clique-tri (the §5.4 ternary plan).  Every
+logical epoch applies one mixed insert/delete edge batch, then the signed
+triangle delta to ``tri``; the 4-clique-tri output delta must match the
+edge-only 4-clique delta BIT-EXACTLY (signed tuple sets, not counts).
+Prints one JSON line: per-epoch wall times, exactness, shard accounting.
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--nv", type=int, default=24)
+    ap.add_argument("--ne", type=int, default=160)
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=256,
+                    help="B' proposal budget per worker per step")
+    ap.add_argument("--local", action="store_true",
+                    help="host-local session instead of the mesh")
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.workers}")
+
+    import json
+    import time
+
+    import numpy as np
+
+    from repro.api import GraphSession, canon_signed as canon, oracle_count
+    from repro.data.synthetic import EdgeUpdateStream, uniform_graph
+
+    e = uniform_graph(args.nv, args.ne, args.seed)
+    session = GraphSession(e, local=args.local, batch=args.batch,
+                           out_capacity=1 << 18,
+                           update_batch=args.batch_size)
+    tri = session.register("triangle")
+    c4 = session.register("4-clique")
+    tri0, _ = tri.enumerate()
+    session.add_relation("tri", tri0)
+    c4t = session.register("4-clique-tri")
+    static_exact = c4t.count() == c4.count() == oracle_count("4-clique", e)
+
+    stream = EdgeUpdateStream(args.nv, args.batch_size, seed=args.seed + 1)
+    epochs = []
+    all_exact = bool(static_exact)
+    live = session.edges
+    for step in range(args.batches):
+        upd, w = stream.batch_at(step, live=live)
+        t0 = time.time()
+        r1 = session.update(upd, w)
+        td = r1.deltas["triangle"]
+        t_upd = td.tuples if td.tuples is not None else \
+            np.zeros((0, 3), np.int32)
+        t_w = td.weights if td.weights is not None else \
+            np.zeros(0, np.int32)
+        r2 = session.update({"tri": (t_upd, t_w)})
+        dt = time.time() - t0
+        live = r1.advance(live)
+        a, b = r1.deltas["4-clique"], r2.deltas["4-clique-tri"]
+        exact = canon(b.tuples, b.weights) == canon(a.tuples, a.weights)
+        all_exact = all_exact and exact
+        epochs.append({
+            "epoch": step, "updates": int(upd.shape[0]),
+            "edge_delta": int(a.count_delta),
+            "tri_rel_delta": int(td.count_delta),
+            "exact": bool(exact), "elapsed_s": round(dt, 4)})
+
+    # maintained totals survive full recomputation on BOTH plans
+    net_exact = (c4.net_change == c4t.net_change ==
+                 oracle_count("4-clique", session.edges)
+                 - oracle_count("4-clique", e))
+    all_exact = all_exact and bool(net_exact)
+    shard_entries = sum(
+        reg.versioned("new").live_entries()
+        for reg in session.store.projections.values() if not reg.derived)
+    out = {
+        "workers": args.workers,
+        "mode": "local" if args.local else "dist",
+        "edges_start": int(e.shape[0]),
+        "edges_end": int(session.num_edges),
+        "tri_end": int(session.num_tuples("tri")),
+        "batches": args.batches, "batch_size": args.batch_size,
+        "static_exact": bool(static_exact), "net_exact": bool(net_exact),
+        "all_exact": bool(all_exact),
+        "shard_entries": int(shard_entries),
+        "warm_epochs_per_s": round(
+            len(epochs[2:]) / max(sum(r["elapsed_s"] for r in epochs[2:]),
+                                  1e-9), 2) if len(epochs) > 2 else None,
+        "epochs": epochs,
+    }
+    print(json.dumps(out))
+    sys.exit(0 if all_exact else 1)

@@ -100,9 +100,10 @@ class BigJoinState:
 def make_state(plan: Plan, cfg: BigJoinConfig,
                seed_capacity: Optional[int] = None) -> BigJoinState:
     m = plan.query.num_attrs
+    sw = plan.seed_width
     queues = []
-    for width in range(2, m):
-        cap = (seed_capacity or cfg.seed_chunk) if width == 2 \
+    for width in range(sw, m):
+        cap = (seed_capacity or cfg.seed_chunk) if width == sw \
             else cfg.queue_capacity()
         queues.append(LevelQueue(
             jnp.zeros((cap, width), jnp.int32),
@@ -126,19 +127,19 @@ def make_state(plan: Plan, cfg: BigJoinConfig,
 # helpers
 # ---------------------------------------------------------------------------
 
-def _pack_cols(prefix: jax.Array, positions: Sequence[int],
-               dtype) -> jax.Array:
-    cols = [prefix[:, p] for p in positions]
-    if len(cols) == 1:
-        return cols[0].astype(dtype)
-    if len(cols) == 2:
-        return ((cols[0].astype(jnp.int64) << 32)
-                | cols[1].astype(jnp.int64)).astype(dtype)
-    raise NotImplementedError(">2 bound attributes")
+def _pack_cols(prefix: jax.Array, positions: Sequence[int], dtype):
+    """Pack prefix columns into a probe key via the ONE shared packer
+    (``csr.pack_key``): a single array cast to the index key dtype, or the
+    (hi, lo) int64 pair for 3-4 bound columns (composite indices)."""
+    from repro.core import csr
+    packed = csr.pack_key(tuple(prefix[:, p] for p in positions))
+    if isinstance(packed, tuple):
+        return packed
+    return packed.astype(dtype)
 
 
 def _binding_key(prefix: jax.Array, bound_attrs: Sequence[int],
-                 key_attrs: Sequence[int], idx: VersionedIndex) -> jax.Array:
+                 key_attrs: Sequence[int], idx: VersionedIndex):
     pos = [list(bound_attrs).index(a) for a in key_attrs]
     return _pack_cols(prefix, pos, idx.pos[0].key.dtype)
 
@@ -255,7 +256,8 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
         wweight = qu.weight[:W]
         valid = jnp.arange(W, dtype=jnp.int32) < qu.size
 
-        use_fused = cfg.use_kernel
+        use_fused = cfg.use_kernel and \
+            all(len(b.key_attrs) <= 2 for b in lv.bindings)
         if use_fused:
             from repro.kernels.intersect.ops import (default_interpret,
                                                      fused_fits)
@@ -263,9 +265,12 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
                        for reg in (indices[b.index_id].pos
                                    + indices[b.index_id].neg)]
             # compiled path: drop to the jnp oracle when the level's regions
-            # cannot be VMEM-resident (DESIGN.md §3), rather than failing
-            use_fused = (default_interpret(cfg.kernel_interpret)
-                         or fused_fits(regions, B))
+            # cannot be VMEM-resident (DESIGN.md §3) or carry composite
+            # (hi, lo) keys the 1-word kernels don't speak, rather than
+            # failing Mosaic
+            use_fused = all(r.lo is None for r in regions) and \
+                (default_interpret(cfg.kernel_interpret)
+                 or fused_fits(regions, B))
         middle = middle_fused if use_fused else middle_jnp
         (cand, r, alive, allowed, consumed, n_proposed,
          n_isect) = middle(wprefix, wk, valid, indices)
@@ -323,6 +328,10 @@ def build_step(plan: Plan, cfg: BigJoinConfig):
     """One scheduler step: extend the deepest non-empty level (§3.2)."""
     branches = [_level_branch(plan, cfg, li)
                 for li in range(len(plan.levels))]
+    if not branches:
+        # the seed covers every attribute (single-atom delta plans): seeds
+        # go straight to output in the seed step; there is nothing to drain
+        return lambda state, indices: state
 
     def step(state: BigJoinState, indices: Indices) -> BigJoinState:
         sizes = jnp.stack([q.size for q in state.queues])
@@ -336,21 +345,45 @@ def build_step(plan: Plan, cfg: BigJoinConfig):
 
 
 def build_seed_step(plan: Plan, cfg: BigJoinConfig):
-    """Enqueue a chunk of P_2 seed prefixes, applying seed filters (§4.2)."""
+    """Enqueue a chunk of P_w seed prefixes, applying seed filters (§4.2).
+
+    Width 2 for projection-seeded static plans; an n-ary delta plan seeds
+    its full dR_i tuples directly into the width-r queue.  When the seed
+    covers EVERY attribute (single-atom delta plans) filtered seeds go
+    straight to the output buffer — there are no extension levels.
+    """
 
     def seed_step(state: BigJoinState, indices: Indices, prefixes: jax.Array,
                   weights: jax.Array, valid: jax.Array) -> BigJoinState:
         alive = valid
-        bound = tuple(plan.attr_order[:2])
+        bound = tuple(plan.attr_order[:plan.seed_width])
         for b in plan.seed_filters:
             idx = indices[b.index_id]
             qk = _binding_key(prefixes, bound, b.key_attrs, idx)
             qv = prefixes[:, bound.index(b.ext_attr)]
-            alive = alive & idx.member(qk, qv, cfg.use_kernel,
-                                       cfg.kernel_interpret)
+            use_k = cfg.use_kernel and len(b.key_attrs) <= 2
+            alive = alive & idx.member(qk, qv, use_k, cfg.kernel_interpret)
         for f in plan.seed_ineq:
             alive = alive & (prefixes[:, bound.index(f.lo)]
                              < prefixes[:, bound.index(f.hi)])
+        if not plan.levels:  # seed covers all attrs: direct output
+            weights = weights.astype(jnp.int32)
+            out_count = state.out_count + (
+                weights * alive).sum().astype(jnp.int64)
+            out_buf, out_weight = state.out_buf, state.out_weight
+            out_n, overflow = state.out_n, state.overflow
+            if cfg.mode == "collect":
+                perm = np.argsort(np.asarray(plan.attr_order))
+                out_buf, n_new, ovf = _scatter_append(
+                    out_buf, out_n, prefixes[:, perm], alive)
+                out_weight, _, _ = _scatter_append(
+                    out_weight, out_n, weights, alive)
+                out_n = jnp.minimum(out_n + n_new,
+                                    jnp.int32(out_buf.shape[0]))
+                overflow = overflow | ovf
+            return dataclasses.replace(
+                state, out_buf=out_buf, out_weight=out_weight, out_n=out_n,
+                out_count=out_count, overflow=overflow)
         q0 = state.queues[0]
         npfx, n_new, ovf = _scatter_append(q0.prefix, q0.size, prefixes, alive)
         nk, _, _ = _scatter_append(
@@ -388,7 +421,7 @@ def run_bigjoin(plan: Plan, indices: Indices, seed: np.ndarray,
     """Host driver: feed seed chunks, drain the dataflow to completion."""
     step, seed_step = _compiled_fns(plan, cfg)
     state = make_state(plan, cfg)
-    seed = np.asarray(seed, np.int32).reshape(-1, 2)
+    seed = np.asarray(seed, np.int32).reshape(-1, plan.seed_width)
     if weights is None:
         weights = np.ones(seed.shape[0], np.int32)
     weights = np.asarray(weights, np.int32)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,19 +47,27 @@ def round_capacity(cap: int) -> int:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class IndexData:
-    """One sorted (key, val) extension index.
+    """One sorted (key[, lo], val) extension index.
 
     key: [N] int64, nondecreasing (packed bound-prefix values)
     val: [N] int32, nondecreasing within equal keys
     n:   [] int32, number of live entries (rest is sentinel padding)
+    lo:  [N] int64 or None — the secondary word of a *composite* key.
+
+    With <= 2 bound columns the prefix packs into ``key`` alone (``lo`` is
+    None).  3 or 4 bound columns use the generalized lexicographic composite
+    key: ``key = c0<<32|c1`` and ``lo = c2`` (3 cols) or ``lo = c2<<32|c3``
+    (4 cols); entries are lex-sorted by (key, lo, val) and every probe is a
+    fixed-depth two-word lex binary search (``lex_searchsorted_cols``).
     """
 
     key: jax.Array
     val: jax.Array
     n: jax.Array
+    lo: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return (self.key, self.val, self.n), None
+        return (self.key, self.val, self.n, self.lo), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -69,17 +77,63 @@ class IndexData:
     def capacity(self) -> int:
         return self.key.shape[0]
 
+    @property
+    def composite(self) -> bool:
+        return self.lo is not None
 
-def pack_key(cols: Tuple[np.ndarray, ...] | Tuple[jax.Array, ...]):
-    """Pack 1 or 2 non-negative int32 columns into an int64 key."""
+    def key_cols(self) -> Tuple[jax.Array, ...]:
+        """The lex-ordered key words: (key,) or (key, lo)."""
+        return (self.key,) if self.lo is None else (self.key, self.lo)
+
+
+# A packed probe key: one array (<= 2 bound columns) or a (hi, lo) pair.
+PackedKey = Union[jax.Array, np.ndarray, Tuple]
+
+
+def pack_key(cols: Sequence) -> PackedKey:
+    """Pack 1..4 non-negative int32 columns into a lexicographic key.
+
+    1 column  -> int64 key (may be narrowed to int32 by the index builders);
+    2 columns -> ``c0<<32 | c1`` int64;
+    3/4 cols  -> the composite ``(hi, lo)`` int64 pair (see IndexData.lo).
+
+    THE one key-packing implementation — ``bigjoin._pack_cols``,
+    ``generic_join``'s host indices, and the region stores all delegate
+    here, so device and host keys can never drift.
+    """
+    cols = tuple(cols)
     xp = jnp if isinstance(cols[0], jax.Array) else np
     if len(cols) == 1:
         return cols[0].astype(xp.int64)
     if len(cols) == 2:
         return (cols[0].astype(xp.int64) << 32) | cols[1].astype(xp.int64)
-    raise NotImplementedError(
-        "indices with >2 bound attributes are not needed by paper queries; "
-        "extend pack_key with multi-probe search to support them")
+    hi = (cols[0].astype(xp.int64) << 32) | cols[1].astype(xp.int64)
+    if len(cols) == 3:
+        return hi, cols[2].astype(xp.int64)
+    if len(cols) == 4:
+        return hi, ((cols[2].astype(xp.int64) << 32)
+                    | cols[3].astype(xp.int64))
+    raise ValueError(
+        f"composite keys cover at most 4 int32 columns, got {len(cols)}")
+
+
+def unpack_key(packed: PackedKey, num_cols: int) -> np.ndarray:
+    """Inverse of :func:`pack_key` (host): [N, num_cols] int32 columns."""
+    M = 0xFFFFFFFF
+    if num_cols <= 2:
+        p = np.asarray(packed, np.int64)
+        if num_cols == 1:
+            return p[:, None].astype(np.int32)
+        return np.stack([(p >> 32).astype(np.int32),
+                         (p & M).astype(np.int32)], 1)
+    hi, lo = (np.asarray(packed[0], np.int64), np.asarray(packed[1],
+                                                          np.int64))
+    cols = [(hi >> 32).astype(np.int32), (hi & M).astype(np.int32)]
+    if num_cols == 3:
+        cols.append(lo.astype(np.int32))
+    else:
+        cols.extend([(lo >> 32).astype(np.int32), (lo & M).astype(np.int32)])
+    return np.stack(cols, 1)
 
 
 def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
@@ -99,29 +153,54 @@ def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
     key = pack_key(tuple(tuples[:, p].astype(np.int32) for p in key_pos)) \
         if key_pos else np.zeros(tuples.shape[0], np.int64)
     val = tuples[:, ext_pos].astype(np.int32)
-    kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
-    key, val = kv[:, 0], kv[:, 1].astype(np.int32)
+    if isinstance(key, tuple):  # composite (hi, lo) key: 3-4 bound columns
+        kvl = np.unique(np.stack([key[0], key[1], val.astype(np.int64)],
+                                 axis=1), axis=0)
+        key, lo, val = kvl[:, 0], kvl[:, 1], kvl[:, 2].astype(np.int32)
+    else:
+        kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
+        key, lo, val = kv[:, 0], None, kv[:, 1].astype(np.int32)
     n = key.shape[0]
     cap = round_capacity(max(int(capacity or n), n, 1))
     # single-column keys fit int32 -> halve index bytes (perf: HBM traffic)
     if narrow is None:
         narrow = len(key_pos) <= 1 and (n == 0 or key.max() < SENTINEL32)
+    narrow = narrow and lo is None
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
     out_k = np.full(cap, sent, kdt)
     out_v = np.zeros(cap, np.int32)
     out_k[:n] = key.astype(kdt)
     out_v[:n] = val
+    out_lo = None
+    if lo is not None:
+        out_lo = np.full(cap, SENTINEL, np.int64)
+        out_lo[:n] = lo
+        out_lo = jnp.asarray(out_lo)
     return IndexData(jnp.asarray(out_k), jnp.asarray(out_v),
-                     jnp.asarray(n, jnp.int32))
+                     jnp.asarray(n, jnp.int32), out_lo)
 
 
 # Fibonacci-style multiplicative mix shared with the distributed layer:
 # owner_of / shard_of MUST agree so host-built shards answer device routing.
 SHARD_MIX = 0x9E3779B97F4A7C15
+# second mix for folding a composite key's two words into one routing word
+SHARD_MIX2 = 0xC2B2AE3D27D4EB4F
 
 
-def shard_of(key: np.ndarray, num_shards: int) -> np.ndarray:
+def combine_key(hi, lo):
+    """Fold a composite (hi, lo) key into ONE 64-bit routing word.
+
+    Collisions only affect placement, never answers — but host (np) and
+    device (jnp) MUST agree, so both routes go through this one function."""
+    xp = jnp if isinstance(hi, jax.Array) else np
+    h = (hi.astype(xp.uint64) * xp.uint64(SHARD_MIX2)) ^ lo.astype(xp.uint64)
+    return h.astype(xp.int64)
+
+
+def shard_of(key: PackedKey, num_shards: int) -> np.ndarray:
     """Hash-partition owner of each packed key, [N] int32 in [0, num_shards)."""
+    if isinstance(key, tuple):
+        key = combine_key(*key)
     h = (key.astype(np.uint64) * np.uint64(SHARD_MIX)) >> np.uint64(33)
     return (h % np.uint64(max(num_shards, 1))).astype(np.int32)
 
@@ -156,47 +235,74 @@ def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
     key = pack_key(tuple(tuples[:, p].astype(np.int32) for p in key_pos)) \
         if key_pos else np.zeros(tuples.shape[0], np.int64)
     val = tuples[:, ext_pos].astype(np.int32)
-    kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
-    key, val = kv[:, 0], kv[:, 1].astype(np.int32)
-    own = shard_of(key, w)
+    if isinstance(key, tuple):  # composite: ownership by the combined word
+        kvl = np.unique(np.stack([key[0], key[1], val.astype(np.int64)],
+                                 axis=1), axis=0)
+        key, klo, val = kvl[:, 0], kvl[:, 1], kvl[:, 2].astype(np.int32)
+        own = shard_of((key, klo), w)
+    else:
+        kv = np.unique(np.stack([key, val.astype(np.int64)], axis=1), axis=0)
+        key, klo, val = kv[:, 0], None, kv[:, 1].astype(np.int32)
+        own = shard_of(key, w)
     counts = np.bincount(own, minlength=w).astype(np.int64)
     cmax = int(counts.max()) if counts.size else 0
     cap = max(_pow2_capacity(cmax), round_capacity(int(capacity or 1)))
     if narrow is None:
         narrow = len(key_pos) <= 1 and (key.size == 0
                                         or key.max() < SENTINEL32)
+    narrow = narrow and klo is None
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
     out_k = np.full((w, cap), sent, kdt)
     out_v = np.zeros((w, cap), np.int32)
-    # kv is lexsorted by (key, val); a stable sort by owner keeps each
-    # shard's rows sorted, which is the IndexData invariant.
+    out_lo = None if klo is None else np.full((w, cap), SENTINEL, np.int64)
+    # rows are lexsorted by (key[, lo], val); a stable sort by owner keeps
+    # each shard's rows sorted, which is the IndexData invariant.
     order = np.argsort(own, kind="stable")
     sk, sv = key[order].astype(kdt), val[order]
+    sl = klo[order] if klo is not None else None
     offs = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
     for i in range(w):
         lo, hi = offs[i], offs[i + 1]
         out_k[i, :hi - lo] = sk[lo:hi]
         out_v[i, :hi - lo] = sv[lo:hi]
+        if out_lo is not None:
+            out_lo[i, :hi - lo] = sl[lo:hi]
     return IndexData(jnp.asarray(out_k), jnp.asarray(out_v),
-                     jnp.asarray(counts.astype(np.int32)))
+                     jnp.asarray(counts.astype(np.int32)),
+                     None if out_lo is None else jnp.asarray(out_lo))
 
 
-def empty_index(capacity: int = 1, narrow: bool = True) -> IndexData:
+def empty_index(capacity: int = 1, narrow: bool = True,
+                composite: bool = False) -> IndexData:
     cap = round_capacity(capacity)
+    narrow = narrow and not composite
     kdt, sent = (jnp.int32, SENTINEL32) if narrow else (jnp.int64, SENTINEL)
     return IndexData(jnp.full(cap, sent, kdt),
                      jnp.zeros(cap, jnp.int32),
-                     jnp.asarray(0, jnp.int32))
+                     jnp.asarray(0, jnp.int32),
+                     jnp.full(cap, SENTINEL, jnp.int64) if composite
+                     else None)
 
 
 # ---------------------------------------------------------------------------
 # Queries (jnp, vectorized over a batch of probes).
 # ---------------------------------------------------------------------------
 
-def index_range(idx: IndexData, qkey: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """(start, count) of the extension list for each packed key [B]."""
-    start = jnp.searchsorted(idx.key, qkey, side="left")
-    end = jnp.searchsorted(idx.key, qkey, side="right")
+def index_range(idx: IndexData, qkey: PackedKey
+                ) -> Tuple[jax.Array, jax.Array]:
+    """(start, count) of the extension list for each packed key [B].
+
+    ``qkey`` is a single packed array, or a (hi, lo) pair probing a
+    composite index; sentinel padding sorts above every real key, so the
+    full-capacity search needs no live-count mask."""
+    if idx.lo is None:
+        start = jnp.searchsorted(idx.key, qkey, side="left")
+        end = jnp.searchsorted(idx.key, qkey, side="right")
+        return start.astype(jnp.int32), (end - start).astype(jnp.int32)
+    qh, ql = qkey
+    cap_n = jnp.asarray(idx.capacity, jnp.int32)
+    start = lex_searchsorted_cols((idx.key, idx.lo), cap_n, (qh, ql), "left")
+    end = lex_searchsorted_cols((idx.key, idx.lo), cap_n, (qh, ql), "right")
     return start.astype(jnp.int32), (end - start).astype(jnp.int32)
 
 
@@ -210,34 +316,37 @@ def index_kth(idx: IndexData, start: jax.Array, k: jax.Array) -> jax.Array:
     return idx.val[pos]
 
 
-def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
-                     qk: jax.Array, qv: jax.Array,
-                     side: str = "left") -> jax.Array:
-    """Lower/upper bound of (qk,qv) in the lex-sorted (key,val) pairs.
+def lex_searchsorted_cols(cols: Tuple[jax.Array, ...], n: jax.Array,
+                          qcols: Tuple[jax.Array, ...],
+                          side: str = "left") -> jax.Array:
+    """Lower/upper bound of each lex query in up-to-3 lex-sorted columns.
 
-    Fixed-depth binary search (depth = ceil(log2 capacity)), vectorized over
-    the query batch; this is the pure-jnp oracle mirrored by the Pallas
-    ``intersect`` kernel.  ``side="left"`` returns the count of entries
-    strictly below each query, ``side="right"`` the count of entries <= it —
-    the two merge ranks of the device-resident region folds.
+    The generalized fixed-depth binary search behind every probe: 2 columns
+    is the classic (key, val) pair, 3 columns the composite-key
+    (key, lo, val) triple.  Vectorized over the query batch; ``side="left"``
+    returns the count of entries strictly below each query, ``side="right"``
+    the count of entries <= it.
     """
-    cap = key.shape[0]
+    cap = cols[0].shape[0]
     right = side == "right"
     # +1: an interval of length 1 still needs one comparison to collapse
     depth = max(int(np.ceil(np.log2(max(cap, 2)))), 1) + 1
-    lo = jnp.zeros(qk.shape, jnp.int32)
+    lo = jnp.zeros(qcols[0].shape, jnp.int32)
     hi = jnp.broadcast_to(jnp.minimum(jnp.int32(cap), n.astype(jnp.int32)),
-                          qk.shape)
+                          qcols[0].shape)
 
     def body(_, lohi):
         lo, hi = lohi
         mid = (lo + hi) >> 1
-        mk = key[jnp.clip(mid, 0, cap - 1)]
-        mv = val[jnp.clip(mid, 0, cap - 1)]
+        midc = jnp.clip(mid, 0, cap - 1)
+        less = jnp.zeros(qcols[0].shape, bool)
+        eq = jnp.ones(qcols[0].shape, bool)
+        for c, q in zip(cols, qcols):
+            mc = c[midc]  # mixed-width compares promote, never truncate
+            less = less | (eq & (mc < q))
+            eq = eq & (mc == q)
         if right:
-            less = (mk < qk) | ((mk == qk) & (mv <= qv))
-        else:
-            less = (mk < qk) | ((mk == qk) & (mv < qv))
+            less = less | eq
         lo = jnp.where(less & (lo < hi), mid + 1, lo)
         hi = jnp.where(~less & (lo < hi), mid, hi)
         return lo, hi
@@ -246,17 +355,35 @@ def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
     return lo
 
 
-def index_member(idx: IndexData, qkey: jax.Array, qval: jax.Array
+def lex_searchsorted(key: jax.Array, val: jax.Array, n: jax.Array,
+                     qk: jax.Array, qv: jax.Array,
+                     side: str = "left") -> jax.Array:
+    """Two-column (key, val) lex bound — the jnp oracle mirrored by the
+    Pallas ``intersect``/``merge`` kernels (see ``lex_searchsorted_cols``
+    for the generalized composite-key form)."""
+    return lex_searchsorted_cols((key, val), n, (qk, qv), side)
+
+
+def index_member(idx: IndexData, qkey: PackedKey, qval: jax.Array
                  ) -> jax.Array:
     """Membership (qkey, qval) in the index, [B] bool — the pure-jnp oracle.
 
     Kernel routing happens one level up: ``VersionedIndex.signed_member``
-    fuses all regions into one Pallas launch; this stays the reference path.
+    fuses all regions into one Pallas launch; this stays the reference path
+    (and the ONLY path for composite keys, which the 1-word kernels skip).
     """
-    pos = lex_searchsorted(idx.key, idx.val, idx.n, qkey,
-                           qval.astype(jnp.int32))
+    qv = qval.astype(jnp.int32)
+    if idx.lo is None:
+        pos = lex_searchsorted(idx.key, idx.val, idx.n, qkey, qv)
+        pos_c = jnp.clip(pos, 0, idx.capacity - 1)
+        hit = (idx.key[pos_c] == qkey) & (idx.val[pos_c] == qv)
+        return hit & (pos < idx.n)
+    qh, ql = qkey
+    pos = lex_searchsorted_cols((idx.key, idx.lo, idx.val), idx.n,
+                                (qh, ql, qv))
     pos_c = jnp.clip(pos, 0, idx.capacity - 1)
-    hit = (idx.key[pos_c] == qkey) & (idx.val[pos_c] == qval.astype(jnp.int32))
+    hit = ((idx.key[pos_c] == qh) & (idx.lo[pos_c] == ql)
+           & (idx.val[pos_c] == qv))
     return hit & (pos < idx.n)
 
 
@@ -280,13 +407,20 @@ def index_member(idx: IndexData, qkey: jax.Array, qval: jax.Array
 # stays a function of |Δ| + |committed| instead of |E|.
 # ---------------------------------------------------------------------------
 
-def index_ranks(a: IndexData, qk: jax.Array, qv: jax.Array,
+def index_ranks(a: IndexData, qk: PackedKey, qv: jax.Array,
                 use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
     """(lt, le) int32 [B]: entries of ``a`` lexicographically < / <= each
-    (qk, qv) query.  ``use_kernel`` routes through the Pallas rank kernel
-    (`kernels/merge`); the default is the two fixed-depth jnp searches."""
-    qk = qk.astype(a.key.dtype)
+    (qk[, qlo], qv) query.  ``use_kernel`` routes through the Pallas rank
+    kernel (`kernels/merge`), which stays 1-key-word — composite keys
+    always take the fixed-depth jnp searches."""
     qv = qv.astype(jnp.int32)
+    if a.lo is not None:
+        qh, ql = qk
+        cols = (a.key, a.lo, a.val)
+        qcols = (qh.astype(jnp.int64), ql.astype(jnp.int64), qv)
+        return (lex_searchsorted_cols(cols, a.n, qcols, "left"),
+                lex_searchsorted_cols(cols, a.n, qcols, "right"))
+    qk = qk.astype(a.key.dtype)
     if use_kernel:
         from repro.kernels.merge.ops import rank_lt_le
         return rank_lt_le(a.key, a.val, a.n, qk, qv)
@@ -295,10 +429,16 @@ def index_ranks(a: IndexData, qk: jax.Array, qv: jax.Array,
     return lt, le
 
 
-def _empty_like_caps(key_dtype, capacity: int) -> Tuple[jax.Array, jax.Array]:
+def _empty_like_caps(key_dtype, capacity: int, composite: bool = False):
     sent = SENTINEL32 if key_dtype == jnp.int32 else SENTINEL
     return (jnp.full(capacity, sent, key_dtype),
-            jnp.zeros(capacity, jnp.int32))
+            jnp.zeros(capacity, jnp.int32),
+            jnp.full(capacity, SENTINEL, jnp.int64) if composite else None)
+
+
+def _qcols_of(d: IndexData) -> PackedKey:
+    """An index's own keys viewed as a probe batch (for rank queries)."""
+    return d.key if d.lo is None else (d.key, d.lo)
 
 
 def _merge_core(a: IndexData, b: IndexData, capacity: int,
@@ -314,23 +454,27 @@ def _merge_core(a: IndexData, b: IndexData, capacity: int,
     jj = jnp.arange(b.capacity, dtype=jnp.int32)
     a_live = ii < a.n
     b_live = jj < b.n
-    lt_a, le_a = index_ranks(a, b.key, b.val, use_kernel)  # ranks of b in a
+    lt_a, le_a = index_ranks(a, _qcols_of(b), b.val, use_kernel)  # b in a
     keep_b = b_live & ~(le_a > lt_a)
     kept_cum = jnp.cumsum(keep_b.astype(jnp.int32))
     kept_excl = kept_cum - keep_b.astype(jnp.int32)
     pos_b = jnp.where(keep_b, lt_a + kept_excl, cap)
-    lt_b, _ = index_ranks(b, a.key, a.val, use_kernel)  # ranks of a in b
+    lt_b, _ = index_ranks(b, _qcols_of(a), a.val, use_kernel)  # a in b
     # kept-b entries strictly below a[i] = prefix of keep_b over [0, lt_b)
     below = jnp.where(lt_b > 0,
                       kept_cum[jnp.clip(lt_b - 1, 0, b.capacity - 1)], 0)
     pos_a = jnp.where(a_live, ii + below, cap)
-    out_k, out_v = _empty_like_caps(a.key.dtype, cap)
+    out_k, out_v, out_lo = _empty_like_caps(a.key.dtype, cap,
+                                            a.lo is not None)
     out_k = out_k.at[pos_a].set(a.key, mode="drop") \
                  .at[pos_b].set(b.key.astype(a.key.dtype), mode="drop")
     out_v = out_v.at[pos_a].set(a.val, mode="drop") \
                  .at[pos_b].set(b.val, mode="drop")
+    if out_lo is not None:
+        out_lo = out_lo.at[pos_a].set(a.lo, mode="drop") \
+                       .at[pos_b].set(b.lo, mode="drop")
     n = a.n.astype(jnp.int32) + keep_b.sum(dtype=jnp.int32)
-    return IndexData(out_k, out_v, n)
+    return IndexData(out_k, out_v, n, out_lo)
 
 
 def _select_core(a: IndexData, b: IndexData, capacity: int, keep_in_b: bool,
@@ -339,15 +483,18 @@ def _select_core(a: IndexData, b: IndexData, capacity: int, keep_in_b: bool,
     keep_in_b=False is a \\ b (diff), True is a ∩ b (intersect)."""
     cap = int(capacity)
     ii = jnp.arange(a.capacity, dtype=jnp.int32)
-    lt, le = index_ranks(b, a.key, a.val, use_kernel)
+    lt, le = index_ranks(b, _qcols_of(a), a.val, use_kernel)
     in_b = le > lt
     keep = (ii < a.n) & (in_b if keep_in_b else ~in_b)
     cum = jnp.cumsum(keep.astype(jnp.int32))
     pos = jnp.where(keep, cum - 1, cap)
-    out_k, out_v = _empty_like_caps(a.key.dtype, cap)
+    out_k, out_v, out_lo = _empty_like_caps(a.key.dtype, cap,
+                                            a.lo is not None)
     out_k = out_k.at[pos].set(a.key, mode="drop")
     out_v = out_v.at[pos].set(a.val, mode="drop")
-    return IndexData(out_k, out_v, keep.sum(dtype=jnp.int32))
+    if out_lo is not None:
+        out_lo = out_lo.at[pos].set(a.lo, mode="drop")
+    return IndexData(out_k, out_v, keep.sum(dtype=jnp.int32), out_lo)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "use_kernel"))

@@ -55,7 +55,8 @@ class VersionedIndex:
         strips the axis; on the host it projects any worker's shard for
         inspection and parity tests."""
         def strip(d: IndexData) -> IndexData:
-            return IndexData(d.key[i], d.val[i], d.n[i])
+            return IndexData(d.key[i], d.val[i], d.n[i],
+                             None if d.lo is None else d.lo[i])
         return VersionedIndex(tuple(strip(p) for p in self.pos),
                               tuple(strip(n) for n in self.neg))
 
@@ -99,6 +100,8 @@ class VersionedIndex:
     @staticmethod
     def _kernel_ok(interpret, regions) -> bool:
         from repro.kernels.intersect.ops import default_interpret, fused_fits
+        if any(r.lo is not None for r in regions):
+            return False  # composite keys: the 1-word kernels don't apply
         return default_interpret(interpret) or fused_fits(regions)
 
     def signed_member(self, qkey: jax.Array, qval: jax.Array,
@@ -117,8 +120,9 @@ class VersionedIndex:
             wpos, wneg = signed_member(self.pos, self.neg, qkey, qval,
                                        interpret=interpret)
             return (wpos - wneg) > 0, wneg > 0
-        w = jnp.zeros(qkey.shape, jnp.int32)
-        d = jnp.zeros(qkey.shape, bool)
+        shape = qkey[0].shape if isinstance(qkey, tuple) else qkey.shape
+        w = jnp.zeros(shape, jnp.int32)
+        d = jnp.zeros(shape, bool)
         for reg in self.pos:
             w = w + index_member(reg, qkey, qval).astype(jnp.int32)
         for reg in self.neg:
@@ -131,16 +135,17 @@ class VersionedIndex:
                use_kernel: bool = False, interpret=None) -> jax.Array:
         return self.signed_member(qkey, qval, use_kernel, interpret)[0]
 
-    def deleted(self, qkey: jax.Array, qval: jax.Array,
+    def deleted(self, qkey, qval: jax.Array,
                 use_kernel: bool = False, interpret=None) -> jax.Array:
+        shape = qkey[0].shape if isinstance(qkey, tuple) else qkey.shape
         if not self.neg:
-            return jnp.zeros(qkey.shape, bool)
+            return jnp.zeros(shape, bool)
         if use_kernel and self._kernel_ok(interpret, self.neg):
             from repro.kernels.intersect.ops import signed_member
             _, wneg = signed_member((), self.neg, qkey, qval,
                                     interpret=interpret)
             return wneg > 0
-        d = jnp.zeros(qkey.shape, bool)
+        d = jnp.zeros(shape, bool)
         for reg in self.neg:
             d = d | index_member(reg, qkey, qval)
         return d

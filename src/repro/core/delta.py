@@ -25,18 +25,25 @@ when the committed regions exceed ``compact_ratio`` × |base| — and eagerly in
 the rare re-insertion-of-committed-delete case, which would otherwise create
 a positive/negative overlap (see DESIGN.md §2).
 
-Region state is DEVICE-RESIDENT (DESIGN.md §6): the live edge set is a
-sorted packed-int64 device array maintained as its own three-region LSM,
+Region state is DEVICE-RESIDENT (DESIGN.md §6): each live relation is a
+sorted packed device array maintained as its own three-region LSM,
 ``normalize`` is a jitted searchsorted membership probe against it, and
 ``commit`` is a jitted sorted-merge/diff fold (``csr.merge_index`` /
 ``diff_index`` / ``intersect_index``) that touches only the committed
 regions and the delta — the compacted base is merged at (amortized)
-compaction only, so warm epoch cost is O(|Δ|·log|E| + |committed|) instead
-of the full-graph rescan the host path pays.  Host numpy arrays are a
+compaction only, so warm epoch cost is O(|Δ|·log|R| + |committed|) instead
+of the full rescan the host path pays.  Host numpy arrays are a
 lazily-materialized debug mirror, pulled only by oracle/differential paths
 (``StoreStats.mirror_pulls`` counts the pulls).  ``device_resident=False``
 keeps the legacy host-truth store (with an incrementally-maintained packed
-live-edge cache) for contrast benchmarks.
+live cache) for contrast benchmarks.
+
+The store is MULTI-RELATION (DESIGN.md §7): any mix of dynamic relations
+of arity 2..4 (the binary ``edge`` graph, the ternary ``tri`` relation of
+§5.4, ...), each with its own live LSM, per-relation update batches, and
+composite-key (hi, lo) regions sharded by the same ownership hash as the
+binary ones.  Projections that don't cover a relation's full row are
+DERIVED on demand instead of folded (see :class:`_Regions`).
 """
 from __future__ import annotations
 
@@ -100,6 +107,76 @@ def _unpack2(packed: np.ndarray) -> np.ndarray:
                      (packed & 0xFFFFFFFF).astype(np.int32)], 1)
 
 
+def _pack_rows(rows: np.ndarray, arity: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Full rows of an n-ary relation as the (hi, lo) lex word pair the
+    live-set LSM keys on (lo ≡ 0 for arity <= 2, matching the legacy
+    single-word packing bit for bit)."""
+    rows = np.asarray(rows, np.int32).reshape(-1, arity)
+    packed = csr.pack_key(tuple(rows[:, c] for c in range(arity)))
+    if isinstance(packed, tuple):
+        return packed
+    return packed, np.zeros(rows.shape[0], np.int64)
+
+
+def _unpack_rows(hi: np.ndarray, lo: np.ndarray, arity: int) -> np.ndarray:
+    """Inverse of :func:`_pack_rows`: [N, arity] int32 rows."""
+    if arity <= 2:
+        return csr.unpack_key(np.asarray(hi, np.int64), arity)
+    return csr.unpack_key((np.asarray(hi, np.int64),
+                           np.asarray(lo, np.int64)), arity)
+
+
+def _degenerate_rows(rows: np.ndarray) -> np.ndarray:
+    """Rows with any repeated vertex (self-loops generalized to n-ary):
+    normalize drops them, exactly as the edge path drops u == v."""
+    rows = np.asarray(rows)
+    bad = np.zeros(rows.shape[0], bool)
+    for i in range(rows.shape[1]):
+        for j in range(i + 1, rows.shape[1]):
+            bad |= rows[:, i] == rows[:, j]
+    return bad
+
+
+def _check_batch(rel: str, updates, weights, arity: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Validate one relation's update batch: integer dtype, [N, arity]
+    shape, non-negative int32-representable ids, matching weights — loud
+    errors instead of the old silent ``reshape(-1, 2)`` mangling."""
+    arr = np.asarray(updates)
+    if arr.size == 0:  # empty batches are always a valid no-op
+        arr = np.zeros((0, arity), np.int64)
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(
+            f"{rel!r} update batch must be integer tuples, got dtype "
+            f"{arr.dtype}")
+    if arr.ndim != 2 or arr.shape[1] != arity:
+        raise ValueError(
+            f"{rel!r} update batch must be [N, {arity}] (relation arity "
+            f"{arity}), got shape {arr.shape}")
+    if arr.size:
+        amin, amax = int(arr.min()), int(arr.max())
+        if amin < 0:
+            raise ValueError(
+                f"{rel!r} update batch contains negative id {amin}")
+        if amax >= 2 ** 31:
+            raise ValueError(
+                f"{rel!r} update batch contains id {amax} outside the "
+                "int32 vertex-id domain")
+    if weights is None:
+        weights = np.ones(arr.shape[0], np.int32)
+    w = np.asarray(weights)
+    if not np.issubdtype(w.dtype, np.integer):
+        raise TypeError(
+            f"{rel!r} update weights must be signed integers, got dtype "
+            f"{w.dtype}")
+    if w.shape != (arr.shape[0],):
+        raise ValueError(
+            f"{rel!r} update weights must be [N] = [{arr.shape[0]}], got "
+            f"shape {w.shape}")
+    return arr.astype(np.int32), w.astype(np.int32)
+
+
 def _pow2(n: int) -> int:
     """Index capacities rounded up to powers of two (>= one kernel segment):
     stable shapes across update batches keep the jitted dataflow's
@@ -131,56 +208,62 @@ def _count_of(d: IndexData):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("sharded",))
-def _normalize_core(upd: jax.Array, w: jax.Array, base: IndexData,
-                    cins: IndexData, cdel: IndexData, sharded: bool = False):
-    """Net one padded update batch against the live LSM: (ins, n_ins,
-    dels, n_dels) as sentinel-padded sorted packed-int64 arrays.
+def _normalize_core(p_hi: jax.Array, p_lo: jax.Array, w: jax.Array,
+                    base: IndexData, cins: IndexData, cdel: IndexData,
+                    sharded: bool = False):
+    """Net one padded update batch against a relation's live LSM:
+    (ins_hi, ins_lo, n_ins, del_hi, del_lo, n_dels) as sentinel-padded
+    sorted lex word pairs.
 
-    upd [B,2] int32 / w [B] int32 (padding rows are self-loops with w=0);
-    base/cins/cdel: the store's packed live regions (IndexData, val≡0),
-    hash-partitioned over a leading [w] worker axis when ``sharded`` — a
-    key lives on exactly one shard, so membership is an OR over vmapped
-    per-shard probes and per-worker live memory stays O(|E|/w).
-    live = (base \\ cdel) ∪ cins under the commit invariants.
+    p_hi/p_lo [B] int64 are the packed rows (degenerate/padding rows
+    pre-masked to the sentinel on the host — the batch is delta-sized);
+    base/cins/cdel: the relation's packed live regions (IndexData, val≡0;
+    composite ``lo`` word for arity > 2), hash-partitioned over a leading
+    [w] worker axis when ``sharded`` — a key lives on exactly one shard, so
+    membership is an OR over vmapped per-shard probes and per-worker live
+    memory stays O(|R|/w).  live = (base \\ cdel) ∪ cins under the commit
+    invariants.
     """
     SENT = jnp.int64(csr.SENTINEL)
-    u, v = upd[:, 0], upd[:, 1]
-    valid = (u != v) & (w != 0)
-    p = jnp.where(valid, (u.astype(jnp.int64) << 32) | v.astype(jnp.int64),
-                  SENT)
-    order = jnp.argsort(p)
-    ps, ws = p[order], w[order]
-    first = jnp.concatenate([jnp.ones(1, bool), ps[1:] != ps[:-1]])
+    order = jnp.lexsort((p_lo, p_hi))
+    hs, ls, ws = p_hi[order], p_lo[order], w[order]
+    first = jnp.concatenate([jnp.ones(1, bool),
+                             (hs[1:] != hs[:-1]) | (ls[1:] != ls[:-1])])
     ids = jnp.cumsum(first.astype(jnp.int32)) - 1
     net = jax.ops.segment_sum(ws.astype(jnp.int64), ids,
-                              num_segments=ps.shape[0])
-    uniq = jnp.full(ps.shape[0], SENT, jnp.int64).at[ids].set(ps)
-    zeros = jnp.zeros(ps.shape[0], jnp.int32)
+                              num_segments=hs.shape[0])
+    uniq_h = jnp.full(hs.shape[0], SENT, jnp.int64).at[ids].set(hs)
+    uniq_l = jnp.full(hs.shape[0], SENT, jnp.int64).at[ids].set(ls)
+    zeros = jnp.zeros(hs.shape[0], jnp.int32)
+    composite = base.lo is not None  # static: arity > 2 relations
+    qkey = (uniq_h, uniq_l) if composite else uniq_h
 
     def member(idx):
         if sharded:
             return jax.vmap(
-                lambda d: csr.index_member(d, uniq, zeros))(idx).any(0)
-        return csr.index_member(idx, uniq, zeros)
+                lambda d: csr.index_member(d, qkey, zeros))(idx).any(0)
+        return csr.index_member(idx, qkey, zeros)
 
     in_base = member(base)
     in_cins = member(cins)
     in_cdel = member(cdel)
     exists = (in_base & ~in_cdel) | in_cins
-    alive = uniq < SENT
+    alive = uniq_h < SENT
     ins_m = alive & (net > 0) & ~exists
     del_m = alive & (net < 0) & exists
 
     def compact(mask):
         cum = jnp.cumsum(mask.astype(jnp.int32))
         pos = jnp.where(mask, cum - 1, mask.shape[0])
-        out = jnp.full(mask.shape[0], SENT, jnp.int64
-                       ).at[pos].set(uniq, mode="drop")
-        return out, mask.sum(dtype=jnp.int32)
+        oh = jnp.full(mask.shape[0], SENT, jnp.int64
+                      ).at[pos].set(uniq_h, mode="drop")
+        ol = jnp.full(mask.shape[0], SENT, jnp.int64
+                      ).at[pos].set(uniq_l, mode="drop")
+        return oh, ol, mask.sum(dtype=jnp.int32)
 
-    oi, ni = compact(ins_m)
-    od, nd = compact(del_m)
-    return oi, ni, od, nd
+    oih, oil, ni = compact(ins_m)
+    odh, odl, nd = compact(del_m)
+    return oih, oil, ni, odh, odl, nd
 
 
 @functools.partial(jax.jit, static_argnames=("cins_cap", "cdel_cap",
@@ -235,33 +318,51 @@ def _any_member(idx: IndexData, qk: jax.Array, qv: jax.Array,
     return csr.index_member(idx, qk, qv).any()
 
 
-def _packed_index(rows: np.ndarray, shard_w: int = 0) -> IndexData:
-    """Packed-edge IndexData (key = src<<32|dst, val ≡ 0) from host rows —
-    only ever built for the initial graph and per-epoch deltas.  Delegates
-    to the csr builders over a zero ext column, so the sharded layout and
-    ownership (``csr.shard_of``) are THE SAME code path as the projections'
-    shards — the cross-structure shard agreement the distributed commit
-    folds rely on is not re-implemented here."""
-    rows3 = np.concatenate(
-        [np.asarray(rows, np.int32).reshape(-1, 2),
-         np.zeros((rows.shape[0], 1), np.int32)], axis=1)
+def _packed_index(rows: np.ndarray, shard_w: int = 0,
+                  arity: int = 2) -> IndexData:
+    """Packed full-row IndexData (key = the relation's lex word pair,
+    val ≡ 0) from host rows — only ever built for the initial relations and
+    per-epoch deltas.  Delegates to the csr builders over a zero ext column
+    with key_pos = ALL columns, so the sharded layout and ownership
+    (``csr.shard_of``) are THE SAME code path as the projections' shards —
+    the cross-structure shard agreement the distributed commit folds rely
+    on is not re-implemented here."""
+    rows = np.asarray(rows, np.int32).reshape(-1, arity)
+    rows_ext = np.concatenate(
+        [rows, np.zeros((rows.shape[0], 1), np.int32)], axis=1)
+    key_pos = tuple(range(arity))
     if shard_w:
-        return csr.build_sharded_index(rows3, (0, 1), 2, shard_w,
+        return csr.build_sharded_index(rows_ext, key_pos, arity, shard_w,
                                        narrow=False)
-    return csr.build_index(rows3, (0, 1), 2,
-                           capacity=_pow2(rows3.shape[0]), narrow=False)
+    return csr.build_index(rows_ext, key_pos, arity,
+                           capacity=_pow2(rows_ext.shape[0]), narrow=False)
 
 
-def _empty_packed(shard_w: int = 0) -> IndexData:
+def _empty_packed(shard_w: int = 0, arity: int = 2) -> IndexData:
+    composite = arity > 2
     if not shard_w:
-        return csr.empty_index(narrow=False)
+        return csr.empty_index(narrow=False, composite=composite)
     w = int(shard_w)
     return IndexData(
         jnp.full((w, csr.SEG), jnp.int64(csr.SENTINEL), jnp.int64),
-        jnp.zeros((w, csr.SEG), jnp.int32), jnp.zeros(w, jnp.int32))
+        jnp.zeros((w, csr.SEG), jnp.int32), jnp.zeros(w, jnp.int32),
+        jnp.full((w, csr.SEG), jnp.int64(csr.SENTINEL), jnp.int64)
+        if composite else None)
 
 
-def _pad_probe(keys: np.ndarray, vals: np.ndarray, sent) -> Tuple:
+def _pad_probe(keys, vals: np.ndarray, sent) -> Tuple:
+    """Pow2-pad a probe batch; ``keys`` is one packed array or a composite
+    (hi, lo) pair (padding rows take the sentinel in every key word)."""
+    if isinstance(keys, tuple):
+        hi, lo = keys
+        B = _pow2(hi.shape[0])
+        kh = np.full(B, csr.SENTINEL, np.int64)
+        kl = np.full(B, csr.SENTINEL, np.int64)
+        kh[:hi.shape[0]] = hi
+        kl[:lo.shape[0]] = lo
+        v = np.zeros(B, np.int32)
+        v[:vals.shape[0]] = vals
+        return (jnp.asarray(kh), jnp.asarray(kl)), jnp.asarray(v)
     B = _pow2(keys.shape[0])
     k = np.full(B, sent, keys.dtype)
     k[:keys.shape[0]] = keys
@@ -285,13 +386,27 @@ class _Regions:
     (``csr.build_sharded_index``) — the distributed engine's
     memory-linearity contract; the folds vmap over the axis, so each worker
     folds only its owned rows.
+
+    ``derived=True`` marks a projection whose (key, ext) columns do NOT
+    cover the relation's full row (possible only for arity > 2 relations,
+    e.g. the a1->a3 index of ``tri`` ignoring a2).  Such a projection is a
+    lossy many-to-one image of the relation, so sorted set folds cannot
+    maintain it incrementally (deleting one supporting row must not kill a
+    pair another live row still supports); instead ``versioned()`` derives
+    it from the relation's live rows on demand, cached until the next
+    begin_epoch/commit.  Delta plans never touch derived projections
+    (their bindings always cover the row — see DESIGN.md §7), so the warm
+    epoch loop stays delta-proportional.
     """
 
     key_pos: Tuple[int, ...]
     ext_pos: int
+    rel: str = "edge"
+    rel_arity: int = 0  # the backing relation's TRUE arity
     shard_w: int = 0
     device_resident: bool = True
     narrow: bool = True
+    derived: bool = False
     d_base: IndexData = None
     d_cins: IndexData = None
     d_cdel: IndexData = None
@@ -304,11 +419,13 @@ class _Regions:
     n_cdel: object = 0
     _host: dict = dataclasses.field(default_factory=dict)
     _mirror: dict = dataclasses.field(default_factory=dict)
+    _derived_cache: dict = dataclasses.field(default_factory=dict)
     _store: object = None
 
     @property
     def arity(self) -> int:
-        return max(max(self.key_pos, default=0), self.ext_pos) + 1
+        return self.rel_arity or \
+            max(max(self.key_pos, default=0), self.ext_pos) + 1
 
     def _build(self, tup: np.ndarray) -> IndexData:
         rows = np.asarray(tup).reshape(-1, self.arity)
@@ -324,6 +441,12 @@ class _Regions:
 
     # -- host rows: legacy truth, or the device mode's lazy debug mirror ----
     def _rows(self, name: str) -> np.ndarray:
+        if self.derived:
+            # base = the backing relation's live rows; committed deltas are
+            # folded into the relation itself, never into this projection
+            if name == "base":
+                return self._store._rel_rows(self.rel)
+            return np.zeros((0, self.arity), np.int32)
         if not self.device_resident:
             return self._host[name]
         if name not in self._mirror:
@@ -346,23 +469,30 @@ class _Regions:
         return self._rows("cdel")
 
     def _materialize(self, d: IndexData) -> np.ndarray:
-        """Reconstruct host tuple rows from the device (key, val) arrays;
-        canonical row-lex (np.unique) order, like the old host truth."""
+        """Reconstruct host tuple rows from the device (key[, lo], val)
+        arrays; canonical row-lex (np.unique) order, like the old host
+        truth.  Columns outside key_pos/ext_pos (possible only on derived
+        projections, which never come through here) stay zero."""
         keys, vals, ns = np.asarray(d.key), np.asarray(d.val), np.asarray(d.n)
+        los = None if d.lo is None else np.asarray(d.lo)
         if self.shard_w:
             key = np.concatenate([keys[k][:ns[k]]
                                   for k in range(self.shard_w)])
             val = np.concatenate([vals[k][:ns[k]]
                                   for k in range(self.shard_w)])
+            lo = None if los is None else np.concatenate(
+                [los[k][:ns[k]] for k in range(self.shard_w)])
         else:
             key, val = keys[:int(ns)], vals[:int(ns)]
+            lo = None if los is None else los[:int(ns)]
         rows = np.zeros((key.shape[0], self.arity), np.int32)
-        if len(self.key_pos) == 1:
-            rows[:, self.key_pos[0]] = key.astype(np.int64) & 0xFFFFFFFF
-        elif len(self.key_pos) == 2:
-            k64 = key.astype(np.int64)
-            rows[:, self.key_pos[0]] = (k64 >> 32).astype(np.int32)
-            rows[:, self.key_pos[1]] = (k64 & 0xFFFFFFFF).astype(np.int32)
+        nk = len(self.key_pos)
+        kcols = csr.unpack_key(key.astype(np.int64) if lo is None
+                               else (key.astype(np.int64),
+                                     lo.astype(np.int64)), nk) \
+            if nk else None
+        for c, p in enumerate(self.key_pos):
+            rows[:, p] = kcols[:, c]
         rows[:, self.ext_pos] = val
         order = np.lexsort(tuple(rows[:, c]
                                  for c in range(rows.shape[1] - 1, -1, -1)))
@@ -376,21 +506,30 @@ class _Regions:
             setattr(self, "d_" + name, self._build(self._host[name]))
 
     def set_uncommitted(self, uins: np.ndarray, udel: np.ndarray):
+        if self.derived:
+            self._derived_cache.clear()  # the "new" image changed
+            return
         self.d_uins = self._build(uins)
         self.d_udel = self._build(udel)
 
     def probe_cdel(self, ins: np.ndarray) -> bool:
         """any(ins ∈ cdel) — device probe, O(|Δ|·log|cdel|)."""
+        if self.derived:
+            return False  # no committed-delete region to overlap
         key = csr.pack_key(tuple(ins[:, p].astype(np.int32)
                                  for p in self.key_pos))
         kdt = np.dtype(self.d_cdel.key.dtype.name)
         sent = csr.SENTINEL32 if kdt == np.int32 else csr.SENTINEL
-        qk, qv = _pad_probe(key.astype(kdt),
-                            ins[:, self.ext_pos].astype(np.int32), sent)
+        if not isinstance(key, tuple):
+            key = key.astype(kdt)
+        qk, qv = _pad_probe(key, ins[:, self.ext_pos].astype(np.int32),
+                            sent)
         return bool(_any_member(self.d_cdel, qk, qv,
                                 sharded=bool(self.shard_w)))
 
     def versioned(self, version: str) -> VersionedIndex:
+        if self.derived:
+            return self._derived_versioned(version)
         if version == "old":
             return VersionedIndex((self.d_base, self.d_cins), (self.d_cdel,))
         if version == "new":
@@ -400,20 +539,44 @@ class _Regions:
             return VersionedIndex((self.d_base,), ())
         raise ValueError(version)
 
+    def _derived_versioned(self, version: str) -> VersionedIndex:
+        """Projection image rebuilt from the relation's live rows: "old"
+        (= "static") is the committed state, "new" folds the staged batch.
+        Cached until the next begin_epoch/commit/compaction."""
+        if version not in ("old", "new", "static"):
+            raise ValueError(version)
+        tag = "new" if version == "new" else "old"
+        idx = self._derived_cache.get(tag)
+        if idx is None:
+            rows = self._store._rel_rows(self.rel)
+            if tag == "new":
+                ins, dels = self._store._staged_for(self.rel)
+                if dels.size:
+                    rows = rows[~rows_isin(rows, dels)]
+                if ins.size:
+                    rows = np.unique(np.concatenate([rows, ins]), axis=0)
+            idx = self._build(rows)
+            self._derived_cache[tag] = idx
+        return VersionedIndex((idx,), ())
+
 
 def _diff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Rows of a not in b (both [N,2] int)."""
+    """Rows of a not in b (both [N, m] int, any arity)."""
     if a.size == 0 or b.size == 0:
         return a
-    pa, pb = _pack2(a[:, 0], a[:, 1]), _pack2(b[:, 0], b[:, 1])
-    return a[~np.isin(pa, pb)]
+    if a.shape[1] == 2:
+        pa, pb = _pack2(a[:, 0], a[:, 1]), _pack2(b[:, 0], b[:, 1])
+        return a[~np.isin(pa, pb)]
+    return a[~rows_isin(a, b)]
 
 
 def _inter_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     if a.size == 0 or b.size == 0:
         return a[:0]
-    pa, pb = _pack2(a[:, 0], a[:, 1]), _pack2(b[:, 0], b[:, 1])
-    return a[np.isin(pa, pb)]
+    if a.shape[1] == 2:
+        pa, pb = _pack2(a[:, 0], a[:, 1]), _pack2(b[:, 0], b[:, 1])
+        return a[np.isin(pa, pb)]
+    return a[rows_isin(a, b)]
 
 
 @dataclasses.dataclass
@@ -442,8 +605,27 @@ class StoreStats:
     mirror_pulls: int = 0
 
 
+@dataclasses.dataclass
+class _RelLive:
+    """One relation's live-set state: its own packed three-region LSM
+    (device mode) or host truth rows + sorted packed cache (legacy)."""
+
+    arity: int
+    # device-resident LSM (key = the row's lex word pair, val ≡ 0)
+    lb: IndexData = None
+    lc_ins: IndexData = None
+    lc_del: IndexData = None
+    n_live: list = None  # [n_base, n_cins, n_cdel]
+    mirror: Optional[np.ndarray] = None  # lazily-pulled host rows
+    # legacy host truth
+    rows: Optional[np.ndarray] = None  # [N, arity] unique row-lex
+    packed: Optional[np.ndarray] = None  # arity<=2: sorted packed words
+    packed_pair: Optional[Tuple[np.ndarray, np.ndarray]] = None  # arity>2
+
+
 class RegionStore:
-    """Owner of the live edge set and every projection's LSM regions.
+    """Owner of every dynamic relation's live set and every projection's
+    LSM regions.
 
     This is the shared substrate under both the single-query engines and the
     :class:`repro.api.GraphSession` facade: projections are created on demand
@@ -451,99 +633,249 @@ class RegionStore:
     store, so N standing queries pay one region build, one ``normalize`` and
     one ``commit`` per epoch instead of N copies of each.
 
+    The store is MULTI-RELATION: ``initial`` may be a plain [E, 2] edge
+    array (sugar for ``{"edge": edges}``) or a dict of n-ary relations
+    (arity up to 4, e.g. the ternary ``tri`` relation of §5.4); every
+    relation gets its own live-set LSM, and updates arrive as per-relation
+    batches (``normalize({"edge": (rows, w), "tri": ...})`` — the bare
+    2-column array form still means the edge relation).
+
     ``device_resident=True`` (default): the source of truth is on device —
-    the live edge set is its own packed three-region LSM, ``normalize`` is
+    each live set is its own packed three-region LSM, ``normalize`` is
     a jitted membership probe, ``commit``/compaction are jitted sorted-merge
     folds, and ``edges`` / region rows are lazily-pulled debug mirrors.
     ``device_resident=False`` keeps the legacy host-numpy truth (the old
-    behaviour, with an incrementally-maintained packed live-edge cache).
+    behaviour, with an incrementally-maintained packed live cache).
 
     ``shard_w > 0`` builds every device region hash-partitioned over that
-    many mesh workers (the distributed engine's layout); the commit folds
-    vmap over the worker axis, so each worker folds only its owned rows and
-    the distributed commit needs no collectives.
+    many mesh workers (the distributed engine's layout), n-ary regions
+    included — ownership is by the row's composite key, so commits stay
+    owner-local and collective-free and no worker holds O(|R|) of any
+    relation.
     """
 
-    def __init__(self, initial_edges: np.ndarray, shard_w: int = 0,
+    def __init__(self, initial, shard_w: int = 0,
                  compact_ratio: float = 0.5, device_resident: bool = True):
-        edges = np.unique(
-            np.asarray(initial_edges, np.int32).reshape(-1, 2), axis=0)
         self.shard_w = shard_w
         self.compact_ratio = compact_ratio
         self.device_resident = bool(device_resident)
         self.projections: Dict[Projection, _Regions] = {}
         self.stats = StoreStats()
-        self._staged: Optional[Tuple[np.ndarray, np.ndarray]] = None
-        if self.device_resident:
-            # the live-edge LSM shards like the projections (ownership by
-            # packed key), so per-worker live memory stays O(|E|/w)
-            self._lb = _packed_index(edges, shard_w)
-            self._lc_ins = _empty_packed(shard_w)
-            self._lc_del = _empty_packed(shard_w)
-            zero = np.zeros(shard_w, np.int64) if shard_w else 0
-            nb = _count_of(self._lb) if shard_w else edges.shape[0]
-            self._n_live = [nb, zero, zero]  # base, cins, cdel
-            self._edges_mirror: Optional[np.ndarray] = edges
-        else:
-            self._edges = edges
-            self._packed_live = np.sort(_pack2(edges[:, 0], edges[:, 1])) \
-                if edges.size else np.zeros(0, np.int64)
+        self._rels: Dict[str, _RelLive] = {}
+        self._staged: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] \
+            = None
+        rels = initial if isinstance(initial, dict) else \
+            {"edge": np.asarray(initial, np.int32).reshape(-1, 2)}
+        for rel, rows in rels.items():
+            self.add_relation(rel, rows)
 
-    # -- the live edge set --------------------------------------------------
+    def add_relation(self, rel: str, rows: np.ndarray,
+                     arity: Optional[int] = None):
+        """Register one dynamic relation with its initial tuples [N, arity]
+        (arity 2..4; ``arity`` disambiguates an empty batch).
+
+        Seeding a relation that exists but is still EMPTY (e.g. one
+        ``register()`` auto-declared for a query before its tuples were
+        materialized) replaces it in place — its projections are rebuilt
+        from the seeded rows; a non-empty relation cannot be re-seeded."""
+        old = self._rels.get(rel)
+        if old is not None:
+            staged = bool(self._staged) and rel in self._staged and \
+                any(x.size for x in self._staged[rel])
+            if self.num_tuples(rel) or staged:
+                raise ValueError(f"relation {rel!r} already exists")
+        rows = np.asarray(rows)
+        if rows.ndim != 2 and not (rows.size == 0 and arity):
+            raise ValueError(
+                f"initial {rel!r} tuples must be [N, arity], got shape "
+                f"{rows.shape}")
+        ar = int(arity or rows.shape[1])
+        if rows.ndim == 2 and rows.size and rows.shape[1] != ar:
+            raise ValueError(
+                f"initial {rel!r} tuples are [N, {rows.shape[1]}] but "
+                f"arity={ar} was requested")
+        if not 2 <= ar <= 4:
+            raise ValueError(
+                f"relation {rel!r} arity {ar} unsupported (2..4: composite "
+                "keys cover up to 4 columns)")
+        if old is not None and ar != old.arity:
+            raise ValueError(
+                f"relation {rel!r} was declared with arity {old.arity}, "
+                f"cannot re-seed with arity {ar}")
+        rows, _ = _check_batch(rel, rows.reshape(-1, ar), None, ar)
+        rows = np.unique(rows, axis=0)
+        st = _RelLive(arity=ar)
+        if self.device_resident:
+            # each live LSM shards like the projections (ownership by
+            # packed key), so per-worker live memory stays O(|R|/w)
+            st.lb = _packed_index(rows, self.shard_w, ar)
+            st.lc_ins = _empty_packed(self.shard_w, ar)
+            st.lc_del = _empty_packed(self.shard_w, ar)
+            zero = np.zeros(self.shard_w, np.int64) if self.shard_w else 0
+            nb = _count_of(st.lb) if self.shard_w else rows.shape[0]
+            st.n_live = [nb, zero, zero]  # base, cins, cdel
+            st.mirror = rows
+        else:
+            st.rows = rows
+            self._refresh_host_cache(st)
+        self._rels[rel] = st
+        if old is not None:
+            # rebuild projections ensured against the empty declaration
+            for proj in [p for p in self.projections if p[0] == rel]:
+                del self.projections[proj]
+                self.ensure(*proj)
+
+    def _refresh_host_cache(self, st: _RelLive):
+        if st.arity <= 2:
+            hi, _ = _pack_rows(st.rows, st.arity)
+            st.packed = np.sort(hi)
+        else:
+            hi, lo = _pack_rows(st.rows, st.arity)
+            order = np.lexsort((lo, hi))
+            st.packed_pair = (hi[order], lo[order])
+
+    # -- relation introspection ---------------------------------------------
     @property
-    def edges(self) -> np.ndarray:
-        """Live edges as host rows.  Legacy: the truth.  Device-resident:
-        a lazily-materialized mirror (oracle/differential paths only — the
-        warm epoch loop never touches it)."""
+    def relations(self) -> Tuple[str, ...]:
+        return tuple(self._rels)
+
+    def arity_of(self, rel: str) -> int:
+        return self._rel(rel).arity
+
+    def _rel(self, rel: str) -> _RelLive:
+        st = self._rels.get(rel)
+        if st is None:
+            raise KeyError(
+                f"unknown relation {rel!r}; known: "
+                f"{', '.join(self._rels) or '(none)'} — pass it in the "
+                "initial relations dict or add_relation() first")
+        return st
+
+    def _rel_rows(self, rel: str) -> np.ndarray:
+        """One relation's live rows on the host.  Legacy: the truth.
+        Device-resident: a lazily-materialized mirror (oracle/differential
+        paths only — the warm epoch loop never touches it)."""
+        st = self._rel(rel)
         if not self.device_resident:
-            return self._edges
-        if self._edges_mirror is None:
-            nb, nci, _ = self._n_live
+            return st.rows
+        if st.mirror is None:
+            nb, nci, _ = st.n_live
             cap = _pow2(_maxn(np.asarray(nb) + np.asarray(nci)))
-            live = _compact_fold(self._lb, self._lc_ins, self._lc_del,
+            live = _compact_fold(st.lb, st.lc_ins, st.lc_del,
                                  out_cap=cap, sharded=bool(self.shard_w))
             if self.shard_w:
                 ns = np.asarray(live.n)
                 keys = np.asarray(live.key)
-                packed = np.sort(np.concatenate(
-                    [keys[k][:ns[k]] for k in range(self.shard_w)]))
+                hi = np.concatenate(
+                    [keys[k][:ns[k]] for k in range(self.shard_w)])
+                if live.lo is None:
+                    lo = np.zeros(hi.shape[0], np.int64)
+                else:
+                    los = np.asarray(live.lo)
+                    lo = np.concatenate(
+                        [los[k][:ns[k]] for k in range(self.shard_w)])
             else:
-                packed = np.asarray(live.key)[:int(live.n)]
-            self._edges_mirror = _unpack2(packed)
+                hi = np.asarray(live.key)[:int(live.n)]
+                lo = np.zeros(hi.shape[0], np.int64) if live.lo is None \
+                    else np.asarray(live.lo)[:int(live.n)]
+            order = np.lexsort((lo, hi))
+            st.mirror = _unpack_rows(hi[order], lo[order], st.arity)
             self.stats.mirror_pulls += 1
-        return self._edges_mirror
+        return st.mirror
+
+    def relation_rows(self, rel: str) -> np.ndarray:
+        """Public host view of one relation's live tuples."""
+        return self._rel_rows(rel)
+
+    def num_tuples(self, rel: str) -> int:
+        """Live tuple count of one relation, O(1) from tracked sizes."""
+        st = self._rel(rel)
+        if not self.device_resident:
+            return int(st.rows.shape[0])
+        nb, nci, ncd = st.n_live
+        return _total(nb) + _total(nci) - _total(ncd)
+
+    @property
+    def max_live(self) -> int:
+        """Largest relation's live size (capacity/AGM sizing input)."""
+        return max((self.num_tuples(r) for r in self._rels), default=0)
+
+    # -- the live edge set (edge-relation sugar + legacy aliases) ----------
+    @property
+    def edges(self) -> np.ndarray:
+        return self._rel_rows("edge")
 
     @property
     def num_edges(self) -> int:
         """Live edge count, O(1) from the tracked region sizes — no mirror
         materialization (|live| = |base| + |cins| − |cdel|)."""
-        if not self.device_resident:
-            return int(self._edges.shape[0])
-        nb, nci, ncd = self._n_live
-        return _total(nb) + _total(nci) - _total(ncd)
+        return self.num_tuples("edge") if "edge" in self._rels else 0
 
-    def ensure(self, rel: str, key_pos: Tuple[int, ...], ext_pos: int
-               ) -> _Regions:
+    @property
+    def _lb(self) -> IndexData:
+        return self._rel("edge").lb
+
+    @property
+    def _lc_ins(self) -> IndexData:
+        return self._rel("edge").lc_ins
+
+    @property
+    def _lc_del(self) -> IndexData:
+        return self._rel("edge").lc_del
+
+    @property
+    def _n_live(self) -> list:
+        return self._rel("edge").n_live
+
+    @property
+    def _edges_mirror(self) -> Optional[np.ndarray]:
+        return self._rel("edge").mirror
+
+    @property
+    def _edges(self) -> np.ndarray:
+        return self._rel("edge").rows
+
+    @property
+    def _packed_live(self) -> np.ndarray:
+        return self._rel("edge").packed
+
+    def ensure(self, rel: str, key_pos: Tuple[int, ...], ext_pos: int,
+               arity: Optional[int] = None) -> _Regions:
         """Region storage for one projection, built from the CURRENT live
-        edge set on first use and reused by every later query that needs the
-        same projection (the hoisted per-query path of old DeltaBigJoin)."""
-        if rel != "edge":
-            raise NotImplementedError(
-                "dynamic non-edge relations: extend _Regions storage")
+        relation on first use and reused by every later query that needs the
+        same projection (the hoisted per-query path of old DeltaBigJoin).
+        ``arity`` lets a plan auto-declare a not-yet-seen relation (created
+        empty)."""
+        st = self._rels.get(rel)
+        if st is None:
+            if arity is None:
+                self._rel(rel)  # raises with the helpful message
+            self.add_relation(rel, np.zeros((0, arity), np.int32))
+            st = self._rels[rel]
         proj = (rel, key_pos, ext_pos)
         reg = self.projections.get(proj)
         if reg is not None:
             return reg
-        rows = self.edges
+        # a projection whose key/ext columns don't cover the relation's
+        # full row is a lossy image: it is DERIVED from the live rows on
+        # demand instead of folded incrementally (see _Regions docs)
+        used = set(key_pos) | {ext_pos}
+        covers = used == set(range(st.arity)) and \
+            len(key_pos) + 1 == st.arity
+        rows = self._rel_rows(rel)
         # narrow is decided ONCE per projection (merges must keep one
         # dtype): auto-widen when an id already collides with the int32
         # sentinel, like build_index's per-build check did
         narrow = len(key_pos) <= 1 and \
             (rows.size == 0 or int(rows.max()) < int(csr.SENTINEL32))
-        reg = _Regions(key_pos, ext_pos, shard_w=self.shard_w,
+        reg = _Regions(key_pos, ext_pos, rel=rel, rel_arity=st.arity,
+                       shard_w=self.shard_w,
                        device_resident=self.device_resident, narrow=narrow,
-                       _store=self)
+                       derived=not covers, _store=self)
         empty = rows[:0]
+        if reg.derived:
+            self.projections[proj] = reg
+            return reg
         if self.device_resident:
             reg.d_base = reg._build(rows)
             reg.d_cins = reg._build(empty)
@@ -564,15 +896,30 @@ class RegionStore:
         # must see the staged batch: its base is the PRE-commit live set, so
         # old = base and new = base + uins - udel stay consistent, and the
         # commit fold picks the delta up instead of losing it
-        ins, dels = self._staged if self._staged is not None else \
+        ins, dels = self._staged_for(rel) if self._staged is not None else \
             (empty, empty)
         reg.set_uncommitted(ins, dels)
         self.projections[proj] = reg
         return reg
 
+    def _staged_for(self, rel: str) -> Tuple[np.ndarray, np.ndarray]:
+        ar = self._rel(rel).arity
+        empty = np.zeros((0, ar), np.int32)
+        if not self._staged:
+            return empty, empty
+        return self._staged.get(rel, (empty, empty))
+
     def ensure_plan(self, plan: Plan):
+        arities = {a.rel: a.arity for a in plan.query.atoms}
         for _id, rel, key_pos, ext_pos, _v in plan.index_ids():
-            self.ensure(rel, key_pos, ext_pos)
+            self.ensure(rel, key_pos, ext_pos, arity=arities.get(rel))
+        # the seed relation may carry no index at all (e.g. a binary seed
+        # atom whose attrs are fully bound at P_2): declare it anyway so
+        # seeds/updates for it resolve
+        seed_rel = plan.query.atoms[plan.seed_atom].rel
+        if seed_rel not in self._rels:
+            self.add_relation(
+                seed_rel, np.zeros((0, arities[seed_rel]), np.int32))
 
     def indices_for(self, plan: Plan) -> Indices:
         """Assemble the plan's VersionedIndex dict off the shared regions."""
@@ -581,49 +928,100 @@ class RegionStore:
             for _id, rel, key_pos, ext_pos, version in plan.index_ids()}
 
     # ------------------------------------------------------------------
-    def normalize(self, updates: np.ndarray, weights: np.ndarray
-                  ) -> Tuple[np.ndarray, np.ndarray]:
-        """Net out a batch against the live edge set: returns (ins, del).
+    def normalize(self, updates, weights=None):
+        """Net out a batch against the live relation state.
 
-        Device-resident: one jitted probe against the packed live LSM —
-        O(|Δ|·log|E|), no full-graph scan, no mirror pull.
+        Array form (edge sugar): ``normalize(rows [N,2], weights)`` returns
+        ``(ins, dels)``.  Dict form: ``normalize({rel: (rows, w), ...})``
+        returns ``{rel: (ins, dels), ...}`` — one epoch, many relations.
+        Wrong-arity / negative-id / non-integer batches raise instead of
+        being silently reshaped.
+
+        Device-resident: one jitted probe per relation against its packed
+        live LSM — O(|Δ|·log|R|), no full scan, no mirror pull.
         """
         self.stats.normalize_calls += 1
-        updates = np.asarray(updates, np.int32).reshape(-1, 2)
-        weights = np.asarray(weights, np.int32)
+        if isinstance(updates, dict):
+            if weights is not None:
+                raise ValueError(
+                    "per-relation batches carry their own weights: pass "
+                    "{rel: (rows, weights)}, not a top-level weights "
+                    "argument")
+            return {rel: self._normalize_rel(rel, *self._split(rel, batch))
+                    for rel, batch in updates.items()}
+        return self._normalize_rel("edge", updates, weights)
+
+    def _split(self, rel: str, batch):
+        """One relation's update entry: a bare row array, or (rows, w)."""
+        if isinstance(batch, tuple):
+            if len(batch) != 2:
+                raise ValueError(
+                    f"{rel!r} update entry must be rows or (rows, "
+                    f"weights), got a {len(batch)}-tuple")
+            return batch
+        return batch, None
+
+    def _normalize_rel(self, rel: str, updates, weights
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        st = self._rel(rel)
+        updates, weights = _check_batch(rel, updates, weights, st.arity)
         if not self.device_resident:
-            return self._normalize_host(updates, weights)
+            return self._normalize_host(rel, updates, weights)
+        SENT = np.int64(csr.SENTINEL)
+        # degenerate rows (any repeated vertex — the n-ary self-loop) and
+        # zero weights are masked to the sentinel on the host: delta-sized
+        valid = ~_degenerate_rows(updates) & (weights != 0)
+        hi, lo = _pack_rows(updates, st.arity)
+        hi = np.where(valid, hi, SENT)
+        lo = np.where(valid, lo, SENT)
         B = _pow2(updates.shape[0])
-        upd = np.zeros((B, 2), np.int32)  # pad rows are self-loops, w=0
-        wts = np.zeros(B, np.int32)
-        upd[:updates.shape[0]] = updates
-        wts[:weights.shape[0]] = weights
-        dup, dw = jnp.asarray(upd), jnp.asarray(wts)
+        ph = np.full(B, SENT, np.int64)
+        pl = np.full(B, SENT, np.int64)
+        pw = np.zeros(B, np.int32)
+        ph[:hi.shape[0]] = hi
+        pl[:lo.shape[0]] = lo
+        pw[:weights.shape[0]] = weights
+        dh, dl, dw = jnp.asarray(ph), jnp.asarray(pl), jnp.asarray(pw)
         with _device_scope():
-            oi, ni, od, nd = _normalize_core(dup, dw, self._lb,
-                                             self._lc_ins, self._lc_del,
-                                             sharded=bool(self.shard_w))
-        ins = _unpack2(np.asarray(oi)[:int(ni)])
-        dels = _unpack2(np.asarray(od)[:int(nd)])
+            oih, oil, ni, odh, odl, nd = _normalize_core(
+                dh, dl, dw, st.lb, st.lc_ins, st.lc_del,
+                sharded=bool(self.shard_w))
+        ni, nd = int(ni), int(nd)
+        ins = _unpack_rows(np.asarray(oih)[:ni], np.asarray(oil)[:ni],
+                           st.arity)
+        dels = _unpack_rows(np.asarray(odh)[:nd], np.asarray(odl)[:nd],
+                            st.arity)
         return ins, dels
 
-    def _normalize_host(self, updates: np.ndarray, weights: np.ndarray):
+    def _normalize_host(self, rel: str, updates: np.ndarray,
+                        weights: np.ndarray):
         """Legacy host path, probing the incrementally-maintained sorted
-        ``_packed_live`` cache (no per-call re-pack of the edge list)."""
-        keep = updates[:, 0] != updates[:, 1]
+        packed cache (no per-call re-pack of the live rows)."""
+        st = self._rel(rel)
+        keep = ~_degenerate_rows(updates)
         updates, weights = updates[keep], weights[keep]
-        packed = _pack2(updates[:, 0], updates[:, 1])
-        uniq, inv = np.unique(packed, return_inverse=True)
-        net = np.zeros(uniq.shape[0], np.int64)
-        np.add.at(net, inv, weights)
-        rows = _unpack2(uniq)
-        live = self._packed_live
-        if live.size:
-            pos = np.searchsorted(live, uniq)
-            exists = (pos < live.shape[0]) & \
-                (live[np.minimum(pos, live.shape[0] - 1)] == uniq)
+        if st.arity == 2:
+            packed = _pack2(updates[:, 0], updates[:, 1])
+            uniq, inv = np.unique(packed, return_inverse=True)
+            net = np.zeros(uniq.shape[0], np.int64)
+            np.add.at(net, inv, weights)
+            rows = _unpack2(uniq)
+            live = st.packed
+            if live.size:
+                pos = np.searchsorted(live, uniq)
+                exists = (pos < live.shape[0]) & \
+                    (live[np.minimum(pos, live.shape[0] - 1)] == uniq)
+            else:
+                exists = np.zeros(uniq.shape[0], bool)
         else:
-            exists = np.zeros(uniq.shape[0], bool)
+            hi, lo = _pack_rows(updates, st.arity)
+            pairs = np.stack([hi, lo], 1)
+            uniq, inv = np.unique(pairs, axis=0, return_inverse=True)
+            net = np.zeros(uniq.shape[0], np.int64)
+            np.add.at(net, inv.reshape(-1), weights)
+            rows = _unpack_rows(uniq[:, 0], uniq[:, 1], st.arity)
+            lh, ll = st.packed_pair
+            exists = rows_isin(uniq, np.stack([lh, ll], 1))
         ins = rows[(net > 0) & ~exists]
         dels = rows[(net < 0) & exists]
         return ins.astype(np.int32), dels.astype(np.int32)
@@ -634,28 +1032,32 @@ class RegionStore:
             self._maybe_compact_host(force)
             return
         use_k = _merge_kernel_on() and not self.shard_w
-        nb, nci, ncd = self._n_live
-        if (force or _total(nci) + _total(ncd) >
-                self.compact_ratio * max(_total(nb), 1)) and \
-                (_total(nci) or _total(ncd)):
-            new_nb = np.asarray(nb) - np.asarray(ncd) + np.asarray(nci)
-            with _device_scope():
-                self._lb = _compact_fold(self._lb, self._lc_ins,
-                                         self._lc_del,
-                                         out_cap=_pow2(_maxn(new_nb)),
-                                         sharded=bool(self.shard_w),
-                                         use_kernel=use_k)
-            zero = np.zeros(self.shard_w, np.int64) if self.shard_w else 0
-            self._lc_ins = _empty_packed(self.shard_w)
-            self._lc_del = _empty_packed(self.shard_w)
-            self._n_live = [new_nb if self.shard_w else int(new_nb),
-                            zero, zero]
-            self.stats.live_compactions += 1
-            self._edges_mirror = None
-            # invariant audit: cdel ⊆ base and cins ∩ base = ∅ make the
-            # compacted size exact arithmetic — a mismatch means corruption
-            assert (np.asarray(_count_of(self._lb)) == new_nb).all()
+        for st in self._rels.values():
+            nb, nci, ncd = st.n_live
+            if (force or _total(nci) + _total(ncd) >
+                    self.compact_ratio * max(_total(nb), 1)) and \
+                    (_total(nci) or _total(ncd)):
+                new_nb = np.asarray(nb) - np.asarray(ncd) + np.asarray(nci)
+                with _device_scope():
+                    st.lb = _compact_fold(st.lb, st.lc_ins, st.lc_del,
+                                          out_cap=_pow2(_maxn(new_nb)),
+                                          sharded=bool(self.shard_w),
+                                          use_kernel=use_k)
+                zero = np.zeros(self.shard_w, np.int64) if self.shard_w \
+                    else 0
+                st.lc_ins = _empty_packed(self.shard_w, st.arity)
+                st.lc_del = _empty_packed(self.shard_w, st.arity)
+                st.n_live = [new_nb if self.shard_w else int(new_nb),
+                             zero, zero]
+                self.stats.live_compactions += 1
+                st.mirror = None
+                # invariant audit: cdel ⊆ base and cins ∩ base = ∅ make the
+                # compacted size exact arithmetic — a mismatch means
+                # corruption
+                assert (np.asarray(_count_of(st.lb)) == new_nb).all()
         for reg in self.projections.values():
+            if reg.derived:
+                continue  # rebuilt from the relation rows on demand
             committed = _total(reg.n_cins) + _total(reg.n_cdel)
             if not (force or committed >
                     self.compact_ratio * max(_total(reg.n_base), 1)):
@@ -683,6 +1085,8 @@ class RegionStore:
 
     def _maybe_compact_host(self, force: bool = False):
         for reg in self.projections.values():
+            if reg.derived:
+                continue
             h = reg._host
             committed = h["cins"].shape[0] + h["cdel"].shape[0]
             if force or committed > self.compact_ratio * max(
@@ -696,42 +1100,84 @@ class RegionStore:
                 h["cdel"] = h["cdel"][:0]
                 reg.refresh()
 
-    def begin_epoch(self, ins: np.ndarray, dels: np.ndarray):
-        """Stage one normalized batch as the uncommitted region of EVERY
+    def _as_batches(self, ins, dels=None) -> Dict:
+        """Array sugar -> per-relation {rel: (ins, dels)} batches.
+
+        Accepts the normalized-dict form ``({rel: (ins, dels)}, None)``,
+        the two-dict form ``({rel: ins}, {rel: dels})``, or the legacy
+        edge arrays ``(ins, dels)``.
+        """
+        if isinstance(ins, dict):
+            out = {}
+            if dels is None:
+                for rel, pair in ins.items():
+                    ar = self._rel(rel).arity
+                    ri, rd = pair
+                    out[rel] = (np.asarray(ri, np.int32).reshape(-1, ar),
+                                np.asarray(rd, np.int32).reshape(-1, ar))
+                return out
+            if not isinstance(dels, dict):
+                raise ValueError("mixed dict/array (ins, dels) batches")
+            for rel in set(ins) | set(dels):
+                ar = self._rel(rel).arity
+                empty = np.zeros((0, ar), np.int32)
+                out[rel] = (np.asarray(ins.get(rel, empty),
+                                       np.int32).reshape(-1, ar),
+                            np.asarray(dels.get(rel, empty),
+                                       np.int32).reshape(-1, ar))
+            return out
+        return {"edge": (np.asarray(ins, np.int32).reshape(-1, 2),
+                         np.asarray(dels, np.int32).reshape(-1, 2))}
+
+    def begin_epoch(self, ins, dels=None):
+        """Stage one normalized batch (array sugar for the edge relation,
+        or per-relation dicts) as the uncommitted region of EVERY
         projection (after the eager re-insertion compaction check)."""
+        batches = self._as_batches(ins, dels)
         # eager compaction iff a committed delete is being re-inserted
         # (would create a positive/negative region overlap, DESIGN.md §2)
-        if self.device_resident:
-            need = False
-            if ins.size:
-                if _total(self._n_live[2]):
-                    pi = _pack2(ins[:, 0], ins[:, 1])
-                    qk, qv = _pad_probe(pi, np.zeros(pi.shape[0], np.int32),
+        need = False
+        for rel, (r_ins, r_dels) in batches.items():
+            if not r_ins.size:
+                continue
+            st = self._rel(rel)
+            if self.device_resident:
+                if _total(st.n_live[2]):
+                    pi = _pack_rows(r_ins, st.arity)
+                    probe = pi if st.arity > 2 else pi[0]
+                    qk, qv = _pad_probe(probe,
+                                        np.zeros(r_ins.shape[0], np.int32),
                                         np.int64(csr.SENTINEL))
-                    need = bool(_any_member(self._lc_del, qk, qv,
-                                            sharded=bool(self.shard_w)))
+                    need = need or bool(_any_member(
+                        st.lc_del, qk, qv, sharded=bool(self.shard_w)))
                 if not need:
-                    need = any(reg.probe_cdel(ins)
+                    need = any(reg.probe_cdel(r_ins)
                                for reg in self.projections.values()
-                               if _total(reg.n_cdel))
-        else:
-            need = any(_inter_rows(ins, reg._host["cdel"]).size
-                       for reg in self.projections.values())
-        if ins.size and int(ins.max()) >= int(csr.SENTINEL32) and \
-                any(reg.narrow for reg in self.projections.values()):
-            raise ValueError(
-                f"vertex id >= {int(csr.SENTINEL32)} collides with the "
-                "narrow int32 index sentinel of an existing projection; "
-                "ids this large must be present in the initial edge set "
-                "so the projection is built wide")
+                               if reg.rel == rel and not reg.derived
+                               and _total(reg.n_cdel))
+            else:
+                need = need or any(
+                    _inter_rows(r_ins, reg._host["cdel"]).size
+                    for reg in self.projections.values()
+                    if reg.rel == rel and not reg.derived)
+            if int(r_ins.max()) >= int(csr.SENTINEL32) and \
+                    any(reg.narrow for reg in self.projections.values()
+                        if reg.rel == rel):
+                raise ValueError(
+                    f"vertex id >= {int(csr.SENTINEL32)} collides with "
+                    "the narrow int32 index sentinel of an existing "
+                    f"{rel!r} projection; ids this large must be present "
+                    "in the initial tuples so the projection is built "
+                    "wide")
         self._maybe_compact(force=bool(need))
+        self._staged = batches
         for reg in self.projections.values():
-            reg.set_uncommitted(ins, dels)
-        self._staged = (ins, dels)
+            reg.set_uncommitted(*self._staged_for(reg.rel))
 
-    def commit(self, ins: np.ndarray, dels: np.ndarray):
+    def commit(self, ins, dels=None):
         """Fold uins/udel into the committed regions (with cancellation) and
-        advance the live edge set — once per epoch, shared by every query.
+        advance every updated relation's live set — once per epoch, shared
+        by every query.
 
         Device-resident: jitted sorted-merge/diff folds over the committed
         regions and the staged delta only; the compacted base region object
@@ -744,37 +1190,52 @@ class RegionStore:
             # set first (a live "insert" or absent "delete" must be a no-op,
             # exactly as normalize guarantees on the staged path), then
             # stage — so projections and the live set fold the SAME batch
-            ins = np.asarray(ins, np.int32).reshape(-1, 2)
-            dels = np.asarray(dels, np.int32).reshape(-1, 2)
-            ins, dels = self.normalize(
-                np.concatenate([ins, dels]),
-                np.concatenate([np.ones(ins.shape[0], np.int32),
-                                -np.ones(dels.shape[0], np.int32)]))
-            self.begin_epoch(ins, dels)
-        ins, dels = self._staged
+            raw = self._as_batches(ins, dels)
+            self.stats.normalize_calls += 1  # matches the staged path
+            netted = {
+                rel: self._normalize_rel(
+                    rel,
+                    np.concatenate([ri, rd]),
+                    np.concatenate([np.ones(ri.shape[0], np.int32),
+                                    -np.ones(rd.shape[0], np.int32)]))
+                for rel, (ri, rd) in raw.items()}
+            self.begin_epoch(netted)
+        batches = self._staged
         self._staged = None
         if not self.device_resident:
-            self._commit_host(ins, dels)
+            self._commit_host(batches)
             return
         use_k = _merge_kernel_on() and not self.shard_w
-        # live-set LSM fold (store-level, packed; shard-local when sharded)
-        li = _packed_index(ins, self.shard_w)
-        ld = _packed_index(dels, self.shard_w)
-        nb, nci, ncd = self._n_live
-        live_cins_cap = _pow2(_maxn(np.asarray(nci)
-                                    + np.asarray(_count_of(li))))
-        live_cdel_cap = _pow2(_maxn(np.asarray(ncd)
-                                    + np.asarray(_count_of(ld))))
-        with _device_scope():
-            new_ci, new_cd = _commit_fold(
-                self._lb, self._lc_ins, self._lc_del, li, ld,
-                cins_cap=live_cins_cap, cdel_cap=live_cdel_cap,
-                sharded=bool(self.shard_w), use_kernel=use_k)
-        self._lc_ins, self._lc_del = new_ci, new_cd
-        self._n_live = [nb, _count_of(new_ci), _count_of(new_cd)]
-        self._edges_mirror = None
+        for rel, (r_ins, r_dels) in batches.items():
+            if not (r_ins.size or r_dels.size):
+                continue
+            st = self._rel(rel)
+            # live-set LSM fold (per relation; shard-local when sharded)
+            li = _packed_index(r_ins, self.shard_w, st.arity)
+            ld = _packed_index(r_dels, self.shard_w, st.arity)
+            nb, nci, ncd = st.n_live
+            live_cins_cap = _pow2(_maxn(np.asarray(nci)
+                                        + np.asarray(_count_of(li))))
+            live_cdel_cap = _pow2(_maxn(np.asarray(ncd)
+                                        + np.asarray(_count_of(ld))))
+            with _device_scope():
+                new_ci, new_cd = _commit_fold(
+                    st.lb, st.lc_ins, st.lc_del, li, ld,
+                    cins_cap=live_cins_cap, cdel_cap=live_cdel_cap,
+                    sharded=bool(self.shard_w), use_kernel=use_k)
+            st.lc_ins, st.lc_del = new_ci, new_cd
+            st.n_live = [nb, _count_of(new_ci), _count_of(new_cd)]
+            st.mirror = None
         # per-projection folds (vmapped over shards when distributed)
         for reg in self.projections.values():
+            r_ins, r_dels = batches.get(
+                reg.rel, (np.zeros((0, reg.arity), np.int32),) * 2)
+            if reg.derived:
+                if r_ins.size or r_dels.size:
+                    reg._derived_cache.clear()  # committed rows changed
+                continue
+            if not (r_ins.size or r_dels.size):
+                continue  # untouched relation: regions pass through
             ci_cap = _pow2(_maxn(np.asarray(reg.n_cins)
                                  + np.asarray(_count_of(reg.d_uins))))
             cd_cap = _pow2(_maxn(np.asarray(reg.n_cdel)
@@ -787,51 +1248,73 @@ class RegionStore:
             reg.d_cins, reg.d_cdel = d_cins, d_cdel
             reg.n_cins = _count_of(d_cins)
             reg.n_cdel = _count_of(d_cdel)
-            reg.set_uncommitted(ins[:0], dels[:0])
+            reg.set_uncommitted(r_ins[:0], r_dels[:0])
             # commit never touches d_base: keep its mirror (compaction's
             # full clear is the one that must drop it)
             reg._mirror.pop("cins", None)
             reg._mirror.pop("cdel", None)
         self._maybe_compact()
 
-    def _commit_host(self, ins: np.ndarray, dels: np.ndarray):
+    def _commit_host(self, batches: Dict):
         for reg in self.projections.values():
+            r_ins, r_dels = batches.get(
+                reg.rel, (np.zeros((0, reg.arity), np.int32),) * 2)
+            if reg.derived:
+                if r_ins.size or r_dels.size:
+                    reg._derived_cache.clear()
+                continue
             h = reg._host
             cins = np.unique(np.concatenate(
-                [_diff_rows(h["cins"], dels), _diff_rows(ins, h["cdel"])]),
-                axis=0) if (ins.size or h["cins"].size) else h["cins"]
+                [_diff_rows(h["cins"], r_dels),
+                 _diff_rows(r_ins, h["cdel"])]),
+                axis=0) if (r_ins.size or h["cins"].size) else h["cins"]
             cdel = np.unique(np.concatenate(
-                [h["cdel"], _inter_rows(dels, h["base"])]), axis=0) \
-                if (dels.size or h["cdel"].size) else h["cdel"]
+                [h["cdel"], _inter_rows(r_dels, h["base"])]), axis=0) \
+                if (r_dels.size or h["cdel"].size) else h["cdel"]
             h["cins"], h["cdel"] = cins, cdel
             reg.refresh(("cins", "cdel"))
-            reg.set_uncommitted(ins[:0], dels[:0])
-        # incremental sorted maintenance of the packed live cache (and the
-        # edge rows derived from it): O(|E|) memmove, no re-pack, no re-sort
-        if ins.size:
-            pi = np.sort(_pack2(ins[:, 0], ins[:, 1]))
-            self._packed_live = np.insert(
-                self._packed_live, np.searchsorted(self._packed_live, pi),
-                pi)
-        if dels.size:
-            pd = np.sort(_pack2(dels[:, 0], dels[:, 1]))
-            pos = np.searchsorted(self._packed_live, pd)
-            # normalize guarantees dels ⊆ live, but stay tolerant of raw
-            # commit() calls: only positions that actually match are removed
-            hit = (pos < self._packed_live.shape[0]) & \
-                (self._packed_live[np.minimum(
-                    pos, max(self._packed_live.shape[0] - 1, 0))] == pd)
-            self._packed_live = np.delete(self._packed_live, pos[hit])
-        self._edges = _unpack2(self._packed_live)
+            reg.set_uncommitted(r_ins[:0], r_dels[:0])
+        for rel, (ins, dels) in batches.items():
+            st = self._rel(rel)
+            if not (ins.size or dels.size):
+                continue
+            if st.arity == 2:
+                # incremental sorted maintenance of the packed live cache
+                # (and the rows derived from it): O(|E|) memmove, no
+                # re-pack, no re-sort
+                if ins.size:
+                    pi = np.sort(_pack2(ins[:, 0], ins[:, 1]))
+                    st.packed = np.insert(
+                        st.packed, np.searchsorted(st.packed, pi), pi)
+                if dels.size:
+                    pd = np.sort(_pack2(dels[:, 0], dels[:, 1]))
+                    pos = np.searchsorted(st.packed, pd)
+                    # normalize guarantees dels ⊆ live, but stay tolerant
+                    # of raw commit() calls: only positions that actually
+                    # match are removed
+                    hit = (pos < st.packed.shape[0]) & \
+                        (st.packed[np.minimum(
+                            pos, max(st.packed.shape[0] - 1, 0))] == pd)
+                    st.packed = np.delete(st.packed, pos[hit])
+                st.rows = _unpack2(st.packed)
+            else:
+                rows = st.rows
+                if dels.size:
+                    rows = rows[~rows_isin(rows, dels)]
+                if ins.size:
+                    rows = np.unique(np.concatenate([rows, ins]), axis=0)
+                st.rows = rows
+                self._refresh_host_cache(st)
         self._maybe_compact()
 
 
 class DeltaBigJoin:
-    """Incremental maintenance of one query over one dynamic edge relation.
+    """Incremental maintenance of one query over dynamic n-ary relations.
 
-    General n-ary dynamic relations follow the same structure; the engine is
-    specialized (as the paper's implementation is, §4) to graph workloads
-    where every atom reads the single ``edge`` relation.
+    Every atom may read any stored relation (the single binary ``edge``
+    relation of subgraph queries, the ternary ``tri`` relation of §5.4, a
+    4-ary relation, or a mix); each dQ_i seeds from ITS atom's relation
+    batch and the engine runs the same dataflow over all of them.
 
     Region/commit bookkeeping lives in a :class:`RegionStore`; by default the
     engine owns a private one, but a shared store may be injected (``store=``)
@@ -840,7 +1323,7 @@ class DeltaBigJoin:
     code; this class remains the single-query engine underneath it.
     """
 
-    def __init__(self, query: Query, initial_edges: Optional[np.ndarray],
+    def __init__(self, query: Query, initial_edges,
                  cfg: BigJoinConfig = BigJoinConfig(mode="collect"),
                  compact_ratio: float = 0.5,
                  store: Optional[RegionStore] = None,
@@ -857,8 +1340,7 @@ class DeltaBigJoin:
         for plan in self.plans:
             self.store.ensure_plan(plan)
 
-    def _new_store(self, edges: np.ndarray, compact_ratio: float
-                   ) -> RegionStore:
+    def _new_store(self, edges, compact_ratio: float) -> RegionStore:
         """Private store; the distributed engine overrides this to build
         worker-sharded device regions."""
         return RegionStore(edges, shard_w=0, compact_ratio=compact_ratio,
@@ -873,7 +1355,7 @@ class DeltaBigJoin:
     def projections(self) -> Dict[Projection, _Regions]:
         return self.store.projections
 
-    def normalize(self, updates, weights):
+    def normalize(self, updates, weights=None):
         return self.store.normalize(updates, weights)
 
     def _maybe_compact(self, force: bool = False):
@@ -885,23 +1367,29 @@ class DeltaBigJoin:
         return run_bigjoin(plan, indices, seed, weights, cfg=self.cfg)
 
     # ------------------------------------------------------------------
-    def run_delta_plans(self, ins: np.ndarray, dels: np.ndarray
-                        ) -> DeltaResult:
+    def run_delta_plans(self, ins, dels=None) -> DeltaResult:
         """Evaluate dAQ_1..dAQ_n for one staged batch (the store must have
         ``begin_epoch``-ed it); does NOT commit — the caller owns the epoch
-        boundary, so a facade can run many queries off one staged batch."""
-        delta_edges = np.concatenate([ins, dels], axis=0)
-        delta_w = np.concatenate([
-            np.ones(ins.shape[0], np.int32),
-            -np.ones(dels.shape[0], np.int32)])
+        boundary, so a facade can run many queries off one staged batch.
 
+        ``(ins, dels)`` edge arrays, or the per-relation batch dict —
+        each dQ_i seeds from the batch of ITS seed atom's relation (n-ary
+        dR tuples seed the dataflow at P_r, plan.seed_width)."""
+        batches = self.store._as_batches(ins, dels)
         per_dq: List[JoinResult] = []
         total = 0
         tuples, wts = [], []
         for plan in self.plans:
-            if delta_edges.size == 0:
-                break
-            seed = delta_edges[:, list(plan.seed_cols)]
+            rel = plan.query.atoms[plan.seed_atom].rel
+            r_ins, r_dels = batches.get(
+                rel, (np.zeros((0, 2), np.int32),) * 2)
+            if r_ins.size == 0 and r_dels.size == 0:
+                continue  # this relation did not change: dQ_i is empty
+            delta_rows = np.concatenate([r_ins, r_dels], axis=0)
+            delta_w = np.concatenate([
+                np.ones(r_ins.shape[0], np.int32),
+                -np.ones(r_dels.shape[0], np.int32)])
+            seed = delta_rows[:, list(plan.seed_cols)]
             res = self._run_plan(plan, self.store.indices_for(plan), seed,
                                  delta_w)
             per_dq.append(res)
@@ -913,21 +1401,20 @@ class DeltaBigJoin:
         out_w = np.concatenate(wts) if wts else None
         return DeltaResult(total, out_t, out_w, per_dq)
 
-    def apply(self, updates: np.ndarray,
-              weights: Optional[np.ndarray] = None) -> DeltaResult:
-        """Process one update batch: emit output changes, then commit."""
-        updates = np.asarray(updates, np.int32).reshape(-1, 2)
-        if weights is None:
-            weights = np.ones(updates.shape[0], np.int32)
-        ins, dels = self.store.normalize(updates, weights)
-        if ins.size == 0 and dels.size == 0:
-            # net-zero batch (no-op inserts of live edges, deletes of absent
-            # edges, +/- cancellations): an EXACT no-op — no region rebuilds,
-            # no compaction, no dataflow run (tests/test_delta_stream.py).
+    def apply(self, updates, weights=None) -> DeltaResult:
+        """Process one update batch (edge arrays, or a per-relation dict
+        ``{rel: (rows, weights)}``): emit output changes, then commit."""
+        batches = self.store.normalize(updates, weights)
+        if not isinstance(batches, dict):
+            batches = {"edge": batches}
+        if all(i.size == 0 and d.size == 0 for i, d in batches.values()):
+            # net-zero batch (no-op inserts of live tuples, deletes of
+            # absent tuples, +/- cancellations): an EXACT no-op — no region
+            # rebuilds, no compaction, no dataflow run.
             return DeltaResult(0, None, None, [])
-        self.store.begin_epoch(ins, dels)
-        result = self.run_delta_plans(ins, dels)
-        self.store.commit(ins, dels)
+        self.store.begin_epoch(batches)
+        result = self.run_delta_plans(batches)
+        self.store.commit(batches)
         return result
 
 
@@ -949,17 +1436,37 @@ def rows_isin(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.isin(inv[:a.shape[0]], inv[a.shape[0]:])
 
 
-def delta_oracle(query: Query, edges_before: np.ndarray,
-                 edges_after: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def canon_signed(tuples: Optional[np.ndarray],
+                 weights: Optional[np.ndarray]) -> list:
+    """Canonical form of a signed tuple multiset: sorted (tuple, net
+    weight != 0) pairs.  THE comparison key of every bit-exact
+    differential (tests, subprocess harnesses, benchmarks, examples) —
+    one implementation, so the checks can never drift."""
+    if tuples is None or tuples.size == 0:
+        return []
+    uniq, inv = np.unique(tuples, axis=0, return_inverse=True)
+    net = np.zeros(uniq.shape[0], np.int64)
+    np.add.at(net, inv.reshape(-1), weights)
+    return sorted((tuple(r), int(n)) for r, n in zip(uniq, net) if n != 0)
+
+
+def delta_oracle(query: Query, edges_before, edges_after
+                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Ground truth: signed difference of full recomputation.
 
-    Returns (tuples [N, m] int32, weights [N] ±1) with the added rows first,
-    each block in lexicographic row order (``np.unique`` order — the same
-    order the old set-of-tuples implementation produced via ``sorted``).
+    ``edges_before`` / ``edges_after`` are edge arrays (sugar) or full
+    relation dicts ``{rel: rows}``.  Returns (tuples [N, m] int32, weights
+    [N] ±1) with the added rows first, each block in lexicographic row
+    order (``np.unique`` order — the same order the old set-of-tuples
+    implementation produced via ``sorted``).
     """
     from repro.core.generic_join import generic_join
-    a, _ = generic_join(query, {"edge": edges_before})
-    b, _ = generic_join(query, {"edge": edges_after})
+    before = edges_before if isinstance(edges_before, dict) \
+        else {"edge": edges_before}
+    after = edges_after if isinstance(edges_after, dict) \
+        else {"edge": edges_after}
+    a, _ = generic_join(query, before)
+    b, _ = generic_join(query, after)
     m = query.num_attrs
     a = np.unique(np.asarray(a, np.int32).reshape(-1, m), axis=0)
     b = np.unique(np.asarray(b, np.int32).reshape(-1, m), axis=0)

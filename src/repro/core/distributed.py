@@ -49,11 +49,16 @@ AXIS = "workers"
 # hashing / partitioning
 # ---------------------------------------------------------------------------
 
-def owner_of_np(key: np.ndarray, w: int) -> np.ndarray:
+def owner_of_np(key, w: int) -> np.ndarray:
     return csr.shard_of(key, w)
 
 
-def owner_of(key: jax.Array, w: int) -> jax.Array:
+def owner_of(key, w: int) -> jax.Array:
+    """Worker owning each packed key — composite (hi, lo) pairs fold into
+    one routing word first (``csr.combine_key``, shared with the host-side
+    shard builds so routing and placement can never disagree)."""
+    if isinstance(key, tuple):
+        key = csr.combine_key(*key)
     h = (key.astype(jnp.uint64) * jnp.uint64(csr.SHARD_MIX)) >> jnp.uint64(33)
     return (h % jnp.uint64(w)).astype(jnp.int32)
 
@@ -100,7 +105,9 @@ def partition_indices(plan: Plan, relations: Dict[str, np.ndarray],
         arity = max(max(key_pos, default=0), ext_pos) + 1
 
         def shard(name):
-            rows = np.asarray(regions[name]).reshape(-1, arity)
+            rows = np.asarray(regions[name])
+            if rows.ndim != 2:  # flat legacy arrays: minimal covering arity
+                rows = rows.reshape(-1, arity)
             return csr.build_sharded_index(rows, key_pos, ext_pos, w)
 
         out[index_id] = VersionedIndex(
@@ -162,18 +169,34 @@ def remote_service(queries, dest: jax.Array, valid: jax.Array, reply_fn,
     return replies, ok, recv_load
 
 
-def dedup_requests(key: jax.Array, valid: jax.Array):
+def dedup_requests(key, valid: jax.Array):
     """BiGJoin-S aggregation (§3.4.2): collapse duplicate request keys.
 
-    Returns (rep_idx [B] -> representative row, is_rep [B]).  Only
+    ``key`` is one array or a tuple of arrays (composite keys dedup on the
+    exact word tuple — never on a lossy hash, which could merge distinct
+    keys).  Returns (rep_idx [B] -> representative row, is_rep [B]).  Only
     representative rows are routed; replies are read through rep_idx.
     """
-    B = key.shape[0]
-    skey = jnp.where(valid, key,
-                     jnp.asarray(np.iinfo(key.dtype.name).max, key.dtype))
-    order = jnp.argsort(skey, stable=True).astype(jnp.int32)
-    sk = skey[order]
-    first = jnp.searchsorted(sk, sk, side="left").astype(jnp.int32)
+    keys = key if isinstance(key, tuple) else (key,)
+    B = keys[0].shape[0]
+    skeys = tuple(
+        jnp.where(valid, k, jnp.asarray(np.iinfo(k.dtype.name).max, k.dtype))
+        for k in keys)
+    if len(skeys) == 1:
+        order = jnp.argsort(skeys[0], stable=True).astype(jnp.int32)
+        sk = skeys[0][order]
+        first = jnp.searchsorted(sk, sk, side="left").astype(jnp.int32)
+    else:
+        # lexsort: LAST key is primary, so feed the tuple reversed
+        order = jnp.lexsort(skeys[::-1]).astype(jnp.int32)
+        sk = tuple(k[order] for k in skeys)
+        diff = jnp.zeros(B - 1, bool) if B > 1 else jnp.zeros(0, bool)
+        for c in sk:
+            diff = diff | (c[1:] != c[:-1])
+        starts = jnp.concatenate([jnp.ones(1, bool), diff])
+        # index of each sorted row's group head: running max of start marks
+        first = jax.lax.cummax(
+            jnp.where(starts, jnp.arange(B, dtype=jnp.int32), 0))
     rep_sorted = order[first]  # representative original row per sorted pos
     rep_idx = jnp.zeros(B, jnp.int32).at[order].set(rep_sorted)
     is_rep = jnp.zeros(B, bool).at[rep_idx].set(True) & valid
@@ -233,9 +256,16 @@ def _remote_member(idx_local: VersionedIndex, qkey, qval, dest, valid, w,
         mem, dele = idx_local.signed_member(qk, qv, use_kernel, interpret)
         return (mem.astype(jnp.int32) | (dele.astype(jnp.int32) << 1),)
 
-    pair = (qkey.astype(jnp.int64) << 32) | qval.astype(jnp.int64) if \
-        qkey.dtype == jnp.int32 else qkey  # dedup key includes val when safe
-    if aggregate and qkey.dtype == jnp.int32:
+    # dedup on the exact (key, val) tuple: packed into one word for narrow
+    # int32 keys, an explicit word tuple for composite keys; wide int64
+    # single-word keys cannot widen losslessly, so they skip aggregation
+    if isinstance(qkey, tuple):
+        pair = qkey + (qval.astype(jnp.int64),)
+    elif qkey.dtype == jnp.int32:
+        pair = (qkey.astype(jnp.int64) << 32) | qval.astype(jnp.int64)
+    else:
+        pair = None
+    if aggregate and pair is not None:
         rep_idx, is_rep = dedup_requests(pair, valid)
         (bits,), ok, load = remote_service((qkey, qval), dest, is_rep, reply,
                                            w, cap, axis)
@@ -434,9 +464,10 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
         local = {k: _local(v) for k, v in indices.items()}
         state = make_state(plan, dcfg.base, seed_capacity=seed.shape[0])
 
-        # seed enqueue with remote seed filters
+        # seed enqueue with remote seed filters (P_w prefixes: width 2 for
+        # projection-seeded plans, the seed atom's arity for n-ary deltas)
         alive = jnp.arange(seed.shape[0], dtype=jnp.int32) < seed_n
-        bound = tuple(plan.attr_order[:2])
+        bound = tuple(plan.attr_order[:plan.seed_width])
         for b in plan.seed_filters:
             idx = local[b.index_id]
             qk = _binding_key(seed, bound, b.key_attrs, idx)
@@ -450,43 +481,66 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
         for f in plan.seed_ineq:
             alive = alive & (seed[:, bound.index(f.lo)]
                              < seed[:, bound.index(f.hi)])
-        q0 = state.queues[0]
-        npfx, n_new, ovf = _scatter_append(q0.prefix, q0.size, seed, alive)
-        nk, _, _ = _scatter_append(
-            q0.k, q0.size, jnp.zeros(seed.shape[0], jnp.int32), alive)
-        nw, _, _ = _scatter_append(
-            q0.weight, q0.size, seed_w.astype(jnp.int32), alive)
-        from repro.core.bigjoin import LevelQueue
-        queues = list(state.queues)
-        queues[0] = LevelQueue(npfx, nk, nw, q0.size + n_new)
-        state = dataclasses.replace(state, queues=tuple(queues),
-                                    overflow=state.overflow | ovf)
-        if dcfg.balance:
-            from repro.core.balance import make_piece_queues
-            pieces = make_piece_queues(plan, dcfg)
+        if not plan.levels:
+            # the seed covers every attribute (single-atom delta plans):
+            # filtered seeds ARE the outputs; nothing to drain
+            wts = seed_w.astype(jnp.int32)
+            out_count = state.out_count + (wts * alive).sum().astype(
+                jnp.int64)
+            out_buf, out_weight = state.out_buf, state.out_weight
+            out_n, ovf0 = state.out_n, state.overflow
+            if collect:
+                perm = np.argsort(np.asarray(plan.attr_order))
+                out_buf, n_new, ovf = _scatter_append(
+                    out_buf, out_n, seed[:, perm], alive)
+                out_weight, _, _ = _scatter_append(
+                    out_weight, out_n, wts, alive)
+                out_n = jnp.minimum(out_n + n_new,
+                                    jnp.int32(out_buf.shape[0]))
+                ovf0 = ovf0 | ovf
+            state = dataclasses.replace(
+                state, out_buf=out_buf, out_weight=out_weight, out_n=out_n,
+                out_count=out_count, overflow=ovf0)
+            steps = jnp.asarray(0, jnp.int32)
         else:
-            pieces = ()
+            q0 = state.queues[0]
+            npfx, n_new, ovf = _scatter_append(q0.prefix, q0.size, seed,
+                                               alive)
+            nk, _, _ = _scatter_append(
+                q0.k, q0.size, jnp.zeros(seed.shape[0], jnp.int32), alive)
+            nw, _, _ = _scatter_append(
+                q0.weight, q0.size, seed_w.astype(jnp.int32), alive)
+            from repro.core.bigjoin import LevelQueue
+            queues = list(state.queues)
+            queues[0] = LevelQueue(npfx, nk, nw, q0.size + n_new)
+            state = dataclasses.replace(state, queues=tuple(queues),
+                                        overflow=state.overflow | ovf)
+            if dcfg.balance:
+                from repro.core.balance import make_piece_queues
+                pieces = make_piece_queues(plan, dcfg)
+            else:
+                pieces = ()
 
-        def total_active(carry_state):
-            st, pcs = carry_state
-            sizes = jnp.stack([q.size for q in st.queues]).sum()
-            if pcs:
-                sizes = sizes + jnp.stack([p.size for p in pcs]).sum()
-            return jax.lax.psum(sizes, dcfg.axis) > 0
+            def total_active(carry_state):
+                st, pcs = carry_state
+                sizes = jnp.stack([q.size for q in st.queues]).sum()
+                if pcs:
+                    sizes = sizes + jnp.stack([p.size for p in pcs]).sum()
+                return jax.lax.psum(sizes, dcfg.axis) > 0
 
-        def cond(carry):
-            _, active, it = carry
-            return active & (it < dcfg.max_steps)
+            def cond(carry):
+                _, active, it = carry
+                return active & (it < dcfg.max_steps)
 
-        def body(carry):
-            st, _, it = carry
-            st = step(st, local)
-            return st, total_active(st), it + 1
+            def body(carry):
+                st, _, it = carry
+                st = step(st, local)
+                return st, total_active(st), it + 1
 
-        carry0 = (state, pieces)
-        (state, pieces), _, steps = jax.lax.while_loop(
-            cond, body, (carry0, total_active(carry0),
-                         jnp.asarray(0, jnp.int32)))
+            carry0 = (state, pieces)
+            (state, pieces), _, steps = jax.lax.while_loop(
+                cond, body, (carry0, total_active(carry0),
+                             jnp.asarray(0, jnp.int32)))
 
         count = jax.lax.psum(state.out_count, dcfg.axis)
         props = jax.lax.psum(state.proposals, dcfg.axis)
@@ -560,17 +614,19 @@ def get_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
     return prog
 
 
-def deal_seed(seed: np.ndarray, weights: np.ndarray, w: int
+def deal_seed(seed: np.ndarray, weights: np.ndarray, w: int,
+              width: int = 2
               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Round-robin deal of a seed batch across ``w`` workers, padded to a
     stable pow2 per-worker chunk (keeps the jitted program's shapes — and
-    hence its compile cache — warm across epochs).  Returns
-    (chunks [w,S,2], seed_n [w], wchunks [w,S])."""
-    seed = np.asarray(seed, np.int32).reshape(-1, 2)
+    hence its compile cache — warm across epochs).  ``width`` is the seed
+    prefix width (``plan.seed_width``).  Returns
+    (chunks [w,S,width], seed_n [w], wchunks [w,S])."""
+    seed = np.asarray(seed, np.int32).reshape(-1, width)
     weights = np.asarray(weights, np.int32)
     per = -(-seed.shape[0] // w)
     S = _delta._pow2(per)
-    chunks = np.zeros((w, S, 2), np.int32)
+    chunks = np.zeros((w, S, width), np.int32)
     wchunks = np.zeros((w, S), np.int32)
     seed_n = np.zeros(w, np.int32)
     for k in range(w):
@@ -582,9 +638,9 @@ def deal_seed(seed: np.ndarray, weights: np.ndarray, w: int
 
 
 def run_program(program, w: int, collect: bool, indices,
-                seed: np.ndarray, weights: np.ndarray):
+                seed: np.ndarray, weights: np.ndarray, width: int = 2):
     """Deal the seed, launch one compiled program, unpack psum'd outputs."""
-    chunks, seed_n, wchunks = deal_seed(seed, weights, w)
+    chunks, seed_n, wchunks = deal_seed(seed, weights, w, width)
     out = program(indices, jnp.asarray(chunks), jnp.asarray(seed_n),
                   jnp.asarray(wchunks))
     if bool(out[4]):
@@ -630,9 +686,10 @@ def distributed_join(plan: Plan, relations: Dict[str, np.ndarray],
     assert cfg.num_workers == w
     indices = partition_indices(plan, relations, w)
     seed = seed_tuples_for(plan, relations)
+    sw = plan.seed_width
     per = -(-seed.shape[0] // w)
-    pad = np.zeros((per * w - seed.shape[0], 2), np.int32)
-    chunks = np.concatenate([seed, pad]).reshape(w, per, 2)
+    pad = np.zeros((per * w - seed.shape[0], sw), np.int32)
+    chunks = np.concatenate([seed, pad]).reshape(w, per, sw)
     seed_n = np.full(w, per, np.int32)
     seed_n[-1] = per - pad.shape[0]
     run = build_distributed_program(plan, cfg, mesh)
@@ -760,4 +817,4 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
                 plan, self.dcfg, self.mesh)
         return run_program(self._programs[pi], self.w,
                            self.dcfg.base.mode == "collect", indices,
-                           seed, weights)
+                           seed, weights, width=plan.seed_width)

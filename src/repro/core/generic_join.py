@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import csr
 from repro.core.plan import Plan, make_plan
 from repro.core.query import EDGE, Query
 
@@ -34,21 +35,28 @@ class WorkCounters:
 
 
 class _NpIndex:
-    """Host-side sorted extension index (numpy mirror of csr.IndexData)."""
+    """Host-side sorted extension index (numpy mirror of csr.IndexData).
+
+    Keys come from the ONE shared packer (``csr.pack_key``): a single int64
+    word for <= 2 bound columns, a lexicographic (hi, lo) pair for 3-4 —
+    so the host oracle and the device indices agree by construction.
+    """
 
     def __init__(self, tuples: np.ndarray, key_pos: Tuple[int, ...],
                  ext_pos: int):
         tuples = np.asarray(tuples)
-        cols = [tuples[:, p].astype(np.int64) for p in key_pos]
-        if len(cols) == 0:
-            key = np.zeros(tuples.shape[0], np.int64)
-        elif len(cols) == 1:
-            key = cols[0]
-        elif len(cols) == 2:
-            key = (cols[0] << 32) | cols[1]
-        else:
-            raise NotImplementedError(">2 bound attrs")
+        key = csr.pack_key(tuple(tuples[:, p].astype(np.int32)
+                                 for p in key_pos)) if key_pos else \
+            np.zeros(tuples.shape[0], np.int64)
         val = tuples[:, ext_pos].astype(np.int64)
+        if isinstance(key, tuple):  # composite (hi, lo) key
+            kvl = np.unique(np.stack([key[0], key[1], val], 1), axis=0) \
+                if val.size else np.zeros((0, 3), np.int64)
+            self.key, self.lo = kvl[:, 0], kvl[:, 1]
+            self.val = kvl[:, 2].astype(np.int32)
+            self._packed = None
+            return
+        self.lo = None
         kv = np.unique(np.stack([key, val], 1), axis=0) if key.size else \
             np.zeros((0, 2), np.int64)
         self.key = kv[:, 0]
@@ -57,46 +65,79 @@ class _NpIndex:
         self._packed = ((self.key << 32) | kv[:, 1]
                         if (self.key < 2**31).all() else None)
 
-    def ranges(self, qkey: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def ranges(self, qkey) -> Tuple[np.ndarray, np.ndarray]:
+        if self.lo is not None:
+            qh, ql = qkey
+            s = _lex_searchsorted_np((self.key, self.lo), (qh, ql), "left")
+            e = _lex_searchsorted_np((self.key, self.lo), (qh, ql), "right")
+            return s, (e - s)
         s = np.searchsorted(self.key, qkey, "left")
         e = np.searchsorted(self.key, qkey, "right")
         return s, (e - s)
 
-    def member(self, qkey: np.ndarray, qval: np.ndarray) -> np.ndarray:
+    def member(self, qkey, qval: np.ndarray) -> np.ndarray:
+        qv = qval.astype(np.int64)
+        if self.lo is not None:
+            qh, ql = qkey
+            return _lex_hit_np((self.key, self.lo, self.val.astype(np.int64)),
+                               (qh, ql, qv))
         if self._packed is not None:
-            q = (qkey.astype(np.int64) << 32) | qval.astype(np.int64)
+            q = (qkey.astype(np.int64) << 32) | qv
             pos = np.searchsorted(self._packed, q)
             pos_c = np.minimum(pos, max(len(self._packed) - 1, 0))
             return (len(self._packed) > 0) & (self._packed[pos_c] == q)
         # keys >= 2^31 cannot be packed: vectorized lexicographic binary
         # search over the sorted (key, val) pairs (np.unique sorted them)
-        return _lex_member_np(self.key, self.val, qkey,
-                              qval.astype(np.int64))
+        return _lex_hit_np((self.key, self.val.astype(np.int64)), (qkey, qv))
+
+
+def _lex_searchsorted_np(cols: Tuple[np.ndarray, ...],
+                         qcols: Tuple[np.ndarray, ...],
+                         side: str = "left") -> np.ndarray:
+    """Vectorized lower/upper bound over up-to-3 lex-sorted int64 columns —
+    the numpy mirror of ``csr.lex_searchsorted_cols`` (fixed-depth binary
+    search: O(B log n) vector ops instead of per-query Python probes)."""
+    n = cols[0].shape[0]
+    right = side == "right"
+    if n == 0:
+        return np.zeros(np.asarray(qcols[0]).shape[0], np.int64)
+    lo = np.zeros(qcols[0].shape[0], np.int64)
+    hi = np.full(qcols[0].shape[0], n, np.int64)
+    for _ in range(max(int(np.ceil(np.log2(max(n, 2)))), 1) + 1):
+        mid = (lo + hi) >> 1
+        mc = np.minimum(mid, n - 1)
+        less = np.zeros(lo.shape[0], bool)
+        eq = np.ones(lo.shape[0], bool)
+        for c, q in zip(cols, qcols):
+            v = c[mc]
+            less |= eq & (v < q)
+            eq &= v == q
+        if right:
+            less |= eq
+        sel = lo < hi
+        lo = np.where(less & sel, mid + 1, lo)
+        hi = np.where(~less & sel, mid, hi)
+    return lo
+
+
+def _lex_hit_np(cols, qcols) -> np.ndarray:
+    """Exact-match membership of lex queries in lex-sorted columns."""
+    n = cols[0].shape[0]
+    if n == 0:
+        return np.zeros(np.asarray(qcols[0]).shape[0], bool)
+    pos = _lex_searchsorted_np(cols, qcols, "left")
+    pc = np.minimum(pos, n - 1)
+    hit = pos < n
+    for c, q in zip(cols, qcols):
+        hit &= c[pc] == q
+    return hit
 
 
 def _lex_member_np(key: np.ndarray, val: np.ndarray, qk: np.ndarray,
                    qv: np.ndarray) -> np.ndarray:
-    """Vectorized lower-bound search of (qk, qv) in lex-sorted (key, val).
-
-    Fixed-depth binary search (the numpy mirror of csr.lex_searchsorted):
-    O(B log n) vector ops instead of per-query Python probes.
-    """
-    n = key.shape[0]
-    if n == 0:
-        return np.zeros(qk.shape[0], bool)
-    lo = np.zeros(qk.shape[0], np.int64)
-    hi = np.full(qk.shape[0], n, np.int64)
-    for _ in range(max(int(np.ceil(np.log2(max(n, 2)))), 1) + 1):
-        mid = (lo + hi) >> 1
-        mc = np.minimum(mid, n - 1)
-        mk = key[mc]
-        mv = val[mc].astype(np.int64)
-        less = (mk < qk) | ((mk == qk) & (mv < qv))
-        sel = lo < hi
-        lo = np.where(less & sel, mid + 1, lo)
-        hi = np.where(~less & sel, mid, hi)
-    pc = np.minimum(lo, n - 1)
-    return (key[pc] == qk) & (val[pc].astype(np.int64) == qv) & (lo < n)
+    """Back-compat wrapper: (key, val) membership via the generic search."""
+    return _lex_hit_np((key, val.astype(np.int64)),
+                       (qk, qv.astype(np.int64)))
 
 
 def build_np_indices(plan: Plan, relations: Dict[str, np.ndarray]
@@ -108,14 +149,12 @@ def build_np_indices(plan: Plan, relations: Dict[str, np.ndarray]
 
 
 def _pack_prefix_key(prefix: np.ndarray, bound_attrs: Tuple[int, ...],
-                     key_attrs: Tuple[int, ...]) -> np.ndarray:
-    cols = [prefix[:, bound_attrs.index(a)].astype(np.int64)
-            for a in key_attrs]
-    if len(cols) == 1:
-        return cols[0]
-    if len(cols) == 2:
-        return (cols[0] << 32) | cols[1]
-    raise NotImplementedError
+                     key_attrs: Tuple[int, ...]):
+    """Pack the bound prefix columns named by ``key_attrs`` — delegates to
+    the shared ``csr.pack_key`` (single word, or (hi, lo) for 3-4 cols)."""
+    return csr.pack_key(tuple(
+        prefix[:, bound_attrs.index(a)].astype(np.int64)
+        for a in key_attrs))
 
 
 def generic_join(query: Query, relations: Dict[str, np.ndarray],
@@ -137,9 +176,10 @@ def generic_join(query: Query, relations: Dict[str, np.ndarray],
         rel = np.asarray(relations[query.atoms[plan.seed_atom].rel], np.int64)
         seed_tuples = np.unique(rel[:, list(plan.seed_cols)], axis=0)
     else:
-        seed_tuples = np.asarray(seed, np.int64).reshape(-1, 2)
+        seed_tuples = np.asarray(seed, np.int64).reshape(
+            -1, plan.seed_width)
     prefix = seed_tuples.astype(np.int64)
-    bound = tuple(plan.attr_order[:2])
+    bound = tuple(plan.attr_order[:plan.seed_width])
     for b in plan.seed_filters:
         qk = _pack_prefix_key(prefix, bound, b.key_attrs)
         qv = prefix[:, bound.index(b.ext_attr)]

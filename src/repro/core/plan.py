@@ -49,16 +49,25 @@ class LevelPlan:
 class Plan:
     query: Query
     attr_order: Tuple[int, ...]
-    seed_atom: int  # atom supplying P_2 (covers the first two attrs in order)
-    seed_cols: Tuple[int, int]  # positions of (order[0], order[1]) in atom
-    seed_filters: Tuple[Binding, ...]  # other atoms over the first two attrs
+    seed_atom: int  # atom supplying the seed prefixes P_w
+    seed_cols: Tuple[int, ...]  # positions of order[:seed_width] in the atom
+    seed_filters: Tuple[Binding, ...]  # other atoms inside the seed prefix
     seed_ineq: Tuple[Filter, ...]
-    levels: Tuple[LevelPlan, ...]  # extensions for order[2:], in order
+    levels: Tuple[LevelPlan, ...]  # extensions for order[seed_width:]
     versions: Tuple[str, ...]  # per-atom version ("static" unless delta plan)
 
     @property
     def num_levels(self) -> int:
         return len(self.levels)
+
+    @property
+    def seed_width(self) -> int:
+        """Width of the seed prefixes: 2 for projection-seeded static plans
+        (P_2, §4.2), the seed atom's arity for dR-seeded delta plans — an
+        n-ary dR tuple binds ALL its attributes at once (§3.3/Thm 3.2), so
+        the dataflow starts at P_r and level li extends
+        ``attr_order[seed_width + li]``."""
+        return len(self.seed_cols)
 
     def index_ids(self) -> List[Tuple[str, str, Tuple[int, ...], int, str]]:
         """All (index_id, rel, key_positions, ext_position, version) needed.
@@ -92,10 +101,13 @@ def _index_id(atom_idx: int, key_attrs: Tuple[int, ...], ext: int,
 
 
 def choose_attribute_order(q: Query, seed_atom: Optional[int] = None,
+                           seed_prefix: int = 2,
                            ) -> Tuple[Tuple[int, ...], int]:
-    """Greedy order: start with a (given or arbitrary binary) seed atom's two
-    attributes, then repeatedly pick the attribute constrained by the most
-    already-bound atoms (ties: smallest id).  Returns (order, seed_atom)."""
+    """Greedy order: start with the seed atom's first ``seed_prefix``
+    attributes (2 for projection-seeded plans; the full atom for dR-seeded
+    delta plans, Thm 3.2), then repeatedly pick the attribute constrained by
+    the most already-bound atoms (ties: smallest id).
+    Returns (order, seed_atom)."""
     if seed_atom is None:
         # prefer a binary atom; the attr pair covered by most atoms is a good
         # seed (more filters applied at P_2).  Fall back to any atom's first
@@ -107,7 +119,7 @@ def choose_attribute_order(q: Query, seed_atom: Optional[int] = None,
         pool = binary if binary else list(range(q.num_atoms))
         seed_atom = max(pool, key=pair_cover)
     first = q.atoms[seed_atom]
-    order = [first.attrs[0], first.attrs[1]]
+    order = list(first.attrs[:max(int(seed_prefix), 2)])
     bound = set(order)
     while len(order) < q.num_attrs:
         def score(a):
@@ -128,46 +140,59 @@ def choose_attribute_order(q: Query, seed_atom: Optional[int] = None,
 
 def make_plan(q: Query, attr_order: Optional[Sequence[int]] = None,
               seed_atom: Optional[int] = None,
-              versions: Optional[Sequence[str]] = None) -> Plan:
-    """Build the level-by-level plan for ``q`` under ``attr_order``."""
+              versions: Optional[Sequence[str]] = None,
+              seed_width: int = 2) -> Plan:
+    """Build the level-by-level plan for ``q`` under ``attr_order``.
+
+    ``seed_width`` is the seed-prefix width: 2 for projection-seeded static
+    plans (P_2), the seed atom's arity for dR-seeded delta plans — the
+    first ``seed_width`` attributes of the order must be the seed atom's
+    attributes, and extension levels cover ``attr_order[seed_width:]``.
+    """
+    sw = int(seed_width)
     if attr_order is None:
-        attr_order, seed_atom = choose_attribute_order(q, seed_atom)
+        attr_order, seed_atom = choose_attribute_order(q, seed_atom, sw)
     else:
         attr_order = tuple(attr_order)
         if seed_atom is None:
             for i, atom in enumerate(q.atoms):
-                if set(attr_order[:2]) <= set(atom.attrs):
+                if set(attr_order[:sw]) <= set(atom.attrs):
                     seed_atom = i
                     break
             else:
-                raise ValueError("no atom covers the first two attrs")
+                raise ValueError(
+                    f"no atom covers the first {sw} attributes")
     if versions is None:
         versions = tuple("static" for _ in q.atoms)
     else:
         versions = tuple(versions)
 
-    a0, a1 = attr_order[0], attr_order[1]
+    seed_attrs = attr_order[:sw]
     seed = q.atoms[seed_atom]
-    if not {a0, a1} <= set(seed.attrs):
-        raise ValueError("seed atom does not cover the first two attributes")
-    seed_cols = (seed.attrs.index(a0), seed.attrs.index(a1))
+    if not set(seed_attrs) <= set(seed.attrs):
+        raise ValueError(
+            f"seed atom does not cover the first {sw} attributes")
+    seed_cols = tuple(seed.attrs.index(a) for a in seed_attrs)
 
-    # Other binary atoms fully contained in {a0,a1} become filters on P_2.
+    # Other atoms fully contained in the seed prefix become membership
+    # filters on the seed tuples (§4.2): key = all-but-last attr, in atom
+    # order, ext = the last — covered by composite keys up to arity 4.
     seed_filters = []
     for i, atom in enumerate(q.atoms):
-        if i == seed_atom or not set(atom.attrs) <= {a0, a1}:
+        if i == seed_atom or not set(atom.attrs) <= set(seed_attrs):
             continue
-        key = (atom.attrs[0],)
-        ext = atom.attrs[1]
+        key = atom.attrs[:-1]
+        ext = atom.attrs[-1]
         seed_filters.append(Binding(
             i, atom.rel, key, ext,
             _index_id(i, key, ext, versions[i]), True))
-    seed_ineq = tuple(f for f in q.filters if {f.lo, f.hi} <= {a0, a1})
+    seed_ineq = tuple(f for f in q.filters
+                      if {f.lo, f.hi} <= set(seed_attrs))
 
     levels: List[LevelPlan] = []
-    bound: List[int] = [a0, a1]
+    bound: List[int] = list(seed_attrs)
     done_filters = set(id(f) for f in seed_ineq)
-    for ext in attr_order[2:]:
+    for ext in attr_order[sw:]:
         bindings = []
         for i, atom in enumerate(q.atoms):
             if ext not in atom.attrs:
@@ -197,16 +222,21 @@ def make_plan(q: Query, attr_order: Optional[Sequence[int]] = None,
 
 def make_delta_plan(dq: DeltaQuery,
                     attr_order: Optional[Sequence[int]] = None) -> Plan:
-    """Plan for dQ_i: attribute order starts with atom i's attributes and the
-    dataflow is seeded from dR_i (version 'delta'); atoms k<i read version
+    """Plan for dQ_i: the attribute order starts with ALL of atom i's
+    attributes (Thm 3.2) and the dataflow is seeded from dR_i's full tuples
+    — width-2 prefixes for binary atoms, width-r for an n-ary dR_i (every
+    seed tuple binds the whole atom at once, so the dataflow starts at P_r
+    and skips the first r-2 extension levels); atoms k<i read version
     'new', atoms k>i read 'old' (§3.3)."""
     q = dq.query
     seed = q.atoms[dq.seed_atom]
-    if seed.arity != 2:
-        raise ValueError("delta plans currently seed from binary atoms")
+    sw = seed.arity
     if attr_order is None:
-        rest_order, _ = choose_attribute_order(q, seed_atom=dq.seed_atom)
+        rest_order, _ = choose_attribute_order(q, seed_atom=dq.seed_atom,
+                                               seed_prefix=sw)
         attr_order = rest_order
-    if set(attr_order[:2]) != set(seed.attrs):
-        raise ValueError("delta attribute order must start with seed attrs")
-    return make_plan(q, attr_order, dq.seed_atom, dq.versions)
+    if set(attr_order[:sw]) != set(seed.attrs):
+        raise ValueError(
+            "delta attribute order must start with the seed atom's attrs")
+    return make_plan(q, attr_order, dq.seed_atom, dq.versions,
+                     seed_width=sw)

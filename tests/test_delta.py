@@ -11,13 +11,10 @@ from tests.test_generic_join import random_graph
 
 
 def canon(t, w):
-    """Aggregate signed tuples -> sorted (tuple, net weight != 0) pairs."""
-    if t is None or t.size == 0:
-        return []
-    uniq, inv = np.unique(t, axis=0, return_inverse=True)
-    net = np.zeros(uniq.shape[0], np.int64)
-    np.add.at(net, inv, w)
-    return sorted((tuple(r), int(n)) for r, n in zip(uniq, net) if n != 0)
+    """Aggregate signed tuples -> sorted (tuple, net weight != 0) pairs
+    (the shared implementation next to delta_oracle)."""
+    from repro.core.delta import canon_signed
+    return canon_signed(t, w)
 
 
 CFG = BigJoinConfig(batch=256, seed_chunk=256, out_capacity=1 << 16)
