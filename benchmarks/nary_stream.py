@@ -18,6 +18,10 @@ each other (two completely different plans agreeing is the differential
 oracle); the small scale additionally verifies the maintained net against
 full recomputation.
 
+Both timed sessions walk the AOT prewarm ladder (``session.prewarm``,
+DESIGN.md §8) before their loops — cold time is split out — and the warm
+latency tail is gated: p99/p50 ≤ 5× with zero jit rebuilds after warmup.
+
 Run via ``python -m benchmarks.run --only nary_stream`` (or directly).
 """
 import json
@@ -73,15 +77,28 @@ def _feeder(nv, edges, n_epochs):
 
 
 def _drive(session, name, batches):
-    """Timed loop: one update per epoch, per-epoch latency + deltas."""
-    lat, deltas = [], []
+    """Timed loop: prewarm (cold, reported separately), then one update per
+    epoch with per-epoch latency, compile events, and deltas."""
+    t0 = time.time()
+    session.prewarm(horizon=len(batches) * BATCH)
+    prewarm_s = time.time() - t0
+    lat, deltas, compiles = [], [], []
     for batch in batches:
         t0 = time.time()
         res = session.update(batch)
         lat.append(time.time() - t0)
         deltas.append(res.deltas[name])
-    warm = sorted(lat[WARMUP:])
-    return warm[len(warm) // 2] * 1e3, lat, deltas
+        compiles.append(res.compile_events)
+    warm = np.asarray(lat[WARMUP:]) * 1e3
+    pct = {k: round(float(np.percentile(warm, q)), 3)
+           for k, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+    pct["max"] = round(float(warm.max()), 3)
+    tail = {"cold_prewarm_ms": round(prewarm_s * 1e3, 1),
+            "prewarm_compiles": session.stats.prewarm_compiles,
+            "warm_compiles": int(sum(compiles[WARMUP:])),
+            "epoch_compiles": compiles, **pct,
+            "p99_p50_ratio": round(pct["p99"] / max(pct["p50"], 1e-9), 3)}
+    return pct["p50"], lat, deltas, tail
 
 
 def main():
@@ -100,9 +117,9 @@ def main():
                                 out_capacity=OUT_CAP, update_batch=BATCH)
         tri_sess.register("4-clique-tri")
 
-        e_ms, e_lat, e_deltas = _drive(
+        e_ms, e_lat, e_deltas, e_tail = _drive(
             edge_sess, "4-clique", [dict(edge=b[0]) for b in epochs])
-        t_ms, t_lat, t_deltas = _drive(
+        t_ms, t_lat, t_deltas, t_tail = _drive(
             tri_sess, "4-clique-tri", [dict(tri=b[1]) for b in epochs])
 
         exact = all(
@@ -125,18 +142,33 @@ def main():
             "tri_over_edge": round(t_ms / max(e_ms, 1e-9), 3),
             "edge_epoch_ms": [round(t * 1e3, 2) for t in e_lat],
             "tri_epoch_ms": [round(t * 1e3, 2) for t in t_lat],
+            "edge_plan_latency": e_tail,
+            "tri_plan_latency": t_tail,
             "exact": bool(exact),
         }
         rec["scales"][str(ne)] = entry
         row("nary_stream", f"edge_plan_E{ne}", e_ms / 1e3,
-            f"|E|={edges.shape[0]} warm_ms={e_ms:.1f} exact={exact}")
+            f"|E|={edges.shape[0]} warm_ms={e_ms:.1f} exact={exact} "
+            f"p99/p50={e_tail['p99_p50_ratio']}x "
+            f"warm_compiles={e_tail['warm_compiles']}")
         row("nary_stream", f"tri_plan_E{ne}", t_ms / 1e3,
             f"|tri|={tri0.shape[0]} warm_ms={t_ms:.1f} "
-            f"ratio={t_ms / max(e_ms, 1e-9):.2f}x")
+            f"ratio={t_ms / max(e_ms, 1e-9):.2f}x "
+            f"p99/p50={t_tail['p99_p50_ratio']}x "
+            f"warm_compiles={t_tail['warm_compiles']}")
     rec["all_exact"] = bool(all_exact)
+    tails = [rec["scales"][str(ne)][k] for ne in SCALES
+             for k in ("edge_plan_latency", "tri_plan_latency")]
+    rec["p99_p50_max"] = max(t["p99_p50_ratio"] for t in tails)
+    rec["warm_compiles"] = sum(t["warm_compiles"] for t in tails)
+    rec["tail_flat"] = bool(rec["p99_p50_max"] <= 5.0
+                            and rec["warm_compiles"] == 0)
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as f:
         json.dump(rec, f, indent=2)
+    row("nary_stream", "tail_flat", 0.0,
+        f"p99/p50<={rec['p99_p50_max']}x "
+        f"warm_compiles={rec['warm_compiles']} (flat: {rec['tail_flat']})")
     row("nary_stream", "json", 0.0, OUT_PATH)
     if not all_exact:
         raise SystemExit("nary_stream: plan parity check FAILED")

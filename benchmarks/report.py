@@ -105,21 +105,36 @@ def render_delta_stream(path):
               f"| {r['all_exact']} |")
 
 
+def _tail_cell(t):
+    """One markdown cell for a latency-tail dict (p50/p99/compiles)."""
+    if not t:
+        return "—"
+    return (f"p50 {t['p50']} p99 {t['p99']} ({t['p99_p50_ratio']}x), "
+            f"{t['warm_compiles']} warm compiles")
+
+
 def render_epoch_latency(path):
     """Render a BENCH_epoch_latency.json warm-epoch-scaling record."""
     rec = json.load(open(path))
     print(f"batch={rec['batch_size']} updates/epoch, "
           f"{rec['epochs']} warm epochs (median)\n")
-    print("| |E| | device warm ms | legacy warm ms | device/legacy |")
-    print("|" + "---|" * 4)
+    print("| |E| | device warm ms | legacy warm ms | device/legacy | "
+          "device tail (prewarmed) |")
+    print("|" + "---|" * 5)
     for ne, r in sorted(rec.get("scales", {}).items(), key=lambda kv:
                         int(kv[0])):
         d, l = r["device_warm_ms"], r["legacy_warm_ms"]
-        print(f"| {r['edges']:,} | {d} | {l} | {d / max(l, 1e-9):.2f}x |")
+        print(f"| {r['edges']:,} | {d} | {l} | {d / max(l, 1e-9):.2f}x "
+              f"| {_tail_cell(r.get('device_latency'))} |")
     g = rec.get("growth_16x", {})
     print(f"\ngrowth over {g.get('span', '?')}: device {g.get('device')}x, "
           f"legacy {g.get('legacy')}x "
           f"(acceptance <2x: {rec.get('device_growth_lt_2x')})")
+    if "device_tail_flat" in rec:
+        print(f"latency tail: worst p99/p50 {rec['device_p99_p50_max']}x, "
+              f"{rec['device_warm_compiles']} jit rebuilds after warmup "
+              f"(acceptance p99/p50<=5x & 0 rebuilds: "
+              f"{rec['device_tail_flat']})")
 
 
 def render_nary_stream(path):
@@ -128,13 +143,20 @@ def render_nary_stream(path):
     print(f"batch={rec['batch_size']} updates/epoch, {rec['epochs']} warm "
           f"epochs (median); all_exact={rec.get('all_exact')}\n")
     print("| |E| | |tri| | edge-plan warm ms | tri-plan warm ms | "
-          "tri/edge | exact |")
-    print("|" + "---|" * 6)
+          "tri/edge | edge tail | tri tail | exact |")
+    print("|" + "---|" * 8)
     for ne, r in sorted(rec.get("scales", {}).items(),
                         key=lambda kv: int(kv[0])):
         print(f"| {r['edges']:,} | {r['tri_tuples']:,} "
               f"| {r['edge_plan_warm_ms']} | {r['tri_plan_warm_ms']} "
-              f"| {r['tri_over_edge']}x | {r['exact']} |")
+              f"| {r['tri_over_edge']}x "
+              f"| {_tail_cell(r.get('edge_plan_latency'))} "
+              f"| {_tail_cell(r.get('tri_plan_latency'))} "
+              f"| {r['exact']} |")
+    if "tail_flat" in rec:
+        print(f"\nlatency tail: worst p99/p50 {rec['p99_p50_max']}x, "
+              f"{rec['warm_compiles']} jit rebuilds after warmup "
+              f"(acceptance p99/p50<=5x & 0 rebuilds: {rec['tail_flat']})")
 
 
 def render_multi_query(path):

@@ -20,7 +20,9 @@ application code — register queries on a session instead.
 from repro.api.dsl import PatternSyntaxError, parse_pattern, pattern_of
 from repro.api.session import (EpochResult, GraphSession, QueryHandle,
                                Sizing, auto_sizing)
-from repro.core.csr import Graph
+from repro.core import compilestats
+from repro.core.capacity import Ratchet
+from repro.core.csr import Graph, pow2_capacity
 from repro.core.delta import canon_signed
 from repro.core.query import (PAPER_QUERIES, QUERY_NAMES, QUERY_REGISTRY,
                               Query, agm_bound, query_by_name)
@@ -30,6 +32,7 @@ __all__ = [
     "parse_pattern", "pattern_of", "PatternSyntaxError",
     "Query", "query_by_name", "QUERY_NAMES", "QUERY_REGISTRY",
     "PAPER_QUERIES", "agm_bound", "Graph", "oracle_count", "canon_signed",
+    "pow2_capacity", "Ratchet", "compilestats",
 ]
 
 

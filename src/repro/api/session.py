@@ -27,15 +27,17 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import compilestats
 from repro.core import delta as _delta
 from repro.core.bigjoin import BigJoinConfig, run_bigjoin
+from repro.core.csr import pow2_capacity
 from repro.core.plan import Plan, make_plan
 from repro.core.query import Query, fractional_edge_cover, query_by_name
 from repro.api.dsl import parse_pattern
 
 
 def _pow2(n: int) -> int:
-    return _delta._pow2(max(int(n), 1))
+    return pow2_capacity(max(int(n), 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +86,10 @@ class EpochResult:
 
     ``ins`` / ``dels`` are the EDGE relation's normalized rows (empty when
     the epoch touched other relations only); ``by_rel`` carries every
-    relation's normalized ``(ins, dels)`` pair.
+    relation's normalized ``(ins, dels)`` pair.  ``compile_events`` counts
+    the jit traces (= XLA compiles) this epoch triggered — after
+    :meth:`GraphSession.prewarm` it must be ZERO on every warm epoch
+    (DESIGN.md §8), which is what the compile-stability suite asserts.
     """
 
     epoch: int
@@ -93,6 +98,7 @@ class EpochResult:
     deltas: Dict[str, _delta.DeltaResult]
     by_rel: Dict[str, Tuple[np.ndarray, np.ndarray]] = \
         dataclasses.field(default_factory=dict)
+    compile_events: int = 0
 
     @property
     def is_noop(self) -> bool:
@@ -195,7 +201,8 @@ class GraphSession:
                  out_capacity: Optional[int] = None,
                  update_batch: int = 2048,
                  compact_ratio: float = 0.5,
-                 device_resident: bool = True):
+                 device_resident: bool = True,
+                 prewarm: bool = False):
         import jax
         if local is None:
             local = mesh is None and jax.device_count() == 1
@@ -222,6 +229,8 @@ class GraphSession:
         self.epoch = 0
         self._static_plans: Dict[Query, Plan] = {}
         self.programs_built = 0  # engine/program constructions (cache proof)
+        # walk the AOT compile ladder at register() time (DESIGN.md §8)
+        self.auto_prewarm = bool(prewarm)
 
     # -- registration -------------------------------------------------------
     def register(self, pattern, name: Optional[str] = None,
@@ -257,7 +266,39 @@ class GraphSession:
                     atom.rel, np.zeros((0, atom.arity), np.int32))
         handle = QueryHandle(self, name, q, batch, out_capacity)
         self.handles[name] = handle
+        if self.auto_prewarm:
+            self.prewarm()
         return handle
+
+    def prewarm(self, horizon: Optional[int] = None) -> int:
+        """Walk the AOT compile ladder (DESIGN.md §8): pin the delta/probe/
+        seed marks to ``update_batch``, then compile-and-execute (on
+        zero-filled prototypes — see ``delta._warm_call``) every fold and
+        dataflow signature the ratcheted capacity ladder can request for
+        every registered query — store folds
+        (``RegionStore.prewarm_folds``), the local step/seed_step pairs,
+        and the mesh shard_map programs.  ``horizon`` optionally caps the
+        warmed committed ladder at the stream's total expected churn
+        (epochs × batch) so short streams over huge graphs don't pay for
+        rungs they can never reach.
+
+        After this, every epoch with batches ≤ ``update_batch`` reports
+        ``EpochResult.compile_events == 0`` until a relation's base region
+        outgrows its pow2 rung (amortized-rare; that one epoch re-walks a
+        warm-cached ladder).  With the persistent compilation cache
+        (``REPRO_COMPILE_CACHE``) a restarted process pays deserialization,
+        not XLA, for the same ladder.  Returns compile events spent (also
+        surfaced as ``StoreStats.prewarm_compiles``)."""
+        snap = compilestats.snapshot()
+        # engines first: their lazily-created projections must exist
+        # before the store enumerates fold groups
+        engines = [h.engine for h in self.handles.values()]
+        self.store.prewarm_folds(self.update_batch, horizon)
+        for engine in engines:
+            self.store.stats.prewarm_compiles += \
+                engine.prewarm(self.update_batch, horizon)
+        self.store._sync_compile_stats()
+        return compilestats.since(snap)
 
     def query_by_name(self, name: str) -> QueryHandle:
         """Fetch a registered handle; registers the named motif on miss."""
@@ -281,8 +322,12 @@ class GraphSession:
         return self.store.num_tuples(rel)
 
     def _sizing(self, q: Query, batch, out_capacity) -> Sizing:
-        s = auto_sizing(q, self.store.max_live or self.update_batch, self.w,
-                        self.update_batch)
+        # the AGM inputs ride a ratchet: |E| jitter around a pow2 boundary
+        # must not flap the derived B'/out/route capacities (each one keys
+        # a jit cache — DESIGN.md §8)
+        live = self.store.base_ratchet.capacity(
+            ("sizing",), self.store.max_live or self.update_batch)
+        s = auto_sizing(q, live, self.w, self.update_batch)
         b = batch or self._batch_override or s.batch
         return Sizing(b,
                       out_capacity or self._out_override or s.out_capacity,
@@ -314,6 +359,7 @@ class GraphSession:
         a per-relation dict ``{"edge": (rows, w), "tri": (rows, w), ...}``
         updating any subset of the session's relations in one epoch.
         """
+        snap = compilestats.snapshot()
         batches = self.store.normalize(updates, weights)
         if not isinstance(batches, dict):
             batches = {"edge": batches}
@@ -325,7 +371,8 @@ class GraphSession:
             deltas = {name: zero for name in self.handles}
             for name, h in self.handles.items():
                 h._deliver(self.epoch, zero)
-            return EpochResult(self.epoch, e_ins, e_dels, deltas, batches)
+            return EpochResult(self.epoch, e_ins, e_dels, deltas, batches,
+                               compile_events=compilestats.since(snap))
         # touch every handle's engine BEFORE staging: a lazily-built engine
         # must create its projections first, or they would miss the
         # uncommitted batch begin_epoch installs on existing regions
@@ -337,7 +384,8 @@ class GraphSession:
         self.store.commit(batches)
         for name, h in self.handles.items():
             h._deliver(self.epoch, deltas[name])
-        return EpochResult(self.epoch, e_ins, e_dels, deltas, batches)
+        return EpochResult(self.epoch, e_ins, e_dels, deltas, batches,
+                           compile_events=compilestats.since(snap))
 
     # -- static evaluation over the shared regions --------------------------
     def _static_plan(self, q: Query) -> Plan:

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compilestats
 from repro.core.dataflow_index import VersionedIndex
 from repro.core.plan import Plan
 
@@ -331,9 +332,14 @@ def build_step(plan: Plan, cfg: BigJoinConfig):
     if not branches:
         # the seed covers every attribute (single-atom delta plans): seeds
         # go straight to output in the seed step; there is nothing to drain
-        return lambda state, indices: state
+        def step(state: BigJoinState, indices: Indices) -> BigJoinState:
+            compilestats.record("bigjoin.step")
+            return state
+
+        return step
 
     def step(state: BigJoinState, indices: Indices) -> BigJoinState:
+        compilestats.record("bigjoin.step")
         sizes = jnp.stack([q.size for q in state.queues])
         nz = sizes > 0
         deepest = (len(branches) - 1
@@ -355,6 +361,7 @@ def build_seed_step(plan: Plan, cfg: BigJoinConfig):
 
     def seed_step(state: BigJoinState, indices: Indices, prefixes: jax.Array,
                   weights: jax.Array, valid: jax.Array) -> BigJoinState:
+        compilestats.record("bigjoin.seed_step")
         alive = valid
         bound = tuple(plan.attr_order[:plan.seed_width])
         for b in plan.seed_filters:

@@ -1,0 +1,126 @@
+"""Compile-event observability and the persistent compilation cache knob.
+
+Two small facilities that make the latency tail a *measured* quantity
+(DESIGN.md §8):
+
+**Trace counters.**  A Python statement inside a jitted function's body runs
+exactly when jax traces the function — i.e. once per distinct shape
+signature, which on a single backend is once per XLA compilation.  Every
+jitted fold in the repo calls :func:`record` with a stable name as its first
+body statement, generalizing the old ``distributed._PROGRAM_BUILDS`` counter
+to `merge_index`/`_commit_fold`/`_compact_fold`/dataflow steps.  ``StoreStats``
+and ``EpochResult`` surface :func:`total` snapshots so tests and benchmarks
+can assert "zero recompiles after warmup" instead of eyeballing medians.
+
+**Persistent cache.**  :func:`enable_persistent_cache` wires
+``jax.experimental.compilation_cache`` so a restarted worker or CI run
+deserializes XLA executables instead of recompiling them.  It must run
+BEFORE the first jit use of the process; importing :mod:`repro.core.delta`
+(or any api module) is early enough because that import triggers this
+module, which auto-enables when ``REPRO_COMPILE_CACHE`` is set to a
+directory path.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional
+
+_LOCK = threading.Lock()
+_COUNTS: Dict[str, int] = {}
+_PERSISTENT_HITS = [0]
+_CACHE_DIR: Optional[str] = None
+
+ENV_VAR = "REPRO_COMPILE_CACHE"
+
+
+def record(name: str) -> None:
+    """Count one trace (= compile) event.  Call as the FIRST statement of a
+    jitted function body: the Python side of the body runs once per trace,
+    never on cached concrete calls."""
+    with _LOCK:
+        _COUNTS[name] = _COUNTS.get(name, 0) + 1
+
+
+def counts() -> Dict[str, int]:
+    """Per-site compile-event counts (copy)."""
+    with _LOCK:
+        return dict(_COUNTS)
+
+
+def total() -> int:
+    """Total compile events since process start (or :func:`reset`)."""
+    with _LOCK:
+        return sum(_COUNTS.values())
+
+
+def snapshot() -> int:
+    """Alias of :func:`total` — pair with :func:`since` around a region."""
+    return total()
+
+
+def since(snap: int) -> int:
+    """Compile events recorded after a :func:`snapshot`."""
+    return total() - snap
+
+
+def reset() -> None:
+    with _LOCK:
+        _COUNTS.clear()
+        _PERSISTENT_HITS[0] = 0
+
+
+def persistent_hits() -> int:
+    """Executables deserialized from the persistent cache (0 unless
+    :func:`enable_persistent_cache` ran and hits occurred)."""
+    return _PERSISTENT_HITS[0]
+
+
+def cache_dir() -> Optional[str]:
+    """The active persistent-cache directory, or None when disabled."""
+    return _CACHE_DIR
+
+
+def enable_persistent_cache(path: Optional[str] = None) -> Optional[str]:
+    """Point jax at a persistent on-disk compilation cache.  Idempotent.
+
+    ``path`` defaults to ``$REPRO_COMPILE_CACHE``; returns the directory in
+    use, or None when no path is configured.  Must run before the process's
+    first jit execution — later calls still help future compilations but
+    cannot recover ones already done.  The thresholds are zeroed so even
+    sub-second CPU kernels (our folds) persist; jax's own default would skip
+    anything compiling in < 1s, which on the CPU CI lane is everything.
+    """
+    global _CACHE_DIR
+    path = path or os.environ.get(ENV_VAR) or None
+    if not path:
+        return None
+    if _CACHE_DIR == path:
+        return _CACHE_DIR
+    import jax
+
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    from jax.experimental.compilation_cache import compilation_cache as cc
+    cc.set_cache_dir(path)
+    if _CACHE_DIR is None:  # register the hit listener once
+        try:
+            from jax import monitoring
+
+            def _listener(event: str, **kw):
+                if "cache_hit" in event:
+                    _PERSISTENT_HITS[0] += 1
+
+            monitoring.register_event_listener(_listener)
+        except Exception:  # pragma: no cover - older jax without monitoring
+            pass
+    _CACHE_DIR = path
+    return _CACHE_DIR
+
+
+# env knob: the earliest import of this module (delta/session import it
+# before building anything jitted) switches the cache on for the process
+if os.environ.get(ENV_VAR):  # pragma: no cover - exercised via subprocess
+    enable_persistent_cache()

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compilestats
+
 # Sentinel keys strictly larger than any real key.  Wide (int64) keys pack
 # two int32 columns as a<<32|b with a, b < 2^31, so their maximum is below
 # int64-max and the int64 sentinel covers the FULL vertex-id range; narrow
@@ -205,9 +207,36 @@ def shard_of(key: PackedKey, num_shards: int) -> np.ndarray:
     return (h % np.uint64(max(num_shards, 1))).astype(np.int32)
 
 
-def _pow2_capacity(n: int) -> int:
-    """SEG-aligned power-of-two capacity >= n (stable shapes across deltas)."""
+def pow2_capacity(n: int) -> int:
+    """SEG-aligned power-of-two capacity >= n (stable shapes across deltas).
+
+    THE canonical capacity quantizer: every region, probe pad, seed chunk
+    and AGM-derived buffer size in the repo goes through this one function
+    (``delta._pow2`` and ``session._pow2`` are aliases), so the ladder of
+    shapes that can ever key a jit cache is enumerable — see
+    :func:`capacity_ladder` and DESIGN.md §8.
+    """
     return round_capacity(1 << max(int(n) - 1, 0).bit_length())
+
+
+# historical (pre-ladder) private name, kept for callers/tests
+_pow2_capacity = pow2_capacity
+
+
+def capacity_ladder(lo: int, hi: int) -> list:
+    """All :func:`pow2_capacity` rungs covering live sizes in [lo, hi].
+
+    ``pow2_capacity`` maps any size in (rung/2, rung] to ``rung``, so the
+    rungs between ``pow2_capacity(lo)`` and ``pow2_capacity(hi)`` inclusive
+    are exactly the capacities a buffer can take while its live size stays
+    in the range — the shapes an AOT prewarm must compile."""
+    lo_cap, hi_cap = pow2_capacity(lo), pow2_capacity(max(hi, lo))
+    rungs = []
+    c = lo_cap
+    while c <= hi_cap:
+        rungs.append(c)
+        c = pow2_capacity(c + 1)
+    return rungs
 
 
 def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
@@ -501,6 +530,7 @@ def _select_core(a: IndexData, b: IndexData, capacity: int, keep_in_b: bool,
 def merge_index(a: IndexData, b: IndexData, capacity: int,
                 use_kernel: bool = False) -> IndexData:
     """Jitted sorted union (see `_merge_core`)."""
+    compilestats.record("csr.merge_index")
     return _merge_core(a, b, capacity, use_kernel)
 
 
@@ -508,6 +538,7 @@ def merge_index(a: IndexData, b: IndexData, capacity: int,
 def diff_index(a: IndexData, b: IndexData, capacity: int,
                use_kernel: bool = False) -> IndexData:
     """Jitted sorted difference a \\ b."""
+    compilestats.record("csr.diff_index")
     return _select_core(a, b, capacity, False, use_kernel)
 
 
@@ -515,6 +546,7 @@ def diff_index(a: IndexData, b: IndexData, capacity: int,
 def intersect_index(a: IndexData, b: IndexData, capacity: int,
                     use_kernel: bool = False) -> IndexData:
     """Jitted sorted intersection a ∩ b (probe-sized: O(|a|·log|b|))."""
+    compilestats.record("csr.intersect_index")
     return _select_core(a, b, capacity, True, use_kernel)
 
 

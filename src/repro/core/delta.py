@@ -57,9 +57,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import csr
+from repro.core import compilestats, csr
 from repro.core.bigjoin import (BigJoinConfig, Indices, JoinResult,
                                 run_bigjoin)
+from repro.core.capacity import Ratchet
 from repro.core.csr import IndexData, build_index
 from repro.core.dataflow_index import VersionedIndex
 from repro.core.plan import Plan, make_delta_plan
@@ -181,10 +182,10 @@ def _pow2(n: int) -> int:
     """Index capacities rounded up to powers of two (>= one kernel segment):
     stable shapes across update batches keep the jitted dataflow's
     compilation cache warm, and SEG-aligned capacities make the kernels'
-    segment-major view a free reshape.  Delegates to the same helper the
-    sharded region builds use, so host and shard capacities stay in sync."""
-    from repro.core.csr import _pow2_capacity
-    return _pow2_capacity(n)
+    segment-major view a free reshape.  Alias of THE canonical helper
+    (``csr.pow2_capacity``) the sharded region builds and the session
+    sizing use, so every capacity in the repo sits on one ladder."""
+    return csr.pow2_capacity(n)
 
 
 def _total(n) -> int:
@@ -224,6 +225,7 @@ def _normalize_core(p_hi: jax.Array, p_lo: jax.Array, w: jax.Array,
     memory stays O(|R|/w).  live = (base \\ cdel) ∪ cins under the commit
     invariants.
     """
+    compilestats.record("delta.normalize_core")
     SENT = jnp.int64(csr.SENTINEL)
     order = jnp.lexsort((p_lo, p_hi))
     hs, ls, ws = p_hi[order], p_lo[order], w[order]
@@ -281,6 +283,8 @@ def _commit_fold(base: IndexData, cins: IndexData, cdel: IndexData,
     leading worker axis: ownership is by packed key, so every merge is
     shard-local and the distributed commit stays collective-free.
     """
+    compilestats.record("delta.commit_fold")
+
     def fold(ba, ci, cd, ui, ud):
         kept = csr._select_core(ci, ud, ci.capacity, False, use_kernel)
         fresh = csr._select_core(ui, cd, ui.capacity, False, use_kernel)
@@ -300,6 +304,8 @@ def _compact_fold(base: IndexData, cins: IndexData, cdel: IndexData, *,
                   out_cap: int, sharded: bool, use_kernel: bool = False
                   ) -> IndexData:
     """base' = (base \\ cdel) ∪ cins — the amortized O(|base|) merge."""
+    compilestats.record("delta.compact_fold")
+
     def fold(ba, ci, cd):
         kept = csr._select_core(ba, cd, ba.capacity, False, use_kernel)
         return csr._merge_core(kept, ci, out_cap, use_kernel)
@@ -313,29 +319,35 @@ def _compact_fold(base: IndexData, cins: IndexData, cdel: IndexData, *,
 def _any_member(idx: IndexData, qk: jax.Array, qv: jax.Array,
                 sharded: bool = False) -> jax.Array:
     """any((qk,qv) ∈ idx) — the eager re-insertion probe (delta-sized)."""
+    compilestats.record("delta.any_member")
     if sharded:
         return jax.vmap(lambda d: csr.index_member(d, qk, qv))(idx).any()
     return csr.index_member(idx, qk, qv).any()
 
 
 def _packed_index(rows: np.ndarray, shard_w: int = 0,
-                  arity: int = 2) -> IndexData:
+                  arity: int = 2, capacity: Optional[int] = None
+                  ) -> IndexData:
     """Packed full-row IndexData (key = the relation's lex word pair,
     val ≡ 0) from host rows — only ever built for the initial relations and
     per-epoch deltas.  Delegates to the csr builders over a zero ext column
     with key_pos = ALL columns, so the sharded layout and ownership
     (``csr.shard_of``) are THE SAME code path as the projections' shards —
     the cross-structure shard agreement the distributed commit folds rely
-    on is not re-implemented here."""
+    on is not re-implemented here.  ``capacity`` (a per-shard floor when
+    sharded) lets the caller pin the ratcheted rung; the pow2 of the actual
+    row count is the lower bound either way."""
     rows = np.asarray(rows, np.int32).reshape(-1, arity)
     rows_ext = np.concatenate(
         [rows, np.zeros((rows.shape[0], 1), np.int32)], axis=1)
     key_pos = tuple(range(arity))
     if shard_w:
         return csr.build_sharded_index(rows_ext, key_pos, arity, shard_w,
-                                       narrow=False)
-    return csr.build_index(rows_ext, key_pos, arity,
-                           capacity=_pow2(rows_ext.shape[0]), narrow=False)
+                                       capacity=capacity, narrow=False)
+    return csr.build_index(
+        rows_ext, key_pos, arity,
+        capacity=max(int(capacity or 0), _pow2(rows_ext.shape[0])),
+        narrow=False)
 
 
 def _empty_packed(shard_w: int = 0, arity: int = 2) -> IndexData:
@@ -350,12 +362,15 @@ def _empty_packed(shard_w: int = 0, arity: int = 2) -> IndexData:
         if composite else None)
 
 
-def _pad_probe(keys, vals: np.ndarray, sent) -> Tuple:
+def _pad_probe(keys, vals: np.ndarray, sent,
+               cap: Optional[int] = None) -> Tuple:
     """Pow2-pad a probe batch; ``keys`` is one packed array or a composite
-    (hi, lo) pair (padding rows take the sentinel in every key word)."""
+    (hi, lo) pair (padding rows take the sentinel in every key word).
+    ``cap`` raises the pad to a ratcheted rung so probe shapes stay pinned
+    across batches."""
     if isinstance(keys, tuple):
         hi, lo = keys
-        B = _pow2(hi.shape[0])
+        B = max(int(cap or 0), _pow2(hi.shape[0]))
         kh = np.full(B, csr.SENTINEL, np.int64)
         kl = np.full(B, csr.SENTINEL, np.int64)
         kh[:hi.shape[0]] = hi
@@ -363,12 +378,46 @@ def _pad_probe(keys, vals: np.ndarray, sent) -> Tuple:
         v = np.zeros(B, np.int32)
         v[:vals.shape[0]] = vals
         return (jnp.asarray(kh), jnp.asarray(kl)), jnp.asarray(v)
-    B = _pow2(keys.shape[0])
+    B = max(int(cap or 0), _pow2(keys.shape[0]))
     k = np.full(B, sent, keys.dtype)
     k[:keys.shape[0]] = keys
     v = np.zeros(B, np.int32)
     v[:vals.shape[0]] = vals
     return jnp.asarray(k), jnp.asarray(v)
+
+
+def _sds_like(idx: IndexData, cap: Optional[int] = None) -> IndexData:
+    """ShapeDtypeStruct skeleton of ``idx`` with its capacity (the last
+    axis of every padded array) overridden to ``cap`` — the argument
+    prototype prewarm warms a fold against (see :func:`_warm_call`).
+    Mirrors dtypes, the composite ``lo`` word and the sharded leading [w]
+    axis exactly, so the AOT signature is the runtime signature."""
+    S = jax.ShapeDtypeStruct
+
+    def arr(a):
+        shp = list(a.shape)
+        if cap is not None:
+            shp[-1] = int(cap)
+        return S(tuple(shp), a.dtype)
+
+    return IndexData(arr(idx.key), arr(idx.val), S(idx.n.shape, idx.n.dtype),
+                     None if idx.lo is None else arr(idx.lo))
+
+
+def _warm_call(fn, *args, **static):
+    """Execute a jitted ``fn`` once on zero-filled concretizations of the
+    ShapeDtypeStruct prototypes in ``args`` (``static`` kwargs pass
+    through).
+
+    This — not ``jit(...).lower(...).compile()`` — is what makes the first
+    streaming call at a warmed signature free: jax's AOT path populates
+    the trace cache but NOT the jit dispatch executable cache, so a
+    lower/compile-only prewarm still pays the full XLA compile (seconds)
+    when the stream first crosses onto the rung, invisibly to the trace
+    counters.  Zero-filled inputs make every fold a trivially-empty pass
+    (all counts 0), so the execution itself costs microseconds."""
+    z = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), args)
+    jax.block_until_ready(fn(*z, **static))
 
 
 @dataclasses.dataclass
@@ -427,17 +476,40 @@ class _Regions:
         return self.rel_arity or \
             max(max(self.key_pos, default=0), self.ext_pos) + 1
 
-    def _build(self, tup: np.ndarray) -> IndexData:
+    def _ratchet(self, kind: str):
+        """The store ratchet + key quantizing ``kind`` capacities for this
+        projection's relation, or None for storeless regions.  All
+        non-derived projections of one relation cover its full row, so
+        their region counts are EQUAL — one shared (kind, rel) mark per
+        relation keeps every projection (and the live LSM) on the same
+        rung, halving the fold-signature space."""
+        store = self._store
+        if store is None:
+            return None, None
+        r = store.base_ratchet if kind == "base" else store.ratchet
+        return r, (kind, self.rel)
+
+    def _build(self, tup: np.ndarray, kind: str = "base") -> IndexData:
         rows = np.asarray(tup).reshape(-1, self.arity)
+        ratchet, key = self._ratchet(kind)
         if self.shard_w:
             from repro.core.csr import build_sharded_index
             per = -(-max(rows.shape[0], 1) // self.shard_w)
-            return build_sharded_index(rows, self.key_pos, self.ext_pos,
-                                       self.shard_w, capacity=_pow2(per),
-                                       narrow=self.narrow)
-        return build_index(rows, self.key_pos, self.ext_pos,
-                           capacity=_pow2(rows.shape[0]),
-                           narrow=self.narrow)
+            cap = _pow2(per) if ratchet is None else \
+                ratchet.capacity(key, per)
+            idx = build_sharded_index(rows, self.key_pos, self.ext_pos,
+                                      self.shard_w, capacity=cap,
+                                      narrow=self.narrow)
+        else:
+            cap = _pow2(rows.shape[0]) if ratchet is None else \
+                ratchet.capacity(key, rows.shape[0])
+            idx = build_index(rows, self.key_pos, self.ext_pos,
+                              capacity=cap, narrow=self.narrow)
+        if ratchet is not None:
+            # sharded builds may exceed the per-shard floor under skew:
+            # feed the REAL capacity back so the rung stays truthful
+            ratchet.observe(key, idx.key.shape[-1])
+        return idx
 
     # -- host rows: legacy truth, or the device mode's lazy debug mirror ----
     def _rows(self, name: str) -> np.ndarray:
@@ -503,14 +575,17 @@ class _Regions:
         assert not self.device_resident, \
             "device-resident regions are merged, never rebuilt"
         for name in which:
-            setattr(self, "d_" + name, self._build(self._host[name]))
+            setattr(self, "d_" + name,
+                    self._build(self._host[name],
+                                kind="base" if name == "base"
+                                else "committed"))
 
     def set_uncommitted(self, uins: np.ndarray, udel: np.ndarray):
         if self.derived:
             self._derived_cache.clear()  # the "new" image changed
             return
-        self.d_uins = self._build(uins)
-        self.d_udel = self._build(udel)
+        self.d_uins = self._build(uins, kind="delta")
+        self.d_udel = self._build(udel, kind="delta")
 
     def probe_cdel(self, ins: np.ndarray) -> bool:
         """any(ins ∈ cdel) — device probe, O(|Δ|·log|cdel|)."""
@@ -522,8 +597,11 @@ class _Regions:
         sent = csr.SENTINEL32 if kdt == np.int32 else csr.SENTINEL
         if not isinstance(key, tuple):
             key = key.astype(kdt)
+        ratchet, rkey = self._ratchet("probe")
+        cap = None if ratchet is None else \
+            ratchet.capacity(rkey, ins.shape[0])
         qk, qv = _pad_probe(key, ins[:, self.ext_pos].astype(np.int32),
-                            sent)
+                            sent, cap=cap)
         return bool(_any_member(self.d_cdel, qk, qv,
                                 sharded=bool(self.shard_w)))
 
@@ -595,7 +673,12 @@ class StoreStats:
     ``mirror_pulls`` counts host materializations of device-resident state
     (debug/differential paths only — zero on the warm epoch loop);
     ``live_compactions`` tracks the store-level live-set LSM separately
-    from the per-projection ``compactions``."""
+    from the per-projection ``compactions``.  ``compile_events`` is the
+    number of jit traces (= XLA compiles on one backend) recorded by any
+    instrumented fold since this store was created — steady state it must
+    stay FLAT across epochs (the DESIGN.md §8 compilation-stability
+    invariant); ``prewarm_compiles`` is the subset spent walking the AOT
+    ladder up front."""
 
     normalize_calls: int = 0
     commit_calls: int = 0
@@ -603,6 +686,8 @@ class StoreStats:
     epochs: int = 0
     live_compactions: int = 0
     mirror_pulls: int = 0
+    compile_events: int = 0
+    prewarm_compiles: int = 0
 
 
 @dataclasses.dataclass
@@ -661,6 +746,12 @@ class RegionStore:
         self.device_resident = bool(device_resident)
         self.projections: Dict[Projection, _Regions] = {}
         self.stats = StoreStats()
+        self._compile_base = compilestats.total()
+        # growth hysteresis (DESIGN.md §8): delta/probe/committed caps ride
+        # the slack ladder and never shrink; base caps are monotone pow2
+        # (factor 2 — no slack: base is the big region, 2x headroom max)
+        self.ratchet = Ratchet()
+        self.base_ratchet = Ratchet(factor=2)
         self._rels: Dict[str, _RelLive] = {}
         self._staged: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]] \
             = None
@@ -668,6 +759,26 @@ class RegionStore:
             {"edge": np.asarray(initial, np.int32).reshape(-1, 2)}
         for rel, rows in rels.items():
             self.add_relation(rel, rows)
+
+    def _sync_compile_stats(self):
+        self.stats.compile_events = compilestats.total() - self._compile_base
+
+    # -- ratcheted capacities (marks are PER-SHARD units when sharded) -----
+    def _per_shard(self, n: int) -> int:
+        return -(-max(int(n), 1) // self.shard_w) if self.shard_w \
+            else max(int(n), 1)
+
+    def _base_cap(self, rel: str, n: int) -> int:
+        return self.base_ratchet.capacity(("base", rel), self._per_shard(n))
+
+    def _delta_cap(self, rel: str, n: int) -> int:
+        return self.ratchet.capacity(("delta", rel), self._per_shard(n))
+
+    def _probe_cap(self, rel: str, n: int) -> int:
+        return self.ratchet.capacity(("probe", rel), max(int(n), 1))
+
+    def _committed_cap(self, rel: str, n: int) -> int:
+        return self.ratchet.capacity(("committed", rel), max(int(n), 1))
 
     def add_relation(self, rel: str, rows: np.ndarray,
                      arity: Optional[int] = None):
@@ -708,7 +819,10 @@ class RegionStore:
         if self.device_resident:
             # each live LSM shards like the projections (ownership by
             # packed key), so per-worker live memory stays O(|R|/w)
-            st.lb = _packed_index(rows, self.shard_w, ar)
+            st.lb = _packed_index(rows, self.shard_w, ar,
+                                  capacity=self._base_cap(rel,
+                                                          rows.shape[0]))
+            self.base_ratchet.observe(("base", rel), st.lb.key.shape[-1])
             st.lc_ins = _empty_packed(self.shard_w, ar)
             st.lc_del = _empty_packed(self.shard_w, ar)
             zero = np.zeros(self.shard_w, np.int64) if self.shard_w else 0
@@ -878,8 +992,8 @@ class RegionStore:
             return reg
         if self.device_resident:
             reg.d_base = reg._build(rows)
-            reg.d_cins = reg._build(empty)
-            reg.d_cdel = reg._build(empty)
+            reg.d_cins = reg._build(empty, kind="committed")
+            reg.d_cdel = reg._build(empty, kind="committed")
             reg.n_base = _count_of(reg.d_base) if self.shard_w \
                 else rows.shape[0]
             reg.n_cins = np.zeros(self.shard_w, np.int64) if self.shard_w \
@@ -927,6 +1041,126 @@ class RegionStore:
             _id: self.ensure(rel, key_pos, ext_pos).versioned(version)
             for _id, rel, key_pos, ext_pos, version in plan.index_ids()}
 
+    # -- AOT prewarm (DESIGN.md §8) ------------------------------------
+    def committed_ladder(self, rel: str, update_batch: int,
+                         horizon: Optional[int] = None) -> List[int]:
+        """The canonical committed-region rungs relation ``rel`` can visit
+        before compaction drains it: counts run from 0 up to the compaction
+        threshold plus one last pre-compaction batch.  ``horizon`` caps the
+        count at the stream's total expected churn (epochs × batch) so a
+        short stream over a huge graph doesn't warm rungs it can never
+        reach — an unreached rung costs nothing but prewarm time, a missed
+        one costs one compile when crossed."""
+        st = self._rel(rel)
+        nb = _total(st.n_live[0]) if self.device_resident \
+            else st.rows.shape[0]
+        hi = int(self.compact_ratio * max(nb, 1)) + 2 * int(update_batch)
+        if horizon is not None:
+            hi = min(hi, max(int(horizon), 2 * int(update_batch)))
+        return self.ratchet.rungs(1, hi)
+
+    def pin_delta_marks(self, update_batch: int) -> int:
+        """Pin every relation's probe/delta mark to the update-batch bound
+        so delta-sized buffers keep ONE shape for the stream's life (a
+        batch can land entirely on one shard, so the per-shard pin is the
+        full pow2 of the batch).  Returns the pin."""
+        P = _pow2(max(int(update_batch), 1))
+        for rel in self._rels:
+            self.ratchet.observe(("probe", rel), P)
+            self.ratchet.observe(("delta", rel), P)
+        return P
+
+    def prewarm_folds(self, update_batch: int,
+                      horizon: Optional[int] = None) -> int:
+        """AOT-compile the store's fold ladder: every jit signature the
+        canonical committed ladder can request this side of a base-region
+        regrowth — normalize, the eager re-insertion probes, every
+        commit-fold rung transition, and compaction — by executing each
+        fold once on zero-filled ShapeDtypeStruct prototypes
+        (:func:`_warm_call`).
+
+        After this, a stream of batches ≤ ``update_batch`` triggers ZERO
+        XLA compiles until a relation's base region outgrows its pow2 rung
+        (amortized-rare; compaction itself replays warmed shapes).
+        Returns the compile events spent (also accumulated in
+        ``stats.prewarm_compiles``)."""
+        if not self.device_resident:
+            return 0
+        snap = compilestats.snapshot()
+        ub = max(int(update_batch), 1)
+        P = self.pin_delta_marks(ub)
+        sharded = bool(self.shard_w)
+        use_k = _merge_kernel_on() and not sharded
+        S = jax.ShapeDtypeStruct
+        pv = S((P,), jnp.int32)
+        for rel, st in self._rels.items():
+            ladder = self.committed_ladder(rel, ub, horizon)
+            # (base proto, committed proto, live?) — all non-derived
+            # projections of rel share its committed rung (tied marks)
+            groups = [(st.lb, st.lc_ins, True)]
+            for reg in self.projections.values():
+                if reg.rel == rel and not reg.derived:
+                    groups.append((reg.d_base, reg.d_cins, False))
+            for base_idx, cproto, is_live in groups:
+                b_sds = _sds_like(base_idx)
+                # delta regions come from the same builders as committed
+                # ones, so the dtypes match; capacity is the pinned P
+                d_sds = _sds_like(cproto, P)
+                qk = (S((P,), jnp.int64), S((P,), jnp.int64)) \
+                    if cproto.lo is not None else S((P,), cproto.key.dtype)
+                bcap = int(base_idx.key.shape[-1])
+                b_outs = list(dict.fromkeys(
+                    (bcap, self.base_ratchet.next_rung(bcap))))
+                for r in ladder:
+                    ci = _sds_like(cproto, r)
+                    if is_live:
+                        _warm_call(
+                            _normalize_core, S((P,), jnp.int64),
+                            S((P,), jnp.int64), S((P,), jnp.int32),
+                            b_sds, ci, ci, sharded=sharded)
+                    _warm_call(_any_member, ci, qk, pv, sharded=sharded)
+                    for out in self.ratchet.rungs(r, r + ub):
+                        _warm_call(
+                            _commit_fold, b_sds, ci, ci, d_sds, d_sds,
+                            cins_cap=out, cdel_cap=out, sharded=sharded,
+                            use_kernel=use_k)
+                    for out in b_outs:
+                        _warm_call(
+                            _compact_fold, b_sds, ci, ci, out_cap=out,
+                            sharded=sharded, use_kernel=use_k)
+        spent = compilestats.since(snap)
+        self.stats.prewarm_compiles += spent
+        self._sync_compile_stats()
+        return spent
+
+    def indices_sds_for(self, plan: Plan, rung: int,
+                        update_batch: int) -> Indices:
+        """ShapeDtypeStruct mirror of :meth:`indices_for` with every
+        committed region at ``rung`` and every uncommitted region at the
+        pinned delta capacity — the prototype the engines' dataflow steps
+        are AOT-lowered against (``GraphSession.prewarm``)."""
+        P = self.pin_delta_marks(update_batch)
+        out = {}
+        for _id, rel, key_pos, ext_pos, version in plan.index_ids():
+            reg = self.ensure(rel, key_pos, ext_pos)
+            if reg.derived:
+                vi = reg._derived_versioned(version)
+                out[_id] = VersionedIndex(
+                    tuple(_sds_like(p) for p in vi.pos),
+                    tuple(_sds_like(n) for n in vi.neg))
+                continue
+            base = _sds_like(reg.d_base)
+            com = _sds_like(reg.d_cins, rung)
+            delta = _sds_like(reg.d_uins if reg.d_uins is not None
+                              else reg.d_cins, P)
+            if version == "static":
+                out[_id] = VersionedIndex((base,), ())
+            elif version == "old":
+                out[_id] = VersionedIndex((base, com), (com,))
+            else:  # "new"
+                out[_id] = VersionedIndex((base, com, delta), (com, delta))
+        return out
+
     # ------------------------------------------------------------------
     def normalize(self, updates, weights=None):
         """Net out a batch against the live relation state.
@@ -947,9 +1181,12 @@ class RegionStore:
                     "per-relation batches carry their own weights: pass "
                     "{rel: (rows, weights)}, not a top-level weights "
                     "argument")
-            return {rel: self._normalize_rel(rel, *self._split(rel, batch))
-                    for rel, batch in updates.items()}
-        return self._normalize_rel("edge", updates, weights)
+            out = {rel: self._normalize_rel(rel, *self._split(rel, batch))
+                   for rel, batch in updates.items()}
+        else:
+            out = self._normalize_rel("edge", updates, weights)
+        self._sync_compile_stats()
+        return out
 
     def _split(self, rel: str, batch):
         """One relation's update entry: a bare row array, or (rows, w)."""
@@ -974,7 +1211,7 @@ class RegionStore:
         hi, lo = _pack_rows(updates, st.arity)
         hi = np.where(valid, hi, SENT)
         lo = np.where(valid, lo, SENT)
-        B = _pow2(updates.shape[0])
+        B = self._probe_cap(rel, updates.shape[0])
         ph = np.full(B, SENT, np.int64)
         pl = np.full(B, SENT, np.int64)
         pw = np.zeros(B, np.int32)
@@ -1032,15 +1269,17 @@ class RegionStore:
             self._maybe_compact_host(force)
             return
         use_k = _merge_kernel_on() and not self.shard_w
-        for st in self._rels.values():
+        for rel, st in self._rels.items():
             nb, nci, ncd = st.n_live
             if (force or _total(nci) + _total(ncd) >
                     self.compact_ratio * max(_total(nb), 1)) and \
                     (_total(nci) or _total(ncd)):
                 new_nb = np.asarray(nb) - np.asarray(ncd) + np.asarray(nci)
+                out_cap = self.base_ratchet.capacity(("base", rel),
+                                                     _maxn(new_nb))
                 with _device_scope():
                     st.lb = _compact_fold(st.lb, st.lc_ins, st.lc_del,
-                                          out_cap=_pow2(_maxn(new_nb)),
+                                          out_cap=out_cap,
                                           sharded=bool(self.shard_w),
                                           use_kernel=use_k)
                 zero = np.zeros(self.shard_w, np.int64) if self.shard_w \
@@ -1051,6 +1290,12 @@ class RegionStore:
                              zero, zero]
                 self.stats.live_compactions += 1
                 st.mirror = None
+                # the committed regions drained to zero: restart their
+                # rung ladder instead of pinning every future fold at the
+                # pre-compaction rung (which would cost O(threshold) per
+                # epoch).  The replayed rungs are already in the jit
+                # cache, so re-walking the ladder compiles nothing new.
+                self.ratchet.reset(("committed", rel))
                 # invariant audit: cdel ⊆ base and cins ∩ base = ∅ make the
                 # compacted size exact arithmetic — a mismatch means
                 # corruption
@@ -1065,17 +1310,20 @@ class RegionStore:
             if committed:
                 new_n = np.asarray(reg.n_base) - np.asarray(reg.n_cdel) \
                     + np.asarray(reg.n_cins)
+                out_cap = self.base_ratchet.capacity(("base", reg.rel),
+                                                     _maxn(new_n))
                 with _device_scope():
                     reg.d_base = _compact_fold(
                         reg.d_base, reg.d_cins, reg.d_cdel,
-                        out_cap=_pow2(_maxn(new_n)),
+                        out_cap=out_cap,
                         sharded=bool(self.shard_w), use_kernel=use_k)
                 assert (np.asarray(_count_of(reg.d_base)) == new_n).all()
                 reg.n_base = _count_of(reg.d_base) if self.shard_w \
                     else int(new_n)
+                self.ratchet.reset(("committed", reg.rel))
                 empty = np.zeros((0, reg.arity), np.int32)
-                reg.d_cins = reg._build(empty)
-                reg.d_cdel = reg._build(empty)
+                reg.d_cins = reg._build(empty, kind="committed")
+                reg.d_cdel = reg._build(empty, kind="committed")
                 reg.n_cins = np.zeros(self.shard_w, np.int64) \
                     if self.shard_w else 0
                 reg.n_cdel = np.zeros(self.shard_w, np.int64) \
@@ -1147,7 +1395,9 @@ class RegionStore:
                     probe = pi if st.arity > 2 else pi[0]
                     qk, qv = _pad_probe(probe,
                                         np.zeros(r_ins.shape[0], np.int32),
-                                        np.int64(csr.SENTINEL))
+                                        np.int64(csr.SENTINEL),
+                                        cap=self._probe_cap(
+                                            rel, r_ins.shape[0]))
                     need = need or bool(_any_member(
                         st.lc_del, qk, qv, sharded=bool(self.shard_w)))
                 if not need:
@@ -1204,24 +1454,34 @@ class RegionStore:
         self._staged = None
         if not self.device_resident:
             self._commit_host(batches)
+            self._sync_compile_stats()
             return
         use_k = _merge_kernel_on() and not self.shard_w
         for rel, (r_ins, r_dels) in batches.items():
             if not (r_ins.size or r_dels.size):
                 continue
             st = self._rel(rel)
-            # live-set LSM fold (per relation; shard-local when sharded)
-            li = _packed_index(r_ins, self.shard_w, st.arity)
-            ld = _packed_index(r_dels, self.shard_w, st.arity)
+            # live-set LSM fold (per relation; shard-local when sharded).
+            # Delta indices ride the pinned (rel, "delta") rung; both
+            # committed outputs share ONE (rel, "committed") rung — tied
+            # caps halve the fold-signature space and a rung only ever
+            # grows between compactions (ratchet hysteresis).
+            li = _packed_index(r_ins, self.shard_w, st.arity,
+                               capacity=self._delta_cap(rel,
+                                                        r_ins.shape[0]))
+            self.ratchet.observe(("delta", rel), li.key.shape[-1])
+            ld = _packed_index(r_dels, self.shard_w, st.arity,
+                               capacity=self._delta_cap(rel,
+                                                        r_dels.shape[0]))
+            self.ratchet.observe(("delta", rel), ld.key.shape[-1])
             nb, nci, ncd = st.n_live
-            live_cins_cap = _pow2(_maxn(np.asarray(nci)
-                                        + np.asarray(_count_of(li))))
-            live_cdel_cap = _pow2(_maxn(np.asarray(ncd)
-                                        + np.asarray(_count_of(ld))))
+            need = max(_maxn(np.asarray(nci) + np.asarray(_count_of(li))),
+                       _maxn(np.asarray(ncd) + np.asarray(_count_of(ld))))
+            cc = self._committed_cap(rel, need)
             with _device_scope():
                 new_ci, new_cd = _commit_fold(
                     st.lb, st.lc_ins, st.lc_del, li, ld,
-                    cins_cap=live_cins_cap, cdel_cap=live_cdel_cap,
+                    cins_cap=cc, cdel_cap=cc,
                     sharded=bool(self.shard_w), use_kernel=use_k)
             st.lc_ins, st.lc_del = new_ci, new_cd
             st.n_live = [nb, _count_of(new_ci), _count_of(new_cd)]
@@ -1236,14 +1496,16 @@ class RegionStore:
                 continue
             if not (r_ins.size or r_dels.size):
                 continue  # untouched relation: regions pass through
-            ci_cap = _pow2(_maxn(np.asarray(reg.n_cins)
-                                 + np.asarray(_count_of(reg.d_uins))))
-            cd_cap = _pow2(_maxn(np.asarray(reg.n_cdel)
-                                 + np.asarray(_count_of(reg.d_udel))))
+            need = max(
+                _maxn(np.asarray(reg.n_cins)
+                      + np.asarray(_count_of(reg.d_uins))),
+                _maxn(np.asarray(reg.n_cdel)
+                      + np.asarray(_count_of(reg.d_udel))))
+            cc = self._committed_cap(reg.rel, need)
             with _device_scope():
                 d_cins, d_cdel = _commit_fold(
                     reg.d_base, reg.d_cins, reg.d_cdel, reg.d_uins,
-                    reg.d_udel, cins_cap=ci_cap, cdel_cap=cd_cap,
+                    reg.d_udel, cins_cap=cc, cdel_cap=cc,
                     sharded=bool(self.shard_w), use_kernel=use_k)
             reg.d_cins, reg.d_cdel = d_cins, d_cdel
             reg.n_cins = _count_of(d_cins)
@@ -1254,6 +1516,7 @@ class RegionStore:
             reg._mirror.pop("cins", None)
             reg._mirror.pop("cdel", None)
         self._maybe_compact()
+        self._sync_compile_stats()
 
     def _commit_host(self, batches: Dict):
         for reg in self.projections.values():
@@ -1365,6 +1628,35 @@ class DeltaBigJoin:
                   weights: np.ndarray) -> JoinResult:
         """Run one delta query's dataflow; overridden by the mesh engine."""
         return run_bigjoin(plan, indices, seed, weights, cfg=self.cfg)
+
+    def prewarm(self, update_batch: int,
+                horizon: Optional[int] = None) -> int:
+        """AOT-compile every (step, seed_step, committed-rung) signature
+        this engine's delta plans can request for batches ≤ ``update_batch``
+        (the local half of ``GraphSession.prewarm``; the store's fold
+        ladder is warmed separately by ``RegionStore.prewarm_folds``).
+        Returns the compile events spent."""
+        from repro.core.bigjoin import _compiled_fns, make_state
+        ub = max(int(update_batch), 1)
+        snap = compilestats.snapshot()
+        for plan in self.plans:
+            step, seed_step = _compiled_fns(plan, self.cfg)
+            state_sds = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                make_state(plan, self.cfg))
+            Sc = int(self.cfg.seed_chunk)
+            pfx = jax.ShapeDtypeStruct((Sc, plan.seed_width), jnp.int32)
+            wts = jax.ShapeDtypeStruct((Sc,), jnp.int32)
+            valid = jax.ShapeDtypeStruct((Sc,), jnp.bool_)
+            rels = {rel for _id, rel, *_ in plan.index_ids()}
+            ladder = sorted({r for rel in rels
+                             for r in self.store.committed_ladder(
+                                 rel, ub, horizon)})
+            for rung in ladder:
+                idx = self.store.indices_sds_for(plan, rung, ub)
+                _warm_call(seed_step, state_sds, idx, pfx, wts, valid)
+                _warm_call(step, state_sds, idx)
+        return compilestats.since(snap)
 
     # ------------------------------------------------------------------
     def run_delta_plans(self, ins, dels=None) -> DeltaResult:

@@ -36,7 +36,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import csr
+from repro.core import compilestats, csr
 from repro.core import delta as _delta
 from repro.core.bigjoin import BigJoinConfig
 from repro.core.dataflow_index import VersionedIndex
@@ -460,6 +460,7 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
     collect = dcfg.base.mode == "collect"
 
     def per_worker(indices, seed, seed_n, seed_w):
+        compilestats.record("distributed.program")
         seed, seed_n, seed_w = seed[0], seed_n[0], seed_w[0]
         local = {k: _local(v) for k, v in indices.items()}
         state = make_state(plan, dcfg.base, seed_capacity=seed.shape[0])
@@ -557,38 +558,74 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
     return per_worker
 
 
-def build_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
-    """Returns jitted fn(indices, seed [w,S,2], seed_n [w], seed_w [w,S]) ->
-    (count, proposals, intersections, steps, overflow, max_load, sum_load
-     [, out_buf, out_weight, out_n]).
+class DistributedProgram:
+    """One whole-join shard_map program: jitted fn(indices, seed [w,S,width],
+    seed_n [w], seed_w [w,S]) -> (count, proposals, intersections, steps,
+    overflow, max_load, sum_load [, out_buf, out_weight, out_n]).
 
     The shard_map'd callable is built ONCE and reused: jax.jit caches on
     callable identity, so repeated epochs with stable shapes (the delta
-    engine's pow2-padded regions and seeds) hit the compile cache instead of
-    re-lowering every update batch.
+    engine's ratcheted pow2 regions and pinned seed chunks) hit the compile
+    cache instead of re-lowering every update batch.  :meth:`warm`
+    AOT-compiles the program against ShapeDtypeStruct prototypes
+    (``RegionStore.indices_sds_for``) so even the FIRST epoch — and every
+    prewarmed capacity-rung crossing — skips XLA entirely (DESIGN.md §8).
     """
-    per_worker = build_per_worker(plan, dcfg)
-    collect = dcfg.base.mode == "collect"
-    ax = dcfg.axis
-    out_specs = (P(), P(), P(), P(), P(), P(), P())
-    if collect:
-        out_specs = out_specs + (P(ax), P(ax), P(ax))
-    cache = {}
 
-    # in_specs must mirror the indices pytree: build on first call per
-    # structure (stable per plan, so the jitted wrapper is reused)
-    def run(indices, seed, seed_n, seed_w):
-        treedef = jax.tree.structure(indices)
-        if treedef not in cache:
+    def __init__(self, plan: Plan, dcfg: DistConfig, mesh: Mesh):
+        self._per_worker = build_per_worker(plan, dcfg)
+        self._mesh = mesh
+        self._ax = dcfg.axis
+        self.w = dcfg.num_workers
+        out_specs = (P(), P(), P(), P(), P(), P(), P())
+        if dcfg.base.mode == "collect":
+            ax = dcfg.axis
+            out_specs = out_specs + (P(ax), P(ax), P(ax))
+        self._out_specs = out_specs
+        # in_specs must mirror the indices pytree: build per structure
+        # (stable per plan, so the jitted wrapper is reused)
+        self._cache = {}
+
+    def _jitted(self, treedef):
+        f = self._cache.get(treedef)
+        if f is None:
+            ax = self._ax
             specs = (jax.tree.unflatten(
                 treedef, [P(ax)] * treedef.num_leaves),
                 P(ax), P(ax), P(ax))
-            f = compat.shard_map(per_worker, mesh=mesh, in_specs=specs,
-                                 out_specs=out_specs, check_vma=False)
-            cache[treedef] = jax.jit(f)
-        return cache[treedef](indices, seed, seed_n, seed_w)
+            f = jax.jit(compat.shard_map(
+                self._per_worker, mesh=self._mesh, in_specs=specs,
+                out_specs=self._out_specs, check_vma=False))
+            self._cache[treedef] = f
+        return f
 
-    return run
+    def __call__(self, indices, seed, seed_n, seed_w):
+        return self._jitted(jax.tree.structure(indices))(
+            indices, seed, seed_n, seed_w)
+
+    def warm(self, indices_sds, chunk: int, width: int) -> None:
+        """AOT-compile for per-worker seed chunks of ``chunk`` rows.
+
+        ``indices_sds`` is the ShapeDtypeStruct mirror of the runtime
+        indices pytree.  The program runs ONCE on zero-filled inputs (all
+        seed counts 0, so the epoch loop body is empty) because only a
+        real call lands the executable in the jit dispatch cache
+        ``__call__`` reads — ``lower().compile()`` would warm the trace
+        cache but leave the first streaming call paying the XLA compile
+        (see ``delta._warm_call``)."""
+        S = jax.ShapeDtypeStruct
+        w = self.w
+        _delta._warm_call(
+            self._jitted(jax.tree.structure(indices_sds)),
+            indices_sds, S((w, int(chunk), int(width)), jnp.int32),
+            S((w,), jnp.int32), S((w, int(chunk)), jnp.int32))
+
+
+def build_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh
+                              ) -> DistributedProgram:
+    """Build one :class:`DistributedProgram` (kept as the stable public
+    constructor — callers treat the result as a callable)."""
+    return DistributedProgram(plan, dcfg, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -615,17 +652,18 @@ def get_distributed_program(plan: Plan, dcfg: DistConfig, mesh: Mesh):
 
 
 def deal_seed(seed: np.ndarray, weights: np.ndarray, w: int,
-              width: int = 2
+              width: int = 2, floor: int = 0
               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Round-robin deal of a seed batch across ``w`` workers, padded to a
     stable pow2 per-worker chunk (keeps the jitted program's shapes — and
     hence its compile cache — warm across epochs).  ``width`` is the seed
-    prefix width (``plan.seed_width``).  Returns
-    (chunks [w,S,width], seed_n [w], wchunks [w,S])."""
+    prefix width (``plan.seed_width``); ``floor`` raises the chunk to a
+    ratcheted rung so every delta epoch of a stream shares ONE seed shape
+    (the delta engine pins it to the update-batch bound)."""
     seed = np.asarray(seed, np.int32).reshape(-1, width)
     weights = np.asarray(weights, np.int32)
     per = -(-seed.shape[0] // w)
-    S = _delta._pow2(per)
+    S = max(_delta._pow2(per), int(floor))
     chunks = np.zeros((w, S, width), np.int32)
     wchunks = np.zeros((w, S), np.int32)
     seed_n = np.zeros(w, np.int32)
@@ -638,9 +676,11 @@ def deal_seed(seed: np.ndarray, weights: np.ndarray, w: int,
 
 
 def run_program(program, w: int, collect: bool, indices,
-                seed: np.ndarray, weights: np.ndarray, width: int = 2):
+                seed: np.ndarray, weights: np.ndarray, width: int = 2,
+                seed_floor: int = 0):
     """Deal the seed, launch one compiled program, unpack psum'd outputs."""
-    chunks, seed_n, wchunks = deal_seed(seed, weights, w, width)
+    chunks, seed_n, wchunks = deal_seed(seed, weights, w, width,
+                                        floor=seed_floor)
     out = program(indices, jnp.asarray(chunks), jnp.asarray(seed_n),
                   jnp.asarray(wchunks))
     if bool(out[4]):
@@ -815,6 +855,36 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
         if pi not in self._programs:
             self._programs[pi] = get_distributed_program(
                 plan, self.dcfg, self.mesh)
+        # the per-worker seed chunk rides its own ratcheted rung so every
+        # epoch of a stream launches ONE program signature (prewarm pins
+        # the mark at the update-batch bound; _static_eval full-graph
+        # seeds deliberately bypass this key)
+        width = plan.seed_width
+        per = -(-seed.shape[0] // self.w)
+        floor = self.store.ratchet.capacity(("seed", width), per)
         return run_program(self._programs[pi], self.w,
                            self.dcfg.base.mode == "collect", indices,
-                           seed, weights, width=plan.seed_width)
+                           seed, weights, width=width, seed_floor=floor)
+
+    def prewarm(self, update_batch: int, horizon=None) -> int:
+        """AOT-compile every (program, committed-rung) signature this
+        engine's delta plans can request for batches ≤ ``update_batch``
+        (the mesh half of ``GraphSession.prewarm``)."""
+        ub = max(int(update_batch), 1)
+        snap = compilestats.snapshot()
+        for pi, plan in enumerate(self.plans):
+            if pi not in self._programs:
+                self._programs[pi] = get_distributed_program(
+                    plan, self.dcfg, self.mesh)
+            prog = self._programs[pi]
+            width = plan.seed_width
+            per = -(-ub // self.w)
+            chunk = self.store.ratchet.capacity(("seed", width), per)
+            rels = {rel for _id, rel, *_ in plan.index_ids()}
+            ladder = sorted({r for rel in rels
+                             for r in self.store.committed_ladder(
+                                 rel, ub, horizon)})
+            for rung in ladder:
+                prog.warm(self.store.indices_sds_for(plan, rung, ub),
+                          chunk, width)
+        return compilestats.since(snap)

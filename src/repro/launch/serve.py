@@ -32,7 +32,7 @@ import numpy as np
 
 
 def serve_stream(args):
-    from repro.api import Graph, GraphSession, oracle_count
+    from repro.api import Graph, GraphSession, compilestats, oracle_count
     from repro.data.synthetic import EdgeUpdateStream, rmat_graph
 
     g = Graph.from_edges(rmat_graph(args.scale, args.edge_factor,
@@ -66,8 +66,17 @@ def serve_stream(args):
           "(one shared commit per epoch"
           + (", tri relation fed by the standing triangle query)"
          if needs_tri else ")"))
+    if args.prewarm:
+        t0 = time.time()
+        n = session.prewarm(horizon=args.epochs * args.batch_size)
+        print(f"prewarm: walked the AOT capacity ladder in "
+              f"{time.time()-t0:.1f}s ({n} compile events"
+              + (", persistent cache "
+                 f"{compilestats.cache_dir()}" if compilestats.cache_dir()
+                 else "") + ")")
 
     times = []
+    compiles = []
     noops = 0
     updates_sent = 0
     # the stream generator needs the live set to pick deletes; maintain it
@@ -93,6 +102,8 @@ def serve_stream(args):
         dt = max(time.time() - t0, 1e-9)  # no-op epochs can be ~0s
         live = res.advance(live)  # host bookkeeping outside the timer
         times.append(dt)
+        compiles.append(res.compile_events +
+                        (res2.compile_events if res2 is not None else 0))
         noops += int(res.is_noop)
         parts = []
         changes = 0
@@ -111,12 +122,20 @@ def serve_stream(args):
               f"({changes:,} changes) in {dt*1e3:.0f} ms — "
               f"{upd.shape[0]/dt:,.0f} upd/s, {changes/dt:,.0f} changes/s")
     warm = times[2:] or times
+    warm_compiles = sum(compiles[2:]) if len(compiles) > 2 else 0
     st = session.stats
+    p50, p99 = np.percentile(times, [50, 99])
     print(f"steady state: {np.median(warm)*1e3:.0f} ms/epoch, "
           f"{args.batch_size/np.median(warm):,.0f} upd/s; net "
           + " ".join(f"{h.name} {h.net_change:+,}" for h in handles)
           + f"; {st.commit_calls} commits / {st.normalize_calls} "
           f"normalizes over {st.epochs} epochs")
+    print(f"latency: p50 {p50*1e3:.1f} ms  p99 {p99*1e3:.1f} ms  max "
+          f"{max(times)*1e3:.1f} ms (p99/p50 {p99/max(p50, 1e-9):.1f}x); "
+          f"compile events: {st.prewarm_compiles} prewarm + "
+          f"{sum(compiles)} streaming ({warm_compiles} after warmup)"
+          + (f"; {compilestats.persistent_hits()} persistent-cache hits"
+             if compilestats.cache_dir() else ""))
 
     if args.verify:
         rels_now = {"edge": session.edges}
@@ -225,6 +244,10 @@ def main(argv=None):
                     help="BiGJoin-S Balance operator (stream mode)")
     ap.add_argument("--local", action="store_true",
                     help="host-local DeltaBigJoin baseline (stream mode)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="walk the AOT capacity ladder before the first "
+                    "epoch so warm epochs trigger zero XLA compiles "
+                    "(stream mode; pairs with REPRO_COMPILE_CACHE)")
     ap.add_argument("--verify", action="store_true",
                     help="check the maintained total against full "
                     "recomputation at the end (stream mode)")
