@@ -174,6 +174,29 @@ def render_multi_query(path):
               f"| {r['exact']} |")
 
 
+def render_serve_load(path):
+    """Render a BENCH_serve_load.json concurrent-serving record."""
+    rec = json.load(open(path))
+    seq = rec["sequential"]
+    print(f"{rec['epochs_per_tenant']} batches/tenant x "
+          f"{rec['batch_size']} updates, coalesce<={rec['coalesce']}; "
+          f"sequential baseline {seq['batches_per_s']} batches/s\n")
+    print("| tenants | batches/s | vs sequential | coalesce | "
+          "apply p50 ms | p99/p50 | serve compiles | exact |")
+    print("|" + "---|" * 8)
+    for n, r in sorted(rec.get("pool", {}).items(),
+                       key=lambda kv: int(kv[0])):
+        sp = r["batches_per_s"] / max(seq["batches_per_s"], 1e-9)
+        print(f"| {n} | {r['batches_per_s']} | {sp:.2f}x "
+              f"| {r['coalesce_ratio']}x | {r['latency_ms']['p50']} "
+              f"| {r['p99_p50_ratio']}x | {r['serve_compiles']} "
+              f"| {r['final_exact_vs_sequential']} |")
+    print(f"\nspeedup at N=4: {rec['speedup_n4']}x (acceptance >=2x: "
+          f"{rec['speedup_n4_ge_2x']}); tail: worst p99/p50 "
+          f"{rec['p99_p50_max']}x, {rec['serve_compiles_total']} serving "
+          f"compiles (flat: {rec['tail_flat']})")
+
+
 if __name__ == "__main__":
     for p in sys.argv[1:]:
         print(f"\n### {p}\n")
@@ -187,5 +210,7 @@ if __name__ == "__main__":
             render_nary_stream(p)
         elif "BENCH_epoch_latency" in p:
             render_epoch_latency(p)
+        elif "BENCH_serve_load" in p:
+            render_serve_load(p)
         else:
             render(p)

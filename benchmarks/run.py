@@ -14,13 +14,13 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4,"
                     "intersect,delta_stream,multi_query,epoch_latency,"
-                    "nary_stream")
+                    "nary_stream,serve_load")
     args = ap.parse_args()
 
     from benchmarks import (baseline_compare, batch_size, cost_table,
                             delta_stream, epoch_latency, intersect_bench,
                             multi_query, nary_stream, optimizations,
-                            scaling, throughput)
+                            scaling, serve_load, throughput)
     table = {
         "fig4": cost_table.main,
         "tab2_3": baseline_compare.main,
@@ -33,6 +33,7 @@ def main() -> None:
         "multi_query": multi_query.main,  # -> BENCH_multi_query.json
         "epoch_latency": epoch_latency.main,  # -> BENCH_epoch_latency.json
         "nary_stream": nary_stream.main,  # -> BENCH_nary_stream.json
+        "serve_load": serve_load.main,  # -> BENCH_serve_load.json
     }
     picks = list(table) if args.only == "all" else args.only.split(",")
     print("table,name,us_per_call,derived")

@@ -1,0 +1,180 @@
+"""Concurrent serving load: N tenants on one pool -> BENCH_serve_load.json.
+
+The serving subsystem's claim (DESIGN.md §9): multiplexing N tenant
+sessions onto one mesh through a :class:`repro.serve.SessionPool` beats
+serving them one-at-a-time, because (a) the prep thread overlaps batch
+k+1's host pack with batch k's device epoch, (b) adaptive coalescing folds
+queued batches into shared device epochs (signed-weight netting keeps the
+result exact), and (c) every tenant shares ONE jit cache — admission after
+the first tenant compiles nothing.
+
+Setup: every tenant gets its own graph and its own pre-generated CLEAN
+net-balanced update stream (``data.synthetic.clean_update_batches``:
+sign-consistent batches make coalescing exact, and a pinned live count
+keeps the base region inside its pow2 rung so the zero-compile serving
+budget holds for the whole run).  The sequential baseline drives one
+prewarmed session per tenant, one ``session.update`` per batch,
+back-to-back on the caller's thread.  The pool runs N client threads
+submitting the same batches through ``SessionPool.submit``.
+
+Gates (ISSUE 8):
+
+- ``speedup_n4 >= 2.0`` — aggregate batches/s at N=4 vs the sequential
+  baseline's per-tenant rate;
+- ``tail_flat`` — zero serving-path compile events at EVERY N (admission
+  prewarm covers the whole stream) and apply-latency p99/p50 <= 8x.
+
+Run via ``python -m benchmarks.run --only serve_load`` (or directly).
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_serve_load.json")
+
+TENANTS = [1, 2, 4, 8]
+EPOCHS = 24  # batches per tenant
+BATCH = 128  # updates per batch
+COALESCE = 8
+UPDATE_BATCH = COALESCE * BATCH  # a full coalesce group fits the probe
+NV, NE = 1 << 9, 2_000
+
+
+def _graph(i: int):
+    from repro.data.synthetic import uniform_graph
+    return uniform_graph(NV, NE, seed=i)
+
+
+def _batches(i: int, edges):
+    """Pre-generate tenant i's clean net-balanced stream."""
+    from repro.data.synthetic import clean_update_batches
+    return clean_update_batches(edges, NV, BATCH, EPOCHS, seed=100 + i)
+
+
+def _sequential(graphs, batches):
+    """Baseline: each tenant served alone, one update per batch, no pool."""
+    from repro.api import GraphSession
+    from repro.core import compilestats
+    sessions = []
+    for g in graphs:
+        s = GraphSession(g, local=True, update_batch=UPDATE_BATCH)
+        s.register("triangle")
+        s.prewarm(horizon=EPOCHS * BATCH)
+        sessions.append(s)
+    snap = compilestats.snapshot()
+    lat = []
+    t0 = time.perf_counter()
+    for s, per_tenant in zip(sessions, batches):
+        for upd, w in per_tenant:
+            t1 = time.perf_counter()
+            s.update(upd, w)
+            lat.append((time.perf_counter() - t1) * 1e3)
+    wall = time.perf_counter() - t0
+    total = sum(len(b) for b in batches)
+    return {
+        "batches": total,
+        "epochs": total,  # one device epoch per batch, by construction
+        "wall_s": round(wall, 3),
+        "batches_per_s": round(total / wall, 2),
+        "latency_ms": {k: round(float(np.percentile(lat, q)), 3)
+                       for k, q in (("p50", 50), ("p95", 95), ("p99", 99))},
+        "serve_compiles": compilestats.since(snap),
+    }, [s.edges for s in sessions]
+
+
+def _pooled(n, graphs, batches):
+    """N client threads submitting through one SessionPool."""
+    import threading
+
+    from repro.serve import SessionPool
+    pool = SessionPool(local=True, update_batch=UPDATE_BATCH,
+                       horizon=EPOCHS * BATCH)
+    handles = [pool.admit(f"t{i}", graphs[i], queries=("triangle",),
+                          coalesce=COALESCE, max_queue=EPOCHS)
+               for i in range(n)]
+
+    def client(i):
+        tickets = [handles[i].submit(upd, w) for upd, w in batches[i]]
+        tickets[-1].result(timeout=600)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(n)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    pool.drain(timeout=600)
+    wall = time.perf_counter() - t0
+    agg = pool.stats().aggregate()
+    finals = [h.session.edges for h in handles]
+    pool.close()
+    lat = agg["latency_ms"]
+    return {
+        "batches": agg["retired"],
+        "epochs": agg["epochs"],
+        "coalesce_ratio": round(agg["retired"] / max(agg["epochs"], 1), 2),
+        "wall_s": round(wall, 3),
+        "batches_per_s": round(agg["retired"] / wall, 2),
+        "latency_ms": {k: round(lat[k], 3) for k in ("p50", "p95", "p99")},
+        "p99_p50_ratio": round(lat["p99_p50_ratio"], 2),
+        "serve_compiles": agg["serve_compiles"],
+    }, finals
+
+
+def main():
+    nmax = max(TENANTS)
+    graphs = [_graph(i) for i in range(nmax)]
+    batches = [_batches(i, graphs[i]) for i in range(nmax)]
+
+    # sequential baseline over ONE tenant's stream (the N=1 reference rate)
+    seq, seq_finals = _sequential(graphs[:1], batches[:1])
+    rec = {"bench": "serve_load", "epochs_per_tenant": EPOCHS,
+           "batch_size": BATCH, "coalesce": COALESCE,
+           "update_batch": UPDATE_BATCH, "sequential": seq, "pool": {}}
+    row("serve_load", "sequential_n1", 1.0 / max(seq["batches_per_s"], 1e-9),
+        f"{seq['batches_per_s']} batches/s p50={seq['latency_ms']['p50']}ms")
+
+    exact = True
+    for n in TENANTS:
+        pooled, finals = _pooled(n, graphs, batches)
+        # pooled tenant 0 must land on the sequential baseline's exact
+        # final state — coalescing is netting, not approximation
+        exact = exact and bool(np.array_equal(finals[0], seq_finals[0]))
+        pooled["final_exact_vs_sequential"] = bool(
+            np.array_equal(finals[0], seq_finals[0]))
+        rec["pool"][str(n)] = pooled
+        row("serve_load", f"pool_n{n}",
+            1.0 / max(pooled["batches_per_s"], 1e-9),
+            f"{pooled['batches_per_s']} batches/s "
+            f"coalesce={pooled['coalesce_ratio']}x "
+            f"serve_compiles={pooled['serve_compiles']}")
+
+    speedup = rec["pool"]["4"]["batches_per_s"] / \
+        max(seq["batches_per_s"], 1e-9)
+    rec["speedup_n4"] = round(speedup, 2)
+    rec["speedup_n4_ge_2x"] = bool(speedup >= 2.0)
+    worst_tail = max(rec["pool"][str(n)]["p99_p50_ratio"] for n in TENANTS)
+    total_compiles = sum(rec["pool"][str(n)]["serve_compiles"]
+                         for n in TENANTS)
+    rec["p99_p50_max"] = worst_tail
+    rec["serve_compiles_total"] = total_compiles
+    rec["tail_flat"] = bool(worst_tail <= 8.0 and total_compiles == 0)
+    rec["all_exact"] = bool(exact)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    row("serve_load", "speedup_n4", 0.0,
+        f"{rec['speedup_n4']}x (>=2x: {rec['speedup_n4_ge_2x']})")
+    row("serve_load", "tail_flat", 0.0,
+        f"p99/p50<={worst_tail}x serve_compiles={total_compiles} "
+        f"(flat: {rec['tail_flat']}) exact={rec['all_exact']}")
+    row("serve_load", "json", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    main()

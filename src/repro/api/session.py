@@ -350,19 +350,33 @@ class GraphSession:
                                 store=self.store)
 
     # -- the epoch loop -----------------------------------------------------
-    def update(self, updates, weights=None) -> EpochResult:
+    def prepare(self, updates, weights=None) -> _delta.PreparedBatch:
+        """Stage A of :meth:`update` on the host only (validate, pack,
+        sentinel-pad — pure numpy, no device call): the serving pipeline
+        prepares batch k+1 on a prep thread while batch k is still
+        committing, then passes the result to ``update(prepared=...)``
+        (DESIGN.md §9)."""
+        return self.store.prepare(updates, weights)
+
+    def update(self, updates=None, weights=None, *,
+               prepared: Optional[_delta.PreparedBatch] = None
+               ) -> EpochResult:
         """Apply one update batch to the graph and every standing query:
         ONE normalize, one staged uncommitted region set, each registered
         query's dAQ pipeline off the shared regions, ONE commit.
 
         ``updates`` is an [N, 2] edge array (with optional ``weights``), or
         a per-relation dict ``{"edge": (rows, w), "tri": (rows, w), ...}``
-        updating any subset of the session's relations in one epoch.
+        updating any subset of the session's relations in one epoch —
+        or pass ``prepared=`` (from :meth:`prepare`) to skip the host
+        packing stage.
         """
         snap = compilestats.snapshot()
-        batches = self.store.normalize(updates, weights)
-        if not isinstance(batches, dict):
-            batches = {"edge": batches}
+        if prepared is None:
+            prepared = self.store.prepare(updates, weights)
+        elif updates is not None or weights is not None:
+            raise ValueError("pass updates OR prepared=, not both")
+        batches = self.store.normalize_prepared(prepared)
         self.epoch += 1
         e_ins, e_dels = batches.get(
             "edge", (np.zeros((0, 2), np.int32),) * 2)
@@ -386,6 +400,52 @@ class GraphSession:
             h._deliver(self.epoch, deltas[name])
         return EpochResult(self.epoch, e_ins, e_dels, deltas, batches,
                            compile_events=compilestats.since(snap))
+
+    # -- durability (DESIGN.md §9) ------------------------------------------
+    def snapshot(self) -> Tuple[List[np.ndarray], dict]:
+        """Serialize the session's dynamic state: the store's regions and
+        ratchet marks (``RegionStore.snapshot``) plus the session layer —
+        epoch counter and every registered handle (pattern DSL round-trip
+        + accumulated ``net_change``).  Returns ``(leaves, meta)`` ready
+        for ``repro.checkpoint.save_pytree(leaves, ..., extra=meta)``;
+        restore with :meth:`restore` on a session of the same mesh
+        width/engine mode."""
+        from repro.api.dsl import pattern_of
+        leaves, meta = self.store.snapshot()
+        meta["session"] = {
+            "epoch": int(self.epoch),
+            "w": int(self.w),
+            "local": bool(self.local),
+            "update_batch": int(self.update_batch),
+            "handles": {name: {"pattern": pattern_of(h.query),
+                               "net_change": int(h.net_change)}
+                        for name, h in self.handles.items()},
+        }
+        return leaves, meta
+
+    def restore(self, leaves: List[np.ndarray], meta: dict) -> None:
+        """Restore a :meth:`snapshot` onto this session in place: store
+        regions + ratchet marks first, then the session layer (epoch,
+        handles re-registered from their pattern DSL with net_change
+        reinstated).  Handles already registered with the same name keep
+        their handle object (and subscribers); the snapshot's counters
+        overwrite theirs.  A WAL replay on top of this brings the session
+        to the exact pre-crash state (``repro.serve.wal``)."""
+        sess = meta.get("session", {})
+        w = int(sess.get("w", self.w))
+        if w != self.w:
+            raise ValueError(
+                f"snapshot was taken on a {w}-worker session; this one has "
+                f"{self.w} workers — failover restores onto the same mesh "
+                "width")
+        if bool(sess.get("local", self.local)) != self.local:
+            raise ValueError("snapshot engine mode (local/mesh) mismatch")
+        self.store.restore(leaves, meta)
+        self.epoch = int(sess.get("epoch", 0))
+        for name, rec in sess.get("handles", {}).items():
+            h = self.register(rec["pattern"], name=name)
+            h.net_change = int(rec["net_change"])
+            h.last_delta = None
 
     # -- static evaluation over the shared regions --------------------------
     def _static_plan(self, q: Query) -> Plan:

@@ -1,2 +1,2 @@
 from repro.checkpoint.checkpoint import (CheckpointManager, load_pytree,
-                                         save_pytree)
+                                         load_raw, save_pytree)

@@ -68,20 +68,16 @@ def save_pytree(tree, directory: str, step: int,
     return final
 
 
-def load_pytree(template, path: str, shardings=None) -> Tuple[Any, dict]:
-    """Restore into the structure of ``template``.
+def load_raw(path: str) -> Tuple[list, dict]:
+    """Load one checkpoint's leaves in saved order WITHOUT a template:
+    returns ``(leaves, manifest)`` with each leaf a verified host array.
 
-    ``shardings``: optional pytree of jax.sharding.Sharding matching the
-    template — the elastic-resharding hook: leaves are device_put with the
-    *target* sharding regardless of the mesh that wrote them.
-    """
+    The template-free entry point for state whose structure is recorded in
+    the manifest itself (``extra=``) rather than in caller code — e.g.
+    ``RegionStore.snapshot()`` metadata names its leaves, so a recovering
+    serving worker can restore before rebuilding any engine structure."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    flat_t, treedef = jax.tree_util.tree_flatten(template)
-    if len(flat_t) != len(manifest["leaves"]):
-        raise ValueError(
-            f"leaf count mismatch: template {len(flat_t)} vs "
-            f"checkpoint {len(manifest['leaves'])}")
     leaves = []
     for rec in manifest["leaves"]:
         raw = np.load(os.path.join(path, rec["file"]))
@@ -93,6 +89,22 @@ def load_pytree(template, path: str, shardings=None) -> Tuple[Any, dict]:
         if _checksum(arr) != rec["sha"]:
             raise IOError(f"checksum mismatch in {rec['file']}")
         leaves.append(arr)
+    return leaves, manifest
+
+
+def load_pytree(template, path: str, shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree of jax.sharding.Sharding matching the
+    template — the elastic-resharding hook: leaves are device_put with the
+    *target* sharding regardless of the mesh that wrote them.
+    """
+    leaves, manifest = load_raw(path)
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
+    if len(flat_t) != len(manifest["leaves"]):
+        raise ValueError(
+            f"leaf count mismatch: template {len(flat_t)} vs "
+            f"checkpoint {len(manifest['leaves'])}")
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.tree.map(
@@ -145,6 +157,17 @@ class CheckpointManager:
             path = os.path.join(self.directory, f"ckpt_{s:010d}")
             try:
                 return load_pytree(template, path, shardings)
+            except (IOError, ValueError):
+                continue
+        return None
+
+    def restore_latest_raw(self):
+        """Newest intact checkpoint as ``(leaves, manifest)`` — no
+        template (see :func:`load_raw`); None when nothing restorable."""
+        for s in reversed(self.all_steps()):
+            path = os.path.join(self.directory, f"ckpt_{s:010d}")
+            try:
+                return load_raw(path)
             except (IOError, ValueError):
                 continue
         return None

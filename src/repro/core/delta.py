@@ -50,7 +50,9 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import itertools
 import os
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -268,8 +270,28 @@ def _normalize_core(p_hi: jax.Array, p_lo: jax.Array, w: jax.Array,
     return oih, oil, ni, odh, odl, nd
 
 
+# donation-mismatch advisories are expected on rung-growth epochs (the
+# donated cins/cdel at rung r cannot alias outputs at the next rung) and
+# during prewarm's cross-rung walk; steady state the shapes match and the
+# donation holds — silence the per-signature lowering warning
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+
+# Committed-region donation is disabled whenever the persistent
+# compilation cache is active: executables deserialized from the on-disk
+# cache mis-handle the in-place aliasing (observed on the CPU mesh path
+# as corrupted committed regions — compaction-count assertion failures —
+# in an otherwise bit-identical run that passes when the same fold is
+# compiled fresh).  Donation only saves one committed-region generation
+# of memory per epoch, and the donation config is part of the executable
+# fingerprint, so the two variants never collide in the cache.
+_COMMIT_DONATE = () if os.environ.get(compilestats.ENV_VAR) else (1, 2)
+
+
 @functools.partial(jax.jit, static_argnames=("cins_cap", "cdel_cap",
-                                             "sharded", "use_kernel"))
+                                             "sharded", "use_kernel"),
+                   donate_argnums=_COMMIT_DONATE)
 def _commit_fold(base: IndexData, cins: IndexData, cdel: IndexData,
                  uins: IndexData, udel: IndexData, *, cins_cap: int,
                  cdel_cap: int, sharded: bool, use_kernel: bool = False):
@@ -282,6 +304,18 @@ def _commit_fold(base: IndexData, cins: IndexData, cdel: IndexData,
     (O(|Δ|·log|base|)), never scanned.  ``sharded`` vmaps the fold over the
     leading worker axis: ownership is by packed key, so every merge is
     shard-local and the distributed commit stays collective-free.
+
+    The committed inputs (``cins``/``cdel``) are DONATED: commit replaces
+    both with the fold outputs immediately, and steady state (no rung
+    growth) the output capacities equal the input capacities, so XLA
+    aliases the buffers in place of allocating a second committed-region
+    generation — the serving pipeline's epoch k commit never doubles
+    committed memory while batch k+1 is being prepared (DESIGN.md §9).
+    ``base`` passes through untouched and is never donated; the staged
+    delta regions stay undonated too (their pinned delta capacity can
+    never alias a committed-rung output).  Exception: with the persistent
+    compilation cache enabled donation is switched off entirely — see
+    ``_COMMIT_DONATE`` above.
     """
     compilestats.record("delta.commit_fold")
 
@@ -418,6 +452,53 @@ def _warm_call(fn, *args, **static):
     (all counts 0), so the execution itself costs microseconds."""
     z = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), args)
     jax.block_until_ready(fn(*z, **static))
+
+
+PREWARM_CROSS_CAP = 128
+
+
+def _rung_combos(ladders: Dict[str, List[int]],
+                 cap: int = PREWARM_CROSS_CAP) -> List[Dict[str, int]]:
+    """Committed-rung combinations a multi-relation plan can request.
+
+    Relations grow (and compact) independently, so a plan reading two
+    relations can see ANY pair of committed rungs — warming only the
+    same-rung diagonal (PR 6) left one compile per first-crossed mixed
+    combo.  This enumerates the reachable cross-product of each
+    relation's ladder; when the product exceeds ``cap`` (only possible
+    with many relations on deep ladders) it falls back to a documented
+    bounded subset — the same-rung diagonal plus every one-relation axis
+    sweep off the ladder floor — so prewarm stays O(sum of ladder
+    lengths) and only simultaneous multi-relation high-rung mixes can
+    still pay a first-crossing compile (DESIGN.md §8)."""
+    rels = sorted(ladders)
+    if not rels:
+        return []
+    total = 1
+    for rel in rels:
+        total *= max(len(ladders[rel]), 1)
+    if total <= cap:
+        return [dict(zip(rels, combo)) for combo in
+                itertools.product(*(ladders[rel] for rel in rels))]
+    combos: List[Dict[str, int]] = []
+    seen = set()
+
+    def add(combo):
+        key = tuple(sorted(combo.items()))
+        if key not in seen:
+            seen.add(key)
+            combos.append(combo)
+
+    depth = max(len(ladders[rel]) for rel in rels)
+    for i in range(depth):  # the diagonal, clamped per relation
+        add({rel: ladders[rel][min(i, len(ladders[rel]) - 1)]
+             for rel in rels})
+    for rel in rels:  # per-relation sweeps with the others on the floor
+        for r in ladders[rel]:
+            combo = {other: ladders[other][0] for other in rels}
+            combo[rel] = r
+            add(combo)
+    return combos
 
 
 @dataclasses.dataclass
@@ -688,6 +769,23 @@ class StoreStats:
     mirror_pulls: int = 0
     compile_events: int = 0
     prewarm_compiles: int = 0
+
+
+@dataclasses.dataclass
+class PreparedBatch:
+    """One update batch after :meth:`RegionStore.prepare` (stage A of a
+    pipelined epoch, DESIGN.md §9): validated, degenerate-masked, packed
+    and sentinel-padded entirely on the host.
+
+    ``rels`` maps relation -> the padded ``(hi, lo, weights)`` probe
+    arrays (device-resident stores only); ``raw`` keeps the checked
+    ``(rows, weights)`` per relation — the canonical bytes a write-ahead
+    log records and the legacy host store normalizes from.  ``was_dict``
+    preserves the edge-array sugar of :meth:`RegionStore.normalize`."""
+
+    rels: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    raw: Dict[str, Tuple[np.ndarray, np.ndarray]]
+    was_dict: bool
 
 
 @dataclasses.dataclass
@@ -1133,12 +1231,14 @@ class RegionStore:
         self._sync_compile_stats()
         return spent
 
-    def indices_sds_for(self, plan: Plan, rung: int,
+    def indices_sds_for(self, plan: Plan, rung,
                         update_batch: int) -> Indices:
         """ShapeDtypeStruct mirror of :meth:`indices_for` with every
-        committed region at ``rung`` and every uncommitted region at the
-        pinned delta capacity — the prototype the engines' dataflow steps
-        are AOT-lowered against (``GraphSession.prewarm``)."""
+        committed region at ``rung`` (an int, or a per-relation
+        ``{rel: rung}`` dict — relations cross rungs independently, see
+        :func:`_rung_combos`) and every uncommitted region at the pinned
+        delta capacity — the prototype the engines' dataflow steps are
+        AOT-lowered against (``GraphSession.prewarm``)."""
         P = self.pin_delta_marks(update_batch)
         out = {}
         for _id, rel, key_pos, ext_pos, version in plan.index_ids():
@@ -1149,8 +1249,9 @@ class RegionStore:
                     tuple(_sds_like(p) for p in vi.pos),
                     tuple(_sds_like(n) for n in vi.neg))
                 continue
+            r = rung[rel] if isinstance(rung, dict) else int(rung)
             base = _sds_like(reg.d_base)
-            com = _sds_like(reg.d_cins, rung)
+            com = _sds_like(reg.d_cins, r)
             delta = _sds_like(reg.d_uins if reg.d_uins is not None
                               else reg.d_cins, P)
             if version == "static":
@@ -1162,6 +1263,51 @@ class RegionStore:
         return out
 
     # ------------------------------------------------------------------
+    def prepare(self, updates, weights=None) -> "PreparedBatch":
+        """Stage A of an update epoch: validate, degenerate-mask, pack and
+        sentinel-pad one batch on the HOST — pure numpy, no jax call, no
+        device touch.  The returned :class:`PreparedBatch` feeds
+        :meth:`normalize_prepared` (stage B, the jitted probe), so a
+        serving pipeline can prepare batch k+1 on a prep thread while the
+        device is still committing batch k (DESIGN.md §9).
+
+        Accepts the same forms as :meth:`normalize` (bare edge arrays or a
+        per-relation dict) and raises the same validation errors."""
+        was_dict = isinstance(updates, dict)
+        if was_dict:
+            if weights is not None:
+                raise ValueError(
+                    "per-relation batches carry their own weights: pass "
+                    "{rel: (rows, weights)}, not a top-level weights "
+                    "argument")
+            items = {rel: self._split(rel, batch)
+                     for rel, batch in updates.items()}
+        else:
+            items = {"edge": (updates, weights)}
+        rels, raw = {}, {}
+        for rel, (rows, w) in items.items():
+            st = self._rel(rel)
+            rows, w = _check_batch(rel, rows, w, st.arity)
+            raw[rel] = (rows, w)
+            if self.device_resident:
+                rels[rel] = self._pad_host(rel, rows, w)
+        return PreparedBatch(rels=rels, raw=raw, was_dict=was_dict)
+
+    def normalize_prepared(self, prep: "PreparedBatch") -> Dict:
+        """Stage B of :meth:`prepare`: net the prepared batch against the
+        live relation state on device (one jitted probe per relation).
+        Always returns the per-relation ``{rel: (ins, dels)}`` dict —
+        :meth:`normalize` unwraps the edge sugar."""
+        self.stats.normalize_calls += 1
+        out = {}
+        for rel, (rows, w) in prep.raw.items():
+            if not self.device_resident:
+                out[rel] = self._normalize_host(rel, rows, w)
+            else:
+                out[rel] = self._normalize_device(rel, *prep.rels[rel])
+        self._sync_compile_stats()
+        return out
+
     def normalize(self, updates, weights=None):
         """Net out a batch against the live relation state.
 
@@ -1173,20 +1319,12 @@ class RegionStore:
 
         Device-resident: one jitted probe per relation against its packed
         live LSM — O(|Δ|·log|R|), no full scan, no mirror pull.
+        Internally ``prepare`` (host pack/pad) then ``normalize_prepared``
+        (device probe) — split callable separately for pipelining.
         """
-        self.stats.normalize_calls += 1
-        if isinstance(updates, dict):
-            if weights is not None:
-                raise ValueError(
-                    "per-relation batches carry their own weights: pass "
-                    "{rel: (rows, weights)}, not a top-level weights "
-                    "argument")
-            out = {rel: self._normalize_rel(rel, *self._split(rel, batch))
-                   for rel, batch in updates.items()}
-        else:
-            out = self._normalize_rel("edge", updates, weights)
-        self._sync_compile_stats()
-        return out
+        prep = self.prepare(updates, weights)
+        out = self.normalize_prepared(prep)
+        return out if prep.was_dict else out["edge"]
 
     def _split(self, rel: str, batch):
         """One relation's update entry: a bare row array, or (rows, w)."""
@@ -1198,15 +1336,14 @@ class RegionStore:
             return batch
         return batch, None
 
-    def _normalize_rel(self, rel: str, updates, weights
-                       ) -> Tuple[np.ndarray, np.ndarray]:
+    def _pad_host(self, rel: str, updates: np.ndarray, weights: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host half of the device normalize: degenerate rows (any repeated
+        vertex — the n-ary self-loop) and zero weights are masked to the
+        sentinel, rows packed to lex word pairs, all padded to the probe
+        rung.  Pure numpy (prep-thread safe)."""
         st = self._rel(rel)
-        updates, weights = _check_batch(rel, updates, weights, st.arity)
-        if not self.device_resident:
-            return self._normalize_host(rel, updates, weights)
         SENT = np.int64(csr.SENTINEL)
-        # degenerate rows (any repeated vertex — the n-ary self-loop) and
-        # zero weights are masked to the sentinel on the host: delta-sized
         valid = ~_degenerate_rows(updates) & (weights != 0)
         hi, lo = _pack_rows(updates, st.arity)
         hi = np.where(valid, hi, SENT)
@@ -1218,6 +1355,20 @@ class RegionStore:
         ph[:hi.shape[0]] = hi
         pl[:lo.shape[0]] = lo
         pw[:weights.shape[0]] = weights
+        return ph, pl, pw
+
+    def _normalize_rel(self, rel: str, updates, weights
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        st = self._rel(rel)
+        updates, weights = _check_batch(rel, updates, weights, st.arity)
+        if not self.device_resident:
+            return self._normalize_host(rel, updates, weights)
+        return self._normalize_device(rel,
+                                      *self._pad_host(rel, updates, weights))
+
+    def _normalize_device(self, rel: str, ph: np.ndarray, pl: np.ndarray,
+                          pw: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        st = self._rel(rel)
         dh, dl, dw = jnp.asarray(ph), jnp.asarray(pl), jnp.asarray(pw)
         with _device_scope():
             oih, oil, ni, odh, odl, nd = _normalize_core(
@@ -1570,6 +1721,164 @@ class RegionStore:
                 self._refresh_host_cache(st)
         self._maybe_compact()
 
+    # -- durability (DESIGN.md §9) -------------------------------------
+    SNAPSHOT_FORMAT = 1
+
+    @staticmethod
+    def _index_parts(idx: IndexData):
+        parts = [("key", idx.key), ("val", idx.val), ("n", idx.n)]
+        if idx.lo is not None:
+            parts.append(("lo", idx.lo))
+        return parts
+
+    def snapshot(self) -> Tuple[List[np.ndarray], dict]:
+        """Serialize the store's dynamic state to ``(leaves, meta)`` —
+        the leaves are host arrays in ``meta["names"]`` order (ready for
+        ``repro.checkpoint.save_pytree(leaves, ..., extra=meta)``), meta
+        is a JSON-safe dict.
+
+        Captured per relation: the live three-region LSM (sorted device
+        regions, composite ``lo`` words included) and its exact counts;
+        per non-derived projection: the base/cins/cdel regions and counts;
+        plus both Ratchet mark sets (so a restored store re-requests the
+        SAME buffer shapes — prewarmed executables stay hot) and the epoch
+        counters.  Sharded stores serialize per shard: every leaf keeps
+        its leading [w] worker axis.
+
+        Must be called at an epoch boundary (nothing staged); the staged
+        uncommitted regions are transient by design — a WAL records the
+        raw batches instead (``repro.serve.wal``)."""
+        if not self.device_resident:
+            raise NotImplementedError(
+                "snapshot() serializes the device-resident store; the "
+                "legacy host store is already plain numpy state")
+        if self._staged is not None:
+            raise RuntimeError(
+                "snapshot mid-epoch: commit (or drop) the staged batch "
+                "first — snapshots are epoch-boundary consistent")
+        leaves: List[np.ndarray] = []
+        names: List[str] = []
+
+        def emit(prefix, idx):
+            for suffix, arr in self._index_parts(idx):
+                names.append(f"{prefix}.{suffix}")
+                leaves.append(np.asarray(arr))
+
+        meta_rels = {}
+        for rel in sorted(self._rels):
+            st = self._rels[rel]
+            for region, idx in (("lb", st.lb), ("lc_ins", st.lc_ins),
+                                ("lc_del", st.lc_del)):
+                emit(f"rel/{rel}/{region}", idx)
+            meta_rels[rel] = {
+                "arity": st.arity,
+                "n_live": [np.asarray(n).tolist() for n in st.n_live]}
+        projs = []
+        for i, (pkey, reg) in enumerate(
+                sorted(self.projections.items(), key=lambda kv: repr(kv[0]))):
+            spec = {"rel": reg.rel, "key_pos": list(reg.key_pos),
+                    "ext_pos": int(reg.ext_pos),
+                    "rel_arity": int(reg.rel_arity),
+                    "narrow": bool(reg.narrow),
+                    "derived": bool(reg.derived)}
+            if not reg.derived:
+                for region in ("d_base", "d_cins", "d_cdel"):
+                    emit(f"proj/{i}/{region}", getattr(reg, region))
+                spec["n_base"] = np.asarray(reg.n_base).tolist()
+                spec["n_cins"] = np.asarray(reg.n_cins).tolist()
+                spec["n_cdel"] = np.asarray(reg.n_cdel).tolist()
+            projs.append(spec)
+        st_ = self.stats
+        meta = {
+            "format": self.SNAPSHOT_FORMAT,
+            "shard_w": int(self.shard_w),
+            "compact_ratio": float(self.compact_ratio),
+            "rels": meta_rels,
+            "projections": projs,
+            "ratchet": [[list(k), v] for k, v in
+                        sorted(self.ratchet.marks().items(),
+                               key=lambda kv: repr(kv[0]))],
+            "base_ratchet": [[list(k), v] for k, v in
+                             sorted(self.base_ratchet.marks().items(),
+                                    key=lambda kv: repr(kv[0]))],
+            "stats": {f: getattr(st_, f) for f in
+                      ("normalize_calls", "commit_calls", "compactions",
+                       "epochs", "live_compactions")},
+            "names": names,
+        }
+        return leaves, meta
+
+    def restore(self, leaves: List[np.ndarray], meta: dict) -> None:
+        """Rebuild this store's dynamic state from a :meth:`snapshot`,
+        in place — engines holding a reference re-resolve their regions
+        through ``indices_for`` each epoch, so they pick the restored
+        truth up without rebuilding.  The mesh width must match the
+        snapshot's (failover restores onto the same topology)."""
+        if meta.get("format") != self.SNAPSHOT_FORMAT:
+            raise ValueError(
+                f"unknown snapshot format {meta.get('format')!r}")
+        if int(meta["shard_w"]) != int(self.shard_w):
+            raise ValueError(
+                f"snapshot was taken on a shard_w={meta['shard_w']} store; "
+                f"this store has shard_w={self.shard_w} — restore onto the "
+                "same mesh width")
+        if not self.device_resident:
+            raise NotImplementedError(
+                "restore() targets the device-resident store")
+        by_name = dict(zip(meta["names"], leaves))
+        if len(by_name) != len(meta["names"]):
+            raise ValueError("snapshot leaves do not match meta['names']")
+
+        def pull(prefix) -> IndexData:
+            lo = by_name.get(f"{prefix}.lo")
+            return IndexData(jnp.asarray(by_name[f"{prefix}.key"]),
+                             jnp.asarray(by_name[f"{prefix}.val"]),
+                             jnp.asarray(by_name[f"{prefix}.n"]),
+                             None if lo is None else jnp.asarray(lo))
+
+        def nval(v):
+            arr = np.asarray(v, np.int64)
+            return arr if self.shard_w else int(arr)
+
+        # ratchet marks FIRST: the empty delta regions built below must
+        # land on the snapshot's pinned rungs, not re-derive fresh ones
+        for ratchet, recs in ((self.ratchet, meta["ratchet"]),
+                              (self.base_ratchet, meta["base_ratchet"])):
+            ratchet.reset()
+            for key, cap in recs:
+                ratchet.observe(tuple(key), int(cap))
+        self._rels = {}
+        for rel, rec in meta["rels"].items():
+            st = _RelLive(arity=int(rec["arity"]))
+            st.lb = pull(f"rel/{rel}/lb")
+            st.lc_ins = pull(f"rel/{rel}/lc_ins")
+            st.lc_del = pull(f"rel/{rel}/lc_del")
+            st.n_live = [nval(n) for n in rec["n_live"]]
+            st.mirror = None
+            self._rels[rel] = st
+        self.projections = {}
+        for i, spec in enumerate(meta["projections"]):
+            reg = _Regions(tuple(spec["key_pos"]), int(spec["ext_pos"]),
+                           rel=spec["rel"], rel_arity=int(spec["rel_arity"]),
+                           shard_w=self.shard_w, device_resident=True,
+                           narrow=bool(spec["narrow"]),
+                           derived=bool(spec["derived"]), _store=self)
+            if not reg.derived:
+                reg.d_base = pull(f"proj/{i}/d_base")
+                reg.d_cins = pull(f"proj/{i}/d_cins")
+                reg.d_cdel = pull(f"proj/{i}/d_cdel")
+                reg.n_base = nval(spec["n_base"])
+                reg.n_cins = nval(spec["n_cins"])
+                reg.n_cdel = nval(spec["n_cdel"])
+                empty = np.zeros((0, reg.arity), np.int32)
+                reg.set_uncommitted(empty, empty)
+            self.projections[(spec["rel"], tuple(spec["key_pos"]),
+                              int(spec["ext_pos"]))] = reg
+        for f, v in meta["stats"].items():
+            setattr(self.stats, f, int(v))
+        self._staged = None
+        self._sync_compile_stats()
+
 
 class DeltaBigJoin:
     """Incremental maintenance of one query over dynamic n-ary relations.
@@ -1649,11 +1958,14 @@ class DeltaBigJoin:
             wts = jax.ShapeDtypeStruct((Sc,), jnp.int32)
             valid = jax.ShapeDtypeStruct((Sc,), jnp.bool_)
             rels = {rel for _id, rel, *_ in plan.index_ids()}
-            ladder = sorted({r for rel in rels
-                             for r in self.store.committed_ladder(
-                                 rel, ub, horizon)})
-            for rung in ladder:
-                idx = self.store.indices_sds_for(plan, rung, ub)
+            # relations cross committed rungs independently, so warm the
+            # reachable rung CROSS-PRODUCT, not just the same-rung
+            # diagonal (bounded subset over PREWARM_CROSS_CAP combos —
+            # see _rung_combos / DESIGN.md §8)
+            ladders = {rel: self.store.committed_ladder(rel, ub, horizon)
+                       for rel in rels}
+            for combo in _rung_combos(ladders):
+                idx = self.store.indices_sds_for(plan, combo, ub)
                 _warm_call(seed_step, state_sds, idx, pfx, wts, valid)
                 _warm_call(step, state_sds, idx)
         return compilestats.since(snap)

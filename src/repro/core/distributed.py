@@ -881,10 +881,11 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
             per = -(-ub // self.w)
             chunk = self.store.ratchet.capacity(("seed", width), per)
             rels = {rel for _id, rel, *_ in plan.index_ids()}
-            ladder = sorted({r for rel in rels
-                             for r in self.store.committed_ladder(
-                                 rel, ub, horizon)})
-            for rung in ladder:
-                prog.warm(self.store.indices_sds_for(plan, rung, ub),
+            # reachable rung cross-product, not just the same-rung
+            # diagonal — relations grow independently (delta._rung_combos)
+            ladders = {rel: self.store.committed_ladder(rel, ub, horizon)
+                       for rel in rels}
+            for combo in _delta._rung_combos(ladders):
+                prog.warm(self.store.indices_sds_for(plan, combo, ub),
                           chunk, width)
         return compilestats.since(snap)

@@ -32,30 +32,52 @@ import numpy as np
 
 
 def serve_stream(args):
-    from repro.api import Graph, GraphSession, compilestats, oracle_count
+    """Single-tenant streaming monitor: a thin wrapper over the serving
+    pool (DESIGN.md §9) — one tenant, coalesce=1, synchronous
+    submit→result per logical epoch, so the printed per-epoch numbers mean
+    exactly what the bespoke driver's used to.  The prep/apply pipeline,
+    admission prewarm and (``--durable-dir``) WAL+snapshot durability all
+    come from :class:`repro.serve.SessionPool` instead of bespoke code."""
+    from repro.api import Graph, compilestats, oracle_count
     from repro.data.synthetic import EdgeUpdateStream, rmat_graph
+    from repro.serve import SessionPool
 
     g = Graph.from_edges(rmat_graph(args.scale, args.edge_factor,
                                     seed=args.seed))
-    session = GraphSession(g.edges, local=args.local, balance=args.balance,
-                           batch=args.bprime,
-                           out_capacity=args.out_capacity,
-                           update_batch=args.batch_size)
     names = [n.strip() for n in args.query.split(",") if n.strip()]
-    handles = [session.register(n) for n in names]
     # queries over the materialized ``tri`` relation (e.g. 4-clique-tri,
     # §5.4): a standing triangle query on the SAME session feeds the tri
     # relation — each logical epoch is then two session updates, edge batch
-    # first, the resulting signed triangle delta second
-    needs_tri = any(atom.rel == "tri"
-                    for h in handles for atom in h.query.atoms)
-    tri0 = None
-    if needs_tri:
-        feeder = session.register("triangle")
-        tri0, _ = feeder.enumerate()
-        session.add_relation("tri", tri0)
-        if feeder not in handles:
-            handles = [feeder] + handles
+    # first, the resulting signed triangle delta second.  Registration and
+    # tri seeding run inside the pool's admission ``setup`` hook so the
+    # admission prewarm covers every standing query.
+    state = {}
+
+    def setup(session):
+        handles = [session.register(n) for n in names]
+        needs_tri = any(atom.rel == "tri"
+                        for h in handles for atom in h.query.atoms)
+        tri0 = None
+        if needs_tri:
+            feeder = session.register("triangle")
+            tri0, _ = feeder.enumerate()
+            session.add_relation("tri", tri0)
+            if feeder not in handles:
+                handles = [feeder] + handles
+        state.update(handles=handles, needs_tri=needs_tri, tri0=tri0)
+
+    pool = SessionPool(local=args.local, balance=args.balance,
+                       update_batch=args.batch_size, prewarm=args.prewarm,
+                       horizon=args.epochs * args.batch_size,
+                       durable_dir=args.durable_dir,
+                       snapshot_every=args.snapshot_every)
+    t0 = time.time()
+    tenant = pool.admit("stream", g.edges, setup=setup, coalesce=1,
+                        batch=args.bprime, out_capacity=args.out_capacity)
+    t_admit = time.time() - t0
+    session = tenant.session
+    handles, needs_tri, tri0 = \
+        state["handles"], state["needs_tri"], state["tri0"]
     mode = "host-local" if session.local else (
         f"{session.w}-worker mesh" + (" (balanced)" if args.balance else ""))
     stream = EdgeUpdateStream(g.num_vertices, args.batch_size,
@@ -67,13 +89,15 @@ def serve_stream(args):
           + (", tri relation fed by the standing triangle query)"
          if needs_tri else ")"))
     if args.prewarm:
-        t0 = time.time()
-        n = session.prewarm(horizon=args.epochs * args.batch_size)
         print(f"prewarm: walked the AOT capacity ladder in "
-              f"{time.time()-t0:.1f}s ({n} compile events"
+              f"{t_admit:.1f}s ({tenant.stats.prewarm_compiles} compile "
+              "events"
               + (", persistent cache "
                  f"{compilestats.cache_dir()}" if compilestats.cache_dir()
                  else "") + ")")
+    if args.durable_dir and session.epoch > 0:
+        print(f"recovered epoch {session.epoch} from {args.durable_dir} "
+              f"({tenant.stats.replayed} WAL epochs replayed)")
 
     times = []
     compiles = []
@@ -87,7 +111,7 @@ def serve_stream(args):
     for step in range(args.epochs):
         upd, wts = stream.batch_at(step, live=live)
         t0 = time.time()
-        res = session.update(upd, wts)
+        res = tenant.submit(upd, wts).result()
         updates_sent += 1
         res2 = None
         if needs_tri:
@@ -96,7 +120,7 @@ def serve_stream(args):
                 np.zeros((0, 3), np.int32)
             t_w = td.weights if td.weights is not None else \
                 np.zeros(0, np.int32)
-            res2 = session.update({"tri": (t_upd, t_w)})
+            res2 = tenant.submit({"tri": (t_upd, t_w)}).result()
             updates_sent += 1
             noops += int(res2.is_noop)
         dt = max(time.time() - t0, 1e-9)  # no-op epochs can be ~0s
@@ -161,7 +185,96 @@ def serve_stream(args):
                 f"epoch contract violated: {st.commit_calls} commits / "
                 f"{st.normalize_calls} normalizes for {updates_sent} "
                 f"updates ({noops} no-ops)")
+    pool.close()
     return sum(h.net_change for h in handles)
+
+
+def serve_concurrent(args):
+    """N-tenant concurrent serving demo: one :class:`SessionPool`, one
+    mesh, ``--concurrent`` tenants each monitoring its own graph + update
+    stream from its own client thread.  Prints the pool's aggregate stats
+    (latency percentiles, coalescing, backpressure sheds, snapshot/replay
+    counters, serving compile budget); ``--verify`` recomputes every
+    tenant's maintained total from scratch at the end."""
+    import threading
+
+    from repro.api import oracle_count
+    from repro.data.synthetic import EdgeUpdateStream, rmat_graph
+    from repro.serve import SessionPool
+
+    names = [n.strip() for n in args.query.split(",") if n.strip()]
+    # admission prewarm is non-optional here: the multi-tenant serving
+    # contract (DESIGN.md §9) is zero serving-path compiles, which
+    # --verify asserts below
+    pool = SessionPool(local=args.local, balance=args.balance,
+                       update_batch=args.batch_size, prewarm=True,
+                       horizon=args.epochs * args.batch_size,
+                       durable_dir=args.durable_dir,
+                       snapshot_every=args.snapshot_every)
+    graphs, tenants = {}, {}
+    t0 = time.time()
+    for i in range(args.concurrent):
+        name = f"tenant{i}"
+        graphs[name] = rmat_graph(args.scale, args.edge_factor,
+                                  seed=args.seed + i)
+        tenants[name] = pool.admit(
+            name, graphs[name], queries=names, coalesce=args.coalesce,
+            max_queue=args.max_queue, batch=args.bprime,
+            out_capacity=args.out_capacity)
+    mode = "host-local" if pool.local else "mesh"
+    print(f"admitted {len(tenants)} tenants ({', '.join(names)} each) on "
+          f"one {mode} pool in {time.time()-t0:.1f}s; {args.epochs} epochs "
+          f"x {args.batch_size} updates per tenant")
+
+    # materialize each tenant's live mirror + epoch on THIS thread, before
+    # any
+    # client submits: session.edges runs a jitted device fold, and all
+    # device work must stay off the client threads once the pool's apply
+    # dispatcher is live (DESIGN.md §9)
+    live0 = {name: tenants[name].session.edges for name in tenants}
+    starts = {name: tenants[name].session.epoch for name in tenants}
+
+    def client(name):
+        # balanced stream (insert_frac 0.5): live set stays within its
+        # pow2 base rung, so the zero-compile serving budget holds
+        stream = EdgeUpdateStream(
+            1 << args.scale, args.batch_size, insert_frac=args.insert_frac,
+            skew=args.stream_skew,
+            seed=args.seed + 1 + len(tenants) + int(name[6:]))
+        live = live0[name]
+        start = starts[name]  # >0 after durable recovery
+        for step in range(start, args.epochs):
+            upd, wts = stream.batch_at(step, live=live)
+            ticket = tenants[name].submit(upd, wts)
+            if ticket is None:
+                continue  # shed by backpressure
+            live = ticket.result().advance(live)
+
+    threads = [threading.Thread(target=client, args=(n,), daemon=True)
+               for n in tenants]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    pool.drain()
+    stats = pool.stats()
+    print(stats.render())
+    if args.verify:
+        for name, handle in tenants.items():
+            for h in handle.session.handles.values():
+                ref = oracle_count(h.query, {"edge": handle.session.edges})
+                ref0 = oracle_count(h.query, {"edge": graphs[name]})
+                if h.net_change != ref - ref0:
+                    raise RuntimeError(
+                        f"{name}/{h.name}: maintained total "
+                        f"{h.net_change} != recompute diff {ref - ref0}")
+            print(f"verified {name}: maintained totals == recompute ✓")
+        if stats.serve_compiles:
+            raise RuntimeError(
+                f"{stats.serve_compiles} serving-path compile events "
+                "(admission prewarm must cover the whole stream)")
+    pool.close()
+    return stats
 
 
 def serve_lm(args):
@@ -251,8 +364,26 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="check the maintained total against full "
                     "recomputation at the end (stream mode)")
+    # concurrent serving (DESIGN.md §9): N tenants on one SessionPool
+    ap.add_argument("--concurrent", type=int, default=0, metavar="N",
+                    help="serve N tenants concurrently on one pool "
+                    "(implies --stream semantics per tenant)")
+    ap.add_argument("--coalesce", type=int, default=8,
+                    help="max queued batches folded into one device epoch "
+                    "per tenant (concurrent mode)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="per-tenant ingest queue bound — full queues "
+                    "backpressure their own client only")
+    ap.add_argument("--durable-dir", default=None,
+                    help="WAL + snapshot directory: crash-killed serves "
+                    "restore the last snapshot and replay the log "
+                    "bit-exactly on restart")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="snapshot cadence in epochs (with --durable-dir)")
     args = ap.parse_args(argv)
 
+    if args.concurrent:
+        return serve_concurrent(args)
     if args.stream:
         return serve_stream(args)
     if not args.arch:

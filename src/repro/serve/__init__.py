@@ -1,0 +1,19 @@
+"""Concurrent serving subsystem (DESIGN.md §9).
+
+Multi-tenant sessions, pipelined epochs and snapshot/WAL failover on one
+device mesh — the serving layer over :mod:`repro.api`:
+
+- :class:`SessionPool` / :class:`TenantHandle` — N tenants, one mesh,
+  bounded ingest queues with backpressure, adaptive batch coalescing,
+  prep/apply pipeline, admission prewarm;
+- :class:`WriteAheadLog` / :class:`Durability` — raw-batch WAL +
+  snapshot cadence; bit-exact restore-and-replay recovery;
+- :class:`ServeStats` / :class:`TenantStats` — queue depth, latency
+  percentiles, compile events, snapshot/replay counters.
+"""
+from repro.serve.pool import SessionPool, TenantHandle, Ticket
+from repro.serve.stats import ServeStats, TenantStats, percentiles
+from repro.serve.wal import Durability, WriteAheadLog
+
+__all__ = ["SessionPool", "TenantHandle", "Ticket", "ServeStats",
+           "TenantStats", "percentiles", "Durability", "WriteAheadLog"]

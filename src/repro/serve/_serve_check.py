@@ -1,0 +1,298 @@
+"""Concurrent-serving differential harness (DESIGN.md §9).
+
+Run as a subprocess so the XLA host-platform device-count override applies
+before jax initializes (tests and benches must keep seeing 1 device):
+
+    # Mode A: N tenants through one SessionPool vs prewarmed isolated
+    # oracle sessions — per-epoch deltas bit-exact, serving compiles 0
+    python -m repro.serve._serve_check --tenants 4 --workers 4 --epochs 20
+
+    # Mode B: kill/resume failover — an uninterrupted oracle RUN, a victim
+    # run killed mid-stream (os._exit right after a WAL append), and a
+    # resume run that recovers snapshot+WAL and finishes the stream; the
+    # parent diffs per-epoch delta digests and final state digests
+    python -m repro.serve._serve_check --supervise --tenants 4 --workers 4 \
+        --epochs 20 --kill-at 13
+
+Every tenant gets its OWN initial graph and update stream (derived from
+``--seed`` + tenant index, so a resume child regenerates them exactly);
+batches are drawn with ``insert_frac=0.5`` so the live set stays within its
+pow2 base rung — the zero-compile serving budget holds for the whole run
+(base-region outgrowth is the documented §8 amortized-rare exception, not a
+serving property).  Prints one JSON line; exit code 0 iff every check held.
+"""
+import os
+import sys
+
+
+def _digest(obj) -> str:
+    import hashlib
+    return hashlib.sha1(repr(obj).encode()).hexdigest()[:16]
+
+
+def worker(args) -> int:
+    """One serving run (Mode A, or one leg of Mode B).  Drives every
+    tenant synchronously — submit one batch per tenant per step, wait for
+    all tickets — so per-epoch deltas are attributable and streams can be
+    re-derived from the live set after recovery."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.workers}")
+
+    import json
+    import time
+
+    import numpy as np
+
+    from repro.api import GraphSession, canon_signed as canon
+    from repro.data.synthetic import EdgeUpdateStream, uniform_graph
+    from repro.serve import SessionPool
+
+    t_start = time.time()
+
+    def note(msg):
+        # stage timings on stderr: CI logs show where a slow run spends
+        # its wall clock (cold XLA ladder walks dominate without
+        # REPRO_COMPILE_CACHE)
+        sys.stderr.write(f"[serve_check +{time.time() - t_start:7.1f}s] "
+                         f"{msg}\n")
+        sys.stderr.flush()
+
+    names = [f"t{i}" for i in range(args.tenants)]
+    graphs = {n: uniform_graph(args.nv, args.ne, args.seed + i)
+              for i, n in enumerate(names)}
+    streams = {n: EdgeUpdateStream(args.nv, args.batch_size,
+                                   insert_frac=0.5, seed=args.seed + 100 + i)
+               for i, n in enumerate(names)}
+
+    # In-process oracles FIRST (Mode A only): prewarming them here both
+    # keeps the differential honest (identical shapes -> the pool's later
+    # admissions hit the jit cache) and keeps oracle traces out of the
+    # pool's serving compile budget.
+    oracles = {}
+    if args.oracle:
+        for n in names:
+            o = GraphSession(graphs[n], local=args.local,
+                             update_batch=args.update_batch)
+            o.register(args.query)
+            spent = o.prewarm(horizon=args.update_batch * (args.epochs + 2))
+            note(f"oracle {n}: {len(graphs[n])} edges, "
+                 f"prewarm {spent} compiles")
+            oracles[n] = o
+
+    kill_box = {}
+
+    def on_logged(name, epoch):
+        # fires right AFTER the WAL append, BEFORE the device apply: the
+        # harshest crash point — the record must replay as the apply
+        if args.kill_at and name == args.kill_tenant and \
+                epoch == args.kill_at:
+            sys.stdout.flush()
+            os._exit(9)
+        kill_box[name] = epoch
+
+    pool = SessionPool(
+        local=args.local, update_batch=args.update_batch,
+        pipeline=not args.pump, durable_dir=args.durable_dir,
+        snapshot_every=args.snapshot_every, fsync=not args.no_fsync,
+        on_logged=on_logged if args.durable_dir else None,
+        horizon=args.update_batch * (args.epochs + 2))
+    handles, starts, lives = {}, {}, {}
+    for n in names:
+        handles[n] = pool.admit(n, graphs[n], queries=(args.query,),
+                                coalesce=1, update_batch=args.update_batch)
+        starts[n] = handles[n].session.epoch  # >0 after recovery
+        lives[n] = np.asarray(handles[n].session.edges)
+        note(f"admitted {n}: start epoch {starts[n]}, "
+             f"prewarm {handles[n].stats.prewarm_compiles} compiles, "
+             f"replayed {handles[n].stats.replayed}")
+
+    digests = {n: {} for n in names}
+    exact = True
+    t0 = time.time()
+    for step in range(args.epochs):
+        tickets = {}
+        for n in names:
+            if step < starts[n]:
+                continue  # this tenant's recovery already covered it
+            upd, w = streams[n].batch_at(step, live=lives[n])
+            tickets[n] = (handles[n].submit(upd, w), upd, w)
+        if args.pump:
+            pool.pump()
+        served = {}
+        for n, (ticket, upd, w) in tickets.items():
+            res = ticket.result(timeout=600)
+            lives[n] = res.advance(lives[n])
+            d = res.deltas[args.query]
+            served[n] = canon(d.tuples, d.weights)
+            digests[n][str(res.epoch)] = _digest(served[n])
+        # every ticket above has resolved, so the pool's apply thread is
+        # idle — only NOW is it safe to run the oracles' mesh programs on
+        # this thread.  Two host threads dispatching shard_map programs
+        # onto the same devices interleave their collectives' rendezvous
+        # and deadlock (the pool's single apply thread is what makes the
+        # serving path itself safe; see DESIGN.md §9).
+        for n, (_ticket, upd, w) in tickets.items():
+            if n in oracles:
+                ores = oracles[n].update(upd, w)
+                od = ores.deltas[args.query]
+                exact = exact and (
+                    served[n] == canon(od.tuples, od.weights))
+    pool.drain()
+    note(f"served {args.epochs} steps x {args.tenants} tenants")
+    stats = pool.stats()
+    final = {}
+    for n in names:
+        s = handles[n].session
+        final[n] = {
+            "epoch": int(s.epoch),
+            "num_edges": int(s.num_edges),
+            "edges": _digest(np.asarray(s.edges).tobytes()),
+            "net_change": int(s[args.query].net_change)}
+        if n in oracles:
+            o = oracles[n]
+            exact = exact and (
+                final[n]["edges"] == _digest(np.asarray(o.edges).tobytes())
+                and final[n]["net_change"]
+                == int(o[args.query].net_change))
+    pool.close()
+    agg = stats.aggregate()
+    out = {
+        "mode": "worker",
+        "workers": args.workers, "local": bool(args.local),
+        "tenants": args.tenants, "epochs": args.epochs,
+        "starts": {n: int(s) for n, s in starts.items()},
+        "oracle_exact": bool(exact) if args.oracle else None,
+        "prewarm_compiles": agg["prewarm_compiles"],
+        "serve_compiles": agg["serve_compiles"],
+        "snapshots": agg["snapshots"],
+        "replayed": agg["replayed"],
+        "elapsed_s": round(time.time() - t0, 2),
+        "digests": digests,
+        "final": final,
+    }
+    print(json.dumps(out))
+    ok = (exact if args.oracle else True) and agg["serve_compiles"] == 0
+    return 0 if ok else 1
+
+
+def supervise(args) -> int:
+    """Mode B parent: oracle run, victim run (killed mid-stream), resume
+    run — then diff digests.  Spawns children of THIS module so the XLA
+    device-count override binds before jax loads in each."""
+    import json
+    import shutil
+    import subprocess
+    import tempfile
+
+    import time
+
+    def run(extra, expect=0):
+        cmd = [sys.executable, "-m", "repro.serve._serve_check",
+               "--tenants", str(args.tenants),
+               "--workers", str(args.workers),
+               "--epochs", str(args.epochs),
+               "--nv", str(args.nv), "--ne", str(args.ne),
+               "--batch-size", str(args.batch_size),
+               "--update-batch", str(args.update_batch),
+               "--seed", str(args.seed), "--query", args.query,
+               "--snapshot-every", str(args.snapshot_every),
+               "--no-oracle", "--no-fsync"] + \
+            (["--local"] if args.local else []) + extra
+        env = dict(os.environ)
+        if expect != 0:
+            # the victim child dies by os._exit mid-stream: it must NOT
+            # write the shared persistent compile cache — a kill during a
+            # cache write leaves a torn entry that poisons every later
+            # process reading it (observed as compaction-count assertion
+            # failures and segfaults on deserialized executables)
+            env.pop("REPRO_COMPILE_CACHE", None)
+        sys.stderr.write(f"[supervise] child {extra or ['oracle']}...\n")
+        sys.stderr.flush()
+        t0 = time.time()
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=1800, env=env)
+        sys.stderr.write(f"[supervise] child {extra or ['oracle']} exited "
+                         f"{p.returncode} in {time.time() - t0:.0f}s\n")
+        sys.stderr.flush()
+        if p.returncode != expect:
+            sys.stderr.write(p.stdout + p.stderr)
+            raise SystemExit(
+                f"child {extra} exited {p.returncode}, wanted {expect}")
+        line = p.stdout.strip().splitlines()
+        return json.loads(line[-1]) if line else None
+
+    tmp = tempfile.mkdtemp(prefix="serve_check_")
+    try:
+        oracle = run([])  # uninterrupted, no durability: ground truth
+        victim_dir = os.path.join(tmp, "victim")
+        kill_tenant = f"t{args.tenants // 2}"
+        run(["--durable-dir", victim_dir, "--kill-at", str(args.kill_at),
+             "--kill-tenant", kill_tenant], expect=9)
+        resumed = run(["--durable-dir", victim_dir])
+
+        final_exact = oracle["final"] == resumed["final"]
+        # every post-recovery epoch the resume run re-served must produce
+        # the oracle's exact signed delta
+        tail_exact, compared = True, 0
+        for n, per_epoch in resumed["digests"].items():
+            for epoch, dg in per_epoch.items():
+                compared += 1
+                tail_exact = tail_exact and \
+                    oracle["digests"][n].get(epoch) == dg
+        recovered = any(s > 0 for s in resumed["starts"].values())
+        compiles_ok = (oracle["serve_compiles"] == 0
+                       and resumed["serve_compiles"] == 0)
+        ok = final_exact and tail_exact and recovered and compiles_ok \
+            and compared > 0
+        print(json.dumps({
+            "mode": "supervise",
+            "workers": args.workers, "local": bool(args.local),
+            "tenants": args.tenants, "epochs": args.epochs,
+            "kill_at": args.kill_at, "kill_tenant": kill_tenant,
+            "resume_starts": resumed["starts"],
+            "replayed": resumed["replayed"],
+            "final_exact": bool(final_exact),
+            "tail_exact": bool(tail_exact), "tail_compared": compared,
+            "serve_compiles": [oracle["serve_compiles"],
+                               resumed["serve_compiles"]],
+            "all_exact": bool(ok)}))
+        return 0 if ok else 1
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--supervise", action="store_true",
+                    help="kill/resume failover differential (Mode B)")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--local", action="store_true",
+                    help="host-local sessions instead of the mesh")
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--nv", type=int, default=24)
+    ap.add_argument("--ne", type=int, default=160)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--update-batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--query", default="triangle")
+    ap.add_argument("--durable-dir", default=None)
+    ap.add_argument("--snapshot-every", type=int, default=4)
+    ap.add_argument("--no-fsync", action="store_true")
+    ap.add_argument("--no-oracle", dest="oracle", action="store_false")
+    ap.add_argument("--pump", action="store_true",
+                    help="synchronous pump instead of pipeline threads")
+    ap.add_argument("--kill-at", type=int, default=0,
+                    help="os._exit(9) when --kill-tenant logs this epoch")
+    ap.add_argument("--kill-tenant", default="t0")
+    args = ap.parse_args(argv)
+    if args.supervise:
+        return supervise(args)
+    return worker(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

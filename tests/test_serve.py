@@ -1,0 +1,411 @@
+"""Serving subsystem tests (DESIGN.md §9): snapshot/restore round-trips,
+WAL durability, SessionPool multi-tenant exactness, backpressure, and the
+kill/replay failover differential (subprocess, 4-worker mesh variants ride
+``repro.serve._serve_check``)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import GraphSession, canon_signed as canon
+from repro.core.delta import RegionStore
+from repro.data.synthetic import EdgeUpdateStream, uniform_graph
+from repro.serve import Durability, SessionPool, WriteAheadLog, percentiles
+
+
+def _drive(store, stream, steps, start=0, live=None):
+    live = store.edges if live is None else live
+    for step in range(start, start + steps):
+        upd, w = stream.batch_at(step, live=live)
+        ins, dels = store.normalize(upd, w)
+        if ins.size or dels.size:
+            store.begin_epoch(ins, dels)
+            store.commit(ins, dels)
+        live = store.edges
+    return live
+
+
+# -- WAL ----------------------------------------------------------------
+
+
+def test_wal_roundtrip_truncate_torn(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync=False)
+    rng = np.random.default_rng(0)
+    recs = {}
+    for epoch in range(1, 6):
+        rows = rng.integers(0, 50, (8, 2)).astype(np.int32)
+        w = rng.choice([-1, 1], 8).astype(np.int32)
+        recs[epoch] = (rows, w)
+        wal.append(epoch, {"edge": (rows, w)})
+
+    replayed = list(wal.replay())
+    assert [e for e, _ in replayed] == [1, 2, 3, 4, 5]
+    for epoch, batches in replayed:
+        rows, w = recs[epoch]
+        assert np.array_equal(batches["edge"][0], rows)
+        assert np.array_equal(batches["edge"][1], w)
+
+    # truncation drops the snapshotted prefix, keeps the tail byte-exact
+    wal.truncate_through(3)
+    assert [e for e, _ in wal.replay()] == [4, 5]
+    assert wal.num_records() == 2
+
+    # a torn tail (crash mid-append) silently ends replay at the tear
+    wal.close()
+    with open(path, "ab") as f:
+        f.write(b'{"b": "{\\"e\\": 6')  # half-written record
+    wal2 = WriteAheadLog(path, fsync=False)
+    assert [e for e, _ in wal2.replay()] == [4, 5]
+    # a corrupt CRC also stops replay (and hides later records)
+    wal2.close()
+
+
+# -- RegionStore snapshot/restore ---------------------------------------
+
+
+@pytest.mark.parametrize("compact_ratio", [0.5, 0.05])
+def test_store_snapshot_restore_roundtrip(compact_ratio):
+    """Round-trip mid-stream — with ``compact_ratio=0.05`` several
+    compactions have happened before the snapshot, so base regions carry
+    rewritten capacities and committed marks were reset."""
+    edges = uniform_graph(40, 300, seed=1)
+    store = RegionStore(edges, compact_ratio=compact_ratio)
+    store.ensure("edge", (0,), 1)
+    store.ensure("edge", (1,), 0)
+    stream = EdgeUpdateStream(40, 24, insert_frac=0.5, seed=2)
+    _drive(store, stream, 8)
+    leaves, meta = store.snapshot()
+    assert json.loads(json.dumps(meta)) == meta  # checkpoint-safe meta
+
+    twin = RegionStore(edges, compact_ratio=compact_ratio)
+    twin.ensure("edge", (0,), 1)
+    twin.ensure("edge", (1,), 0)
+    twin.restore(leaves, meta)
+    assert np.array_equal(twin.edges, store.edges)
+    assert twin.num_edges == store.num_edges
+
+    # the restored store must CONTINUE bit-exactly, not just read back
+    live_a = _drive(store, stream, 4, start=8)
+    live_b = _drive(twin, stream, 4, start=8)
+    assert np.array_equal(live_a, live_b)
+
+
+def test_store_snapshot_requires_commit_boundary():
+    edges = uniform_graph(30, 120, seed=3)
+    store = RegionStore(edges)
+    store.ensure("edge", (0,), 1)
+    ins, dels = store.normalize(
+        np.array([[1, 2], [3, 4]], np.int32), np.array([1, 1], np.int32))
+    store.begin_epoch(ins, dels)
+    with pytest.raises(RuntimeError):
+        store.snapshot()  # uncommitted epoch staged
+    store.commit(ins, dels)
+    store.snapshot()
+
+
+def test_session_snapshot_restore_nary_composite():
+    """Session round-trip with a ternary relation + composite-key plans
+    (4-clique-tri reads tri(a,b,c)): regions, ratchet marks, handle
+    net_change and the epoch counter all survive, and the restored session
+    serves bit-exact deltas afterwards."""
+    edges = uniform_graph(20, 110, seed=4)
+    sess = GraphSession(edges, local=True, update_batch=32)
+    tri = sess.register("triangle")
+    tri0, _ = tri.enumerate()
+    sess.add_relation("tri", tri0)
+    c4t = sess.register("4-clique-tri")
+    stream = EdgeUpdateStream(20, 12, insert_frac=0.5, seed=5)
+    live = sess.edges
+    for step in range(4):
+        upd, w = stream.batch_at(step, live=live)
+        res = sess.update(upd, w)
+        td = res.deltas["triangle"]
+        t_upd = td.tuples if td.tuples is not None else \
+            np.zeros((0, 3), np.int32)
+        t_w = td.weights if td.weights is not None else \
+            np.zeros(0, np.int32)
+        sess.update({"tri": (t_upd, t_w)})
+        live = res.advance(live)
+
+    leaves, meta = sess.snapshot()
+    fresh = GraphSession(edges, local=True, update_batch=32)
+    fresh.restore(leaves, meta)
+    assert fresh.epoch == sess.epoch
+    assert np.array_equal(fresh.edges, sess.edges)
+    assert np.array_equal(fresh.relation("tri"), sess.relation("tri"))
+    assert set(fresh.handles) == {"triangle", "4-clique-tri"}
+    assert fresh["4-clique-tri"].net_change == c4t.net_change
+
+    # continue both sessions in lockstep: every delta must stay bit-exact
+    for step in range(4, 7):
+        upd, w = stream.batch_at(step, live=live)
+        ra, rb = sess.update(upd, w), fresh.update(upd, w)
+        for name in ("triangle", "4-clique-tri"):
+            da, db = ra.deltas[name], rb.deltas[name]
+            assert canon(da.tuples, da.weights) == \
+                canon(db.tuples, db.weights)
+        live = ra.advance(live)
+    assert np.array_equal(fresh.edges, sess.edges)
+
+
+def test_store_restore_rejects_mismatched_shape():
+    edges = uniform_graph(30, 120, seed=6)
+    sess = GraphSession(edges, local=True, update_batch=32)
+    sess.register("triangle")
+    leaves, meta = sess.snapshot()
+    meta2 = json.loads(json.dumps(meta))
+    meta2["session"]["w"] = 4
+    with pytest.raises(ValueError):
+        GraphSession(edges, local=True).restore(leaves, meta2)
+
+
+# -- Durability: snapshot cadence + WAL replay --------------------------
+
+
+def test_durability_recover_replays_wal(tmp_path):
+    """Snapshot every 3 epochs, run 8: recovery = snapshot(6) + replay of
+    epochs 7..8 from the WAL, landing bit-exact on the oracle state —
+    including a record that was logged but never applied."""
+    edges = uniform_graph(30, 150, seed=7)
+    stream = EdgeUpdateStream(30, 16, insert_frac=0.5, seed=8)
+
+    oracle = GraphSession(edges, local=True, update_batch=32)
+    oracle.register("triangle")
+    sess = GraphSession(edges, local=True, update_batch=32)
+    sess.register("triangle")
+    dur = Durability(str(tmp_path / "t0"), sess, snapshot_every=3,
+                     fsync=False)
+    live = oracle.edges
+    for step in range(8):
+        upd, w = stream.batch_at(step, live=live)
+        res = oracle.update(upd, w)
+        dur.log({"edge": (upd, w)})
+        sess.update(upd, w)
+        dur.maybe_snapshot()
+        live = res.advance(live)
+    assert dur.snapshots == 2  # epochs 3 and 6
+    assert dur.wal.num_records() == 2  # 7, 8 survive truncation
+    # epoch 9 is logged but the worker "dies" before applying it
+    upd9, w9 = stream.batch_at(8, live=live)
+    dur.log({"edge": (upd9, w9)})
+    oracle.update(upd9, w9)
+
+    fresh = GraphSession(edges, local=True, update_batch=32)
+    fresh.register("triangle")
+    dur2 = Durability(str(tmp_path / "t0"), fresh, snapshot_every=3,
+                      fsync=False)
+    assert dur2.recover()
+    assert dur2.replayed == 3  # 7, 8 and the never-applied 9
+    assert fresh.epoch == 9
+    assert np.array_equal(fresh.edges, oracle.edges)
+    assert fresh["triangle"].net_change == oracle["triangle"].net_change
+
+
+# -- SessionPool --------------------------------------------------------
+
+
+def test_pool_multi_tenant_bitexact():
+    """Two tenants with different graphs/streams through one pipelined
+    pool: every epoch's signed delta and the final state match isolated
+    oracle sessions exactly."""
+    graphs = {n: uniform_graph(24, 160, seed=i)
+              for i, n in enumerate(["a", "b"])}
+    streams = {n: EdgeUpdateStream(24, 16, insert_frac=0.5, seed=20 + i)
+               for i, n in enumerate(["a", "b"])}
+    oracles = {}
+    for n, g in graphs.items():
+        o = GraphSession(g, local=True, update_batch=64)
+        o.register("triangle")
+        oracles[n] = o
+    with SessionPool(local=True, update_batch=64, prewarm=False) as pool:
+        handles = {n: pool.admit(n, g, queries=("triangle",), coalesce=1)
+                   for n, g in graphs.items()}
+        lives = {n: np.asarray(h.session.edges)
+                 for n, h in handles.items()}
+        for step in range(6):
+            tickets = {}
+            for n in graphs:
+                upd, w = streams[n].batch_at(step, live=lives[n])
+                tickets[n] = (handles[n].submit(upd, w), upd, w)
+            for n, (ticket, upd, w) in tickets.items():
+                res = ticket.result(timeout=600)
+                lives[n] = res.advance(lives[n])
+                ores = oracles[n].update(upd, w)
+                d, od = res.deltas["triangle"], ores.deltas["triangle"]
+                assert canon(d.tuples, d.weights) == \
+                    canon(od.tuples, od.weights)
+        for n, h in handles.items():
+            assert np.array_equal(h.session.edges, oracles[n].edges)
+            assert h.session["triangle"].net_change == \
+                oracles[n]["triangle"].net_change
+        st = pool.stats()
+        assert st.tenants["a"].retired == st.tenants["b"].retired == 6
+
+
+def test_pool_coalescing_exact():
+    """Queue 6 clean batches, pump once: adaptive coalescing folds them
+    into fewer device epochs whose NET state matches applying the 6
+    batches one-by-one.  Clean (sign-consistent) batches are the
+    coalescing contract — for dirty batches (insert of a live edge in one
+    batch, delete in the next) merged netting may differ from sequential
+    application, which is why tenants that need per-batch set semantics
+    serve with ``coalesce=1``."""
+    from repro.data.synthetic import clean_update_batches
+    g = uniform_graph(24, 160, seed=30)
+    oracle = GraphSession(g, local=True, update_batch=256)
+    oracle.register("triangle")
+    pool = SessionPool(local=True, update_batch=256, prewarm=False,
+                       pipeline=False)
+    h = pool.admit("a", g, queries=("triangle",), coalesce=4)
+    tickets = []
+    for upd, w in clean_update_batches(g, 24, 16, 6, seed=31):
+        oracle.update(upd, w)
+        tickets.append(h.submit(upd, w))
+    pool.pump()
+    for t in tickets:
+        assert t.done()
+    assert np.array_equal(h.session.edges, oracle.edges)
+    assert h.session["triangle"].net_change == \
+        oracle["triangle"].net_change
+    st = h.stats
+    assert st.retired == 6
+    assert st.epochs < 6  # coalescing actually folded batches
+    assert st.coalesced_away == 6 - st.epochs
+    pool.close()
+
+
+def test_pool_backpressure_shed():
+    """A full bounded ingest queue sheds non-blocking submits (counted,
+    erroring nobody) instead of stalling the pool."""
+    g = uniform_graph(24, 160, seed=40)
+    pool = SessionPool(local=True, update_batch=64, prewarm=False,
+                       pipeline=False)
+    h = pool.admit("a", g, queries=("triangle",), max_queue=2, coalesce=1)
+    upd = np.array([[1, 2], [3, 4]], np.int32)
+    w = np.ones(2, np.int32)
+    t1, t2 = h.submit(upd, w), h.submit(upd, w)
+    assert t1 is not None and t2 is not None
+    shed = h.submit(upd, w, block=False)
+    assert shed is None
+    assert h.submit(upd, w, timeout=0.05) is None  # timed block sheds too
+    assert h.stats.shed == 2
+    pool.pump()
+    assert t1.done() and t2.done()
+    assert h.stats.retired == 2
+    pool.close()
+
+
+def test_pool_bad_batch_fails_ticket_keeps_serving():
+    g = uniform_graph(24, 160, seed=50)
+    pool = SessionPool(local=True, update_batch=64, prewarm=False,
+                       pipeline=False)
+    h = pool.admit("a", g, queries=("triangle",), coalesce=1)
+    bad = h.submit(np.zeros((2, 3), np.int32))  # arity mismatch
+    pool.pump()
+    with pytest.raises(Exception):
+        bad.result(timeout=10)
+    ok = h.submit(np.array([[1, 2]], np.int32))
+    pool.pump()
+    assert ok.result(timeout=600) is not None
+    assert h.stats.failed == 1 and h.stats.retired == 1
+    pool.close()
+
+
+def test_percentiles_shape():
+    p = percentiles([1.0, 2.0, 3.0, 4.0])
+    assert set(p) == {"p50", "p95", "p99", "max", "p99_p50_ratio"}
+    assert p["max"] == 4.0
+    assert percentiles([])["p99"] == 0.0
+
+
+# -- compile budget: cross-rung prewarm (PR 6 hole) ---------------------
+
+
+@pytest.mark.slow
+def test_prewarm_covers_mixed_rung_combos():
+    """Multi-relation plans must be warmed over the CROSS-PRODUCT of the
+    relations' committed ladders, not just the diagonal: here the ``tri``
+    relation's committed region climbs rungs far faster than ``edge``'s
+    (triangle deltas fan out), so warm epochs sit at MIXED rungs — with
+    the old diagonal-only prewarm these signatures would compile
+    mid-stream."""
+    from repro.core import compilestats
+
+    edges = uniform_graph(20, 110, seed=60)
+    sess = GraphSession(edges, local=True, update_batch=64)
+    tri = sess.register("triangle")
+    tri0, _ = tri.enumerate()
+    sess.add_relation("tri", tri0)
+    sess.register("4-clique-tri")
+    sess.prewarm(horizon=64 * 14)
+    stream = EdgeUpdateStream(20, 16, insert_frac=0.5, seed=61)
+    live = sess.edges
+    warm_compiles = 0
+    for step in range(12):
+        upd, w = stream.batch_at(step, live=live)
+        res = sess.update(upd, w)
+        td = res.deltas["triangle"]
+        t_upd = td.tuples if td.tuples is not None else \
+            np.zeros((0, 3), np.int32)
+        t_w = td.weights if td.weights is not None else \
+            np.zeros(0, np.int32)
+        res2 = sess.update({"tri": (t_upd, t_w)})
+        warm_compiles += res.compile_events + res2.compile_events
+        live = res.advance(live)
+    assert warm_compiles == 0, \
+        f"{warm_compiles} compile events leaked past the admission prewarm"
+
+
+# -- failover: kill mid-stream, restore + replay (subprocess) -----------
+
+
+def _run_check(extra, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.serve._serve_check"] + extra,
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, p.stdout + p.stderr
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_serve_kill_replay_differential_local():
+    """Mode B end-to-end: a serving process killed right after a WAL
+    append (epoch logged, never applied) is restarted, restores the last
+    snapshot, replays the log, finishes the stream — and lands bit-exact
+    on the uninterrupted oracle run, with zero serving-path compiles in
+    both surviving runs."""
+    out = _run_check(["--supervise", "--local", "--tenants", "2",
+                      "--workers", "1", "--epochs", "10", "--kill-at", "6",
+                      "--snapshot-every", "3"])
+    assert out["all_exact"]
+    assert out["final_exact"] and out["tail_exact"]
+    assert out["replayed"] > 0
+    assert out["serve_compiles"] == [0, 0]
+
+
+@pytest.mark.slow
+def test_serve_pool_mesh_sharded():
+    """Mode A on a forced 4-device host mesh under strict transfer
+    guards: 4 tenants multiplexed on one mesh, per-epoch deltas bit-exact
+    vs prewarmed isolated oracles, zero serving compiles."""
+    env_extra = {"REPRO_STRICT_TRANSFERS": "1"}
+    env = dict(os.environ)
+    env.update(env_extra)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.serve._serve_check", "--tenants", "4",
+         "--workers", "4", "--epochs", "8", "--no-fsync"],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert p.returncode == 0, p.stdout + p.stderr
+    out = json.loads(p.stdout.strip().splitlines()[-1])
+    assert out["oracle_exact"] and out["serve_compiles"] == 0
