@@ -34,6 +34,8 @@ from repro.core.csr import pow2_capacity
 from repro.core.plan import Plan, make_plan
 from repro.core.query import Query, fractional_edge_cover, query_by_name
 from repro.api.dsl import parse_pattern
+from repro.errors import (CapacityOverflow, ESCALATES_BATCH, ESCALATES_OUT,
+                          ESCALATES_ROUTE)
 
 
 def _pow2(n: int) -> int:
@@ -329,9 +331,17 @@ class GraphSession:
             ("sizing",), self.store.max_live or self.update_batch)
         s = auto_sizing(q, live, self.w, self.update_batch)
         b = batch or self._batch_override or s.batch
-        return Sizing(b,
-                      out_capacity or self._out_override or s.out_capacity,
-                      _route_for(b, self.w))  # route follows the FINAL B'
+        oc = out_capacity or self._out_override or s.out_capacity
+        # escalation marks (DESIGN.md §10) are FLOORS: once an overflow
+        # escalated a query's rung, every rebuilt engine / static-eval
+        # config / restored session starts at the raised capacity instead
+        # of re-discovering the overflow
+        r = self.store.ratchet
+        b = max(b, r.peek(("cap", "batch", q.name)))
+        oc = max(oc, r.peek(("cap", "out", q.name)))
+        rt = max(_route_for(b, self.w),  # route follows the FINAL B'
+                 r.peek(("cap", "route", q.name)))
+        return Sizing(b, oc, rt)
 
     def _make_engine(self, q: Query, batch, out_capacity
                      ) -> _delta.DeltaBigJoin:
@@ -370,6 +380,13 @@ class GraphSession:
         updating any subset of the session's relations in one epoch —
         or pass ``prepared=`` (from :meth:`prepare`) to skip the host
         packing stage.
+
+        TRANSACTIONAL (DESIGN.md §10): the epoch counter advances and the
+        handles observe the delta only after the commit succeeded.  Any
+        failure between staging and commit — a capacity overflow that
+        exhausted its escalations, an injected fault — rolls the store
+        back to the epoch boundary and re-raises; the same batch can then
+        be retried verbatim.
         """
         snap = compilestats.snapshot()
         if prepared is None:
@@ -377,10 +394,10 @@ class GraphSession:
         elif updates is not None or weights is not None:
             raise ValueError("pass updates OR prepared=, not both")
         batches = self.store.normalize_prepared(prepared)
-        self.epoch += 1
         e_ins, e_dels = batches.get(
             "edge", (np.zeros((0, 2), np.int32),) * 2)
         if all(i.size == 0 and d.size == 0 for i, d in batches.values()):
+            self.epoch += 1
             zero = _delta.DeltaResult(0, None, None, [])
             deltas = {name: zero for name in self.handles}
             for name, h in self.handles.items():
@@ -391,11 +408,16 @@ class GraphSession:
         # must create its projections first, or they would miss the
         # uncommitted batch begin_epoch installs on existing regions
         engines = [(name, h.engine) for name, h in self.handles.items()]
-        self.store.begin_epoch(batches)
-        deltas: Dict[str, _delta.DeltaResult] = {}
-        for name, engine in engines:
-            deltas[name] = engine.run_delta_plans(batches)
-        self.store.commit(batches)
+        try:
+            self.store.begin_epoch(batches)
+            deltas: Dict[str, _delta.DeltaResult] = {}
+            for name, engine in engines:
+                deltas[name] = engine.run_delta_plans(batches)
+            self.store.commit(batches)
+        except Exception:
+            self.store.rollback()
+            raise
+        self.epoch += 1
         for name, h in self.handles.items():
             h._deliver(self.epoch, deltas[name])
         return EpochResult(self.epoch, e_ins, e_dels, deltas, batches,
@@ -459,6 +481,28 @@ class GraphSession:
             self._static_plans[q] = plan
         return plan
 
+    def _escalate_static(self, q: Query, exc: CapacityOverflow,
+                         s: Sizing) -> None:
+        """Static-eval overflow recovery: bump the same per-query marks
+        the delta engines use (``_sizing`` applies them as floors, so the
+        retried config — and every later engine build — starts on the
+        raised rung).  Re-raises when no named buffer can grow."""
+        r = self.store.ratchet
+        changed = False
+        if exc.kinds & ESCALATES_OUT:
+            r.escalate(("cap", "out", q.name), floor=s.out_capacity)
+            changed = True
+        if exc.kinds & ESCALATES_BATCH:
+            r.escalate(("cap", "batch", q.name), floor=s.batch)
+            changed = True
+        if exc.kinds & ESCALATES_ROUTE:
+            r.escalate(("cap", "route", q.name), floor=s.route_capacity)
+            changed = True
+        if not changed:
+            raise exc
+        self.store.stats.escalations += 1
+        self.store.stats.replays += 1
+
     def _static_eval(self, q: Query, mode: str):
         from repro.core.bigjoin import seed_tuples_for
         plan = self._static_plan(q)
@@ -466,24 +510,33 @@ class GraphSession:
         seed = seed_tuples_for(plan,
                                {seed_rel: self.store.relation_rows(
                                    seed_rel)})
-        s = self._sizing(q, None, None)
-        out_cap = s.out_capacity if mode == "collect" else 1
         indices = self.store.indices_for(plan)
-        if self.local:
-            cfg = BigJoinConfig(batch=s.batch, seed_chunk=s.batch,
-                                mode=mode, out_capacity=out_cap)
-            return run_bigjoin(plan, indices, seed, cfg=cfg)
-        from repro.core.distributed import (DistConfig,
-                                            get_distributed_program,
-                                            run_program)
-        base = BigJoinConfig(batch=s.batch, seed_chunk=s.batch, mode=mode,
-                             out_capacity=out_cap)
-        dcfg = DistConfig(base, self.w, route_capacity=s.route_capacity,
-                          balance=self.balance)
-        program = get_distributed_program(plan, dcfg, self.mesh)
-        return run_program(program, self.w, mode == "collect", indices,
-                           seed, np.ones(seed.shape[0], np.int32),
-                           width=plan.seed_width)
+        for attempt in range(_delta.DeltaBigJoin.MAX_ESCALATIONS + 1):
+            s = self._sizing(q, None, None)  # re-read escalated floors
+            out_cap = s.out_capacity if mode == "collect" else 1
+            try:
+                if self.local:
+                    cfg = BigJoinConfig(batch=s.batch, seed_chunk=s.batch,
+                                        mode=mode, out_capacity=out_cap)
+                    return run_bigjoin(plan, indices, seed, cfg=cfg)
+                from repro.core.distributed import (DistConfig,
+                                                    get_distributed_program,
+                                                    run_program)
+                base = BigJoinConfig(batch=s.batch, seed_chunk=s.batch,
+                                     mode=mode, out_capacity=out_cap)
+                dcfg = DistConfig(base, self.w,
+                                  route_capacity=s.route_capacity,
+                                  balance=self.balance)
+                program = get_distributed_program(plan, dcfg, self.mesh)
+                return run_program(program, self.w, mode == "collect",
+                                   indices, seed,
+                                   np.ones(seed.shape[0], np.int32),
+                                   width=plan.seed_width)
+            except CapacityOverflow as exc:
+                if attempt >= _delta.DeltaBigJoin.MAX_ESCALATIONS:
+                    raise
+                self._escalate_static(q, exc, s)
+        raise AssertionError("unreachable")
 
     # -- introspection ------------------------------------------------------
     @property

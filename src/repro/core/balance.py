@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.bigjoin import (BigJoinState, LevelQueue, _binding_key,
                                 _compact, _pack_cols, _scatter_append)
+from repro.errors import OVF_OUT, OVF_PIECE, OVF_QUEUE
 from repro.core.distributed import (AXIS, DistConfig, _remote_count,
                                     _remote_member, _remote_resolve,
                                     owner_of)
@@ -184,7 +185,8 @@ def _build_balance_prefix_branch(plan: Plan, dcfg: DistConfig, li: int):
         queues = list(state.queues)
         queues[li] = LevelQueue(pfx, kk, ww, nsz)
         state = dataclasses.replace(
-            state, queues=tuple(queues), overflow=state.overflow | ovf,
+            state, queues=tuple(queues),
+            overflow=state.overflow | jnp.where(ovf, OVF_PIECE, 0),
             recv_load=recv_load)
         return state, tuple(pieces)
 
@@ -298,7 +300,7 @@ def _build_piece_branch(plan: Plan, dcfg: DistConfig, li: int):
                     out_weight, out_n, weight, alive)
                 out_n = jnp.minimum(out_n + n_new,
                                     jnp.int32(out_buf.shape[0]))
-                overflow = overflow | ovf1
+                overflow = overflow | jnp.where(ovf1, OVF_OUT, 0)
         else:
             nxt = queues[li + 1]
             npfx, n_new, ovf1 = _scatter_append(
@@ -310,7 +312,7 @@ def _build_piece_branch(plan: Plan, dcfg: DistConfig, li: int):
                 npfx, nk, nw,
                 jnp.minimum(nxt.size + n_new,
                             jnp.int32(nxt.prefix.shape[0])))
-            overflow = overflow | ovf1
+            overflow = overflow | jnp.where(ovf1, OVF_QUEUE, 0)
 
         state = BigJoinState(
             tuple(queues), out_buf, out_weight, out_n, out_count, overflow,

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core import compilestats
 from repro.core.dataflow_index import VersionedIndex
 from repro.core.plan import Plan
+from repro.errors import (CapacityOverflow, OVF_OUT, OVF_QUEUE, OVF_SEED)
 
 Indices = Dict[str, VersionedIndex]
 
@@ -83,7 +84,7 @@ class BigJoinState:
     out_weight: jax.Array  # [Ocap] int32
     out_n: jax.Array  # [] int32 rows used in out_buf
     out_count: jax.Array  # [] int64 weighted output count
-    overflow: jax.Array  # [] bool — any queue/output overflow (must stay False)
+    overflow: jax.Array  # [] int32 — OVF_* bitmask (repro.errors); stays 0
     proposals: jax.Array  # [] int64 work counter
     intersections: jax.Array  # [] int64 work counter
     recv_load: jax.Array  # [] int64 — requests served (distributed only)
@@ -118,7 +119,7 @@ def make_state(plan: Plan, cfg: BigJoinConfig,
         jnp.zeros(ocap, jnp.int32),
         jnp.asarray(0, jnp.int32),
         jnp.asarray(0, jnp.int64),
-        jnp.asarray(False),
+        jnp.asarray(0, jnp.int32),
         jnp.asarray(0, jnp.int64),
         jnp.asarray(0, jnp.int64),
         jnp.asarray(0, jnp.int64))
@@ -304,7 +305,7 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
                     out_weight, out_n, weight, alive)
                 out_n = jnp.minimum(out_n + n_new,
                                     jnp.int32(out_buf.shape[0]))
-                overflow = overflow | ovf1
+                overflow = overflow | jnp.where(ovf1, OVF_OUT, 0)
         else:
             nxt = queues[li + 1]
             npfx, n_new, ovf1 = _scatter_append(
@@ -315,7 +316,7 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
             queues[li + 1] = LevelQueue(
                 npfx, nk, nw,
                 jnp.minimum(nxt.size + n_new, jnp.int32(nxt.prefix.shape[0])))
-            overflow = overflow | ovf1
+            overflow = overflow | jnp.where(ovf1, OVF_QUEUE, 0)
 
         return BigJoinState(
             tuple(queues), out_buf, out_weight, out_n, out_count, overflow,
@@ -387,7 +388,7 @@ def build_seed_step(plan: Plan, cfg: BigJoinConfig):
                     out_weight, out_n, weights, alive)
                 out_n = jnp.minimum(out_n + n_new,
                                     jnp.int32(out_buf.shape[0]))
-                overflow = overflow | ovf
+                overflow = overflow | jnp.where(ovf, OVF_OUT, 0)
             return dataclasses.replace(
                 state, out_buf=out_buf, out_weight=out_weight, out_n=out_n,
                 out_count=out_count, overflow=overflow)
@@ -400,8 +401,9 @@ def build_seed_step(plan: Plan, cfg: BigJoinConfig):
         queues[0] = LevelQueue(
             npfx, nk, nw,
             jnp.minimum(q0.size + n_new, jnp.int32(q0.prefix.shape[0])))
-        return dataclasses.replace(state, queues=tuple(queues),
-                                   overflow=state.overflow | ovf)
+        return dataclasses.replace(
+            state, queues=tuple(queues),
+            overflow=state.overflow | jnp.where(ovf, OVF_SEED, 0))
 
     return seed_step
 
@@ -452,9 +454,11 @@ def run_bigjoin(plan: Plan, indices: Indices, seed: np.ndarray,
                 break
             state = step(state, indices)
             nsteps += 1
-    if bool(state.overflow):
-        raise RuntimeError(
-            "BiGJoin queue/output overflow: raise batch/out_capacity")
+    mask = int(state.overflow)
+    if mask:
+        raise CapacityOverflow(
+            mask, where="local bigjoin",
+            detail=f"batch={cfg.batch} out_capacity={cfg.out_capacity}")
     tuples = wts = None
     if cfg.mode == "collect":
         n = int(state.out_n)

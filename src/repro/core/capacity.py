@@ -101,6 +101,19 @@ class Ratchet:
         r = self.quantize(cap)
         return r * self.factor if r <= int(cap) else r
 
+    def escalate(self, name: Key, floor: int = 0) -> int:
+        """Bump ``name``'s mark to the next canonical rung above
+        ``max(mark, floor)`` and return it — the overflow-recovery
+        primitive (DESIGN.md §10): a :class:`~repro.errors.CapacityOverflow`
+        names the buffer that overflowed, the driver escalates its rung,
+        re-prewarms the new signature and replays the staged epoch.
+        Monotone like every other mark mutation, so escalations persist
+        through snapshot/restore and never flap."""
+        cur = max(self._caps.get(name, 0), int(floor))
+        new = self.next_rung(cur) if cur > 0 else self.quantize(1)
+        self._caps[name] = max(new, cur)
+        return self._caps[name]
+
     def rungs(self, lo: int, hi: int) -> List[int]:
         """Canonical rungs covering counts in ``[lo, hi]`` — the AOT
         prewarm ladder.  History independent: every capacity any mark can

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.core import compilestats, csr
 from repro.core.bigjoin import (BigJoinConfig, Indices, JoinResult,
                                 run_bigjoin)
@@ -67,6 +68,8 @@ from repro.core.csr import IndexData, build_index
 from repro.core.dataflow_index import VersionedIndex
 from repro.core.plan import Plan, make_delta_plan
 from repro.core.query import Query, delta_queries
+from repro.errors import (CapacityOverflow, ESCALATES_BATCH, ESCALATES_OUT,
+                          SnapshotError)
 
 Projection = Tuple[str, Tuple[int, ...], int]  # (rel, key_pos, ext_pos)
 
@@ -289,12 +292,9 @@ warnings.filterwarnings(
 _COMMIT_DONATE = () if os.environ.get(compilestats.ENV_VAR) else (1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("cins_cap", "cdel_cap",
-                                             "sharded", "use_kernel"),
-                   donate_argnums=_COMMIT_DONATE)
-def _commit_fold(base: IndexData, cins: IndexData, cdel: IndexData,
-                 uins: IndexData, udel: IndexData, *, cins_cap: int,
-                 cdel_cap: int, sharded: bool, use_kernel: bool = False):
+def _commit_fold_impl(base: IndexData, cins: IndexData, cdel: IndexData,
+                      uins: IndexData, udel: IndexData, *, cins_cap: int,
+                      cdel_cap: int, sharded: bool, use_kernel: bool = False):
     """The committed-region fold of one epoch, merged never rebuilt:
 
         cins' = (cins \\ udel) ∪ (uins \\ cdel)
@@ -330,6 +330,17 @@ def _commit_fold(base: IndexData, cins: IndexData, cdel: IndexData,
     if sharded:
         return jax.vmap(fold)(base, cins, cdel, uins, udel)
     return fold(base, cins, cdel, uins, udel)
+
+
+_COMMIT_STATICS = ("cins_cap", "cdel_cap", "sharded", "use_kernel")
+_commit_fold = functools.partial(
+    jax.jit, static_argnames=_COMMIT_STATICS,
+    donate_argnums=_COMMIT_DONATE)(_commit_fold_impl)
+# rollback-safe variant: no donation, so the old committed regions survive
+# the fold and a mid-commit fault can roll the store back to them.
+# ``RegionStore.commit`` selects it whenever fault injection is armed.
+_commit_fold_safe = functools.partial(
+    jax.jit, static_argnames=_COMMIT_STATICS)(_commit_fold_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("out_cap", "sharded",
@@ -769,6 +780,11 @@ class StoreStats:
     mirror_pulls: int = 0
     compile_events: int = 0
     prewarm_compiles: int = 0
+    # robustness accounting (DESIGN.md §10)
+    escalations: int = 0  # capacity rungs bumped after CapacityOverflow
+    replays: int = 0  # epoch dataflow re-runs after an escalation
+    rollbacks: int = 0  # rollback() calls (faulted commits)
+    escalation_compiles: int = 0  # compile events spent re-prewarming
 
 
 @dataclasses.dataclass
@@ -1298,6 +1314,7 @@ class RegionStore:
         live relation state on device (one jitted probe per relation).
         Always returns the per-relation ``{rel: (ins, dels)}`` dict —
         :meth:`normalize` unwraps the edge sugar."""
+        faults.fire("store.normalize")
         self.stats.normalize_calls += 1
         out = {}
         for rel, (rows, w) in prep.raw.items():
@@ -1583,9 +1600,15 @@ class RegionStore:
         Device-resident: jitted sorted-merge/diff folds over the committed
         regions and the staged delta only; the compacted base region object
         passes through UNTOUCHED (no rebuild, no re-upload).
+
+        ATOMIC (DESIGN.md §10): every fold output is computed into a
+        staging list first — the store is not mutated until all folds
+        succeeded, then the swap is a pure host assignment loop with no
+        fault points.  A failure mid-commit (an injected
+        ``store.commit.fold`` fault) therefore leaves the store
+        bit-identical to the epoch boundary; :meth:`rollback` clears the
+        staged batch.
         """
-        self.stats.commit_calls += 1
-        self.stats.epochs += 1
         if self._staged is None:
             # raw commit without begin_epoch: net the args against the live
             # set first (a live "insert" or absent "delete" must be a no-op,
@@ -1602,12 +1625,20 @@ class RegionStore:
                 for rel, (ri, rd) in raw.items()}
             self.begin_epoch(netted)
         batches = self._staged
-        self._staged = None
         if not self.device_resident:
+            self._staged = None
+            self.stats.commit_calls += 1
+            self.stats.epochs += 1
             self._commit_host(batches)
             self._sync_compile_stats()
             return
         use_k = _merge_kernel_on() and not self.shard_w
+        # donation would kill the old committed buffers the moment a fold
+        # runs, stranding the rollback target — take the undonated variant
+        # whenever a fault could abort the commit midway
+        fold_fn = _commit_fold_safe if faults.active() else _commit_fold
+        # ---- stage: compute every fold output, store untouched ------------
+        staged_rels = []  # (st, new_cins, new_cdel, n_live)
         for rel, (r_ins, r_dels) in batches.items():
             if not (r_ins.size or r_dels.size):
                 continue
@@ -1617,6 +1648,7 @@ class RegionStore:
             # committed outputs share ONE (rel, "committed") rung — tied
             # caps halve the fold-signature space and a rung only ever
             # grows between compactions (ratchet hysteresis).
+            faults.fire("store.commit.fold")
             li = _packed_index(r_ins, self.shard_w, st.arity,
                                capacity=self._delta_cap(rel,
                                                         r_ins.shape[0]))
@@ -1630,23 +1662,25 @@ class RegionStore:
                        _maxn(np.asarray(ncd) + np.asarray(_count_of(ld))))
             cc = self._committed_cap(rel, need)
             with _device_scope():
-                new_ci, new_cd = _commit_fold(
+                new_ci, new_cd = fold_fn(
                     st.lb, st.lc_ins, st.lc_del, li, ld,
                     cins_cap=cc, cdel_cap=cc,
                     sharded=bool(self.shard_w), use_kernel=use_k)
-            st.lc_ins, st.lc_del = new_ci, new_cd
-            st.n_live = [nb, _count_of(new_ci), _count_of(new_cd)]
-            st.mirror = None
+            staged_rels.append((st, new_ci, new_cd,
+                                [nb, _count_of(new_ci), _count_of(new_cd)]))
         # per-projection folds (vmapped over shards when distributed)
+        staged_projs = []  # (reg, d_cins, d_cdel, empty_ins, empty_dels)
+        derived_dirty = []
         for reg in self.projections.values():
             r_ins, r_dels = batches.get(
                 reg.rel, (np.zeros((0, reg.arity), np.int32),) * 2)
             if reg.derived:
                 if r_ins.size or r_dels.size:
-                    reg._derived_cache.clear()  # committed rows changed
+                    derived_dirty.append(reg)  # committed rows changed
                 continue
             if not (r_ins.size or r_dels.size):
                 continue  # untouched relation: regions pass through
+            faults.fire("store.commit.fold")
             need = max(
                 _maxn(np.asarray(reg.n_cins)
                       + np.asarray(_count_of(reg.d_uins))),
@@ -1654,20 +1688,45 @@ class RegionStore:
                       + np.asarray(_count_of(reg.d_udel))))
             cc = self._committed_cap(reg.rel, need)
             with _device_scope():
-                d_cins, d_cdel = _commit_fold(
+                d_cins, d_cdel = fold_fn(
                     reg.d_base, reg.d_cins, reg.d_cdel, reg.d_uins,
                     reg.d_udel, cins_cap=cc, cdel_cap=cc,
                     sharded=bool(self.shard_w), use_kernel=use_k)
+            staged_projs.append((reg, d_cins, d_cdel,
+                                 r_ins[:0], r_dels[:0]))
+        # ---- swap: pure host assignments, no fault points -----------------
+        self._staged = None
+        for st, new_ci, new_cd, n_live in staged_rels:
+            st.lc_ins, st.lc_del = new_ci, new_cd
+            st.n_live = n_live
+            st.mirror = None
+        for reg in derived_dirty:
+            reg._derived_cache.clear()
+        for reg, d_cins, d_cdel, e_ins, e_dels in staged_projs:
             reg.d_cins, reg.d_cdel = d_cins, d_cdel
             reg.n_cins = _count_of(d_cins)
             reg.n_cdel = _count_of(d_cdel)
-            reg.set_uncommitted(r_ins[:0], r_dels[:0])
+            reg.set_uncommitted(e_ins, e_dels)
             # commit never touches d_base: keep its mirror (compaction's
             # full clear is the one that must drop it)
             reg._mirror.pop("cins", None)
             reg._mirror.pop("cdel", None)
+        self.stats.commit_calls += 1
+        self.stats.epochs += 1
         self._maybe_compact()
         self._sync_compile_stats()
+
+    def rollback(self) -> None:
+        """Return the store to the epoch boundary: drop the staged batch
+        and reset every projection's uncommitted region to empty.  Exact
+        by construction — :meth:`commit` swaps nothing in until every fold
+        has succeeded, so a failure between :meth:`begin_epoch` and a
+        completed commit leaves all committed regions untouched."""
+        self._staged = None
+        for reg in self.projections.values():
+            empty = np.zeros((0, reg.arity), np.int32)
+            reg.set_uncommitted(empty, empty)
+        self.stats.rollbacks += 1
 
     def _commit_host(self, batches: Dict):
         for reg in self.projections.values():
@@ -1753,8 +1812,8 @@ class RegionStore:
                 "snapshot() serializes the device-resident store; the "
                 "legacy host store is already plain numpy state")
         if self._staged is not None:
-            raise RuntimeError(
-                "snapshot mid-epoch: commit (or drop) the staged batch "
+            raise SnapshotError(
+                "snapshot mid-epoch: commit (or rollback) the staged batch "
                 "first — snapshots are epoch-boundary consistent")
         leaves: List[np.ndarray] = []
         names: List[str] = []
@@ -1904,6 +1963,7 @@ class DeltaBigJoin:
         self.cfg = cfg
         self.compact_ratio = compact_ratio
         self.device_resident = device_resident
+        self._prewarm_args: Optional[Tuple[int, Optional[int]]] = None
         self.plans: List[Plan] = [make_delta_plan(dq)
                                   for dq in delta_queries(query)]
         if store is None:
@@ -1947,6 +2007,7 @@ class DeltaBigJoin:
         Returns the compile events spent."""
         from repro.core.bigjoin import _compiled_fns, make_state
         ub = max(int(update_batch), 1)
+        self._prewarm_args = (ub, horizon)
         snap = compilestats.snapshot()
         for plan in self.plans:
             step, seed_step = _compiled_fns(plan, self.cfg)
@@ -1969,6 +2030,62 @@ class DeltaBigJoin:
                 _warm_call(seed_step, state_sds, idx, pfx, wts, valid)
                 _warm_call(step, state_sds, idx)
         return compilestats.since(snap)
+
+    # -- overflow recovery (DESIGN.md §10) ------------------------------
+    MAX_ESCALATIONS = 3  # per plan run, before the overflow surfaces
+
+    def _escalate(self, exc: CapacityOverflow) -> None:
+        """Recover from one :class:`CapacityOverflow`: bump the offending
+        capacity rung(s) on the store ratchet (monotone marks — they
+        serialize with snapshots, so an escalation survives failover),
+        rebuild this engine's config on the new rungs, and re-prewarm so
+        the replay runs on AOT-compiled signatures.  Re-raises when the
+        overflow names no buffer this engine can grow."""
+        qn = self.query.name
+        r = self.store.ratchet
+        cfg, changed = self.cfg, False
+        if exc.kinds & ESCALATES_OUT:
+            new_out = r.escalate(("cap", "out", qn),
+                                 floor=cfg.out_capacity)
+            cfg = dataclasses.replace(cfg, out_capacity=new_out)
+            changed = True
+        if exc.kinds & ESCALATES_BATCH:
+            new_b = r.escalate(("cap", "batch", qn), floor=cfg.batch)
+            cfg = dataclasses.replace(
+                cfg, batch=new_b, seed_chunk=max(cfg.seed_chunk, new_b))
+            changed = True
+        if not changed:
+            raise exc
+        self.cfg = cfg
+        self.store.stats.escalations += 1
+        self._reprewarm()
+
+    def _reprewarm(self) -> None:
+        """Re-run prewarm (if this engine was ever prewarmed) so the new
+        escalated signatures are AOT-compiled off the serving path; the
+        compiles are accounted separately (``escalation_compiles``) so the
+        zero-serving-compiles gate can subtract them."""
+        if self._prewarm_args is None:
+            return
+        snap = compilestats.snapshot()
+        self.prewarm(*self._prewarm_args)
+        self.store.stats.escalation_compiles += compilestats.since(snap)
+
+    def _run_plan_escalating(self, plan: Plan, seed: np.ndarray,
+                             weights: np.ndarray) -> JoinResult:
+        """One plan run with escalate-and-replay: the seed is host-staged
+        and the store is read-only during the run, so a replay after a
+        rung bump is deterministic and exact."""
+        for attempt in range(self.MAX_ESCALATIONS + 1):
+            try:
+                return self._run_plan(plan, self.store.indices_for(plan),
+                                      seed, weights)
+            except CapacityOverflow as exc:
+                if attempt >= self.MAX_ESCALATIONS:
+                    raise
+                self._escalate(exc)
+                self.store.stats.replays += 1
+        raise AssertionError("unreachable")
 
     # ------------------------------------------------------------------
     def run_delta_plans(self, ins, dels=None) -> DeltaResult:
@@ -1994,8 +2111,7 @@ class DeltaBigJoin:
                 np.ones(r_ins.shape[0], np.int32),
                 -np.ones(r_dels.shape[0], np.int32)])
             seed = delta_rows[:, list(plan.seed_cols)]
-            res = self._run_plan(plan, self.store.indices_for(plan), seed,
-                                 delta_w)
+            res = self._run_plan_escalating(plan, seed, delta_w)
             per_dq.append(res)
             total += res.count
             if res.tuples is not None and res.tuples.size:

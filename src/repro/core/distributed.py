@@ -35,12 +35,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import compat
+from repro import compat, faults
 from repro.core import compilestats, csr
 from repro.core import delta as _delta
 from repro.core.bigjoin import BigJoinConfig
 from repro.core.dataflow_index import VersionedIndex
 from repro.core.plan import Plan
+from repro.errors import (CapacityOverflow, ESCALATES_BATCH, ESCALATES_OUT,
+                          ESCALATES_ROUTE, OVF_OUT, OVF_QUEUE, OVF_ROUTE,
+                          OVF_SEED, _KIND_BITS)
 
 AXIS = "workers"
 
@@ -397,7 +400,7 @@ def _build_dist_level(plan: Plan, dcfg: DistConfig, li: int):
                     out_weight, out_n, weight, alive)
                 out_n = jnp.minimum(out_n + n_new,
                                     jnp.int32(out_buf.shape[0]))
-                overflow = overflow | ovf1
+                overflow = overflow | jnp.where(ovf1, OVF_OUT, 0)
         else:
             nxt = queues[li + 1]
             npfx, n_new, ovf1 = _scatter_append(
@@ -409,7 +412,7 @@ def _build_dist_level(plan: Plan, dcfg: DistConfig, li: int):
                 npfx, nk, nw,
                 jnp.minimum(nxt.size + n_new,
                             jnp.int32(nxt.prefix.shape[0])))
-            overflow = overflow | ovf1
+            overflow = overflow | jnp.where(ovf1, OVF_QUEUE, 0)
 
         return BigJoinState(
             tuple(queues), out_buf, out_weight, out_n, out_count, overflow,
@@ -469,6 +472,7 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
         # projection-seeded plans, the seed atom's arity for n-ary deltas)
         alive = jnp.arange(seed.shape[0], dtype=jnp.int32) < seed_n
         bound = tuple(plan.attr_order[:plan.seed_width])
+        route_ovf = jnp.asarray(0, jnp.int32)
         for b in plan.seed_filters:
             idx = local[b.index_id]
             qk = _binding_key(seed, bound, b.key_attrs, idx)
@@ -478,10 +482,16 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
                 max(cap, seed.shape[0] // max(w // 2, 1) + 1),
                 dcfg.aggregate, dcfg.axis, dcfg.base.use_kernel,
                 dcfg.base.kernel_interpret)
-            alive = alive & mem & ok  # seed capacity sized to never drop
+            # a seed whose route slot overflowed got NO reply; dropping it
+            # would silently undercount, so flag OVF_ROUTE and escalate
+            route_ovf = route_ovf | jnp.where(
+                (alive & ~ok).any(), OVF_ROUTE, 0)
+            alive = alive & mem & ok
         for f in plan.seed_ineq:
             alive = alive & (seed[:, bound.index(f.lo)]
                              < seed[:, bound.index(f.hi)])
+        state = dataclasses.replace(state,
+                                    overflow=state.overflow | route_ovf)
         if not plan.levels:
             # the seed covers every attribute (single-atom delta plans):
             # filtered seeds ARE the outputs; nothing to drain
@@ -498,7 +508,7 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
                     out_weight, out_n, wts, alive)
                 out_n = jnp.minimum(out_n + n_new,
                                     jnp.int32(out_buf.shape[0]))
-                ovf0 = ovf0 | ovf
+                ovf0 = ovf0 | jnp.where(ovf, OVF_OUT, 0)
             state = dataclasses.replace(
                 state, out_buf=out_buf, out_weight=out_weight, out_n=out_n,
                 out_count=out_count, overflow=ovf0)
@@ -514,8 +524,9 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
             from repro.core.bigjoin import LevelQueue
             queues = list(state.queues)
             queues[0] = LevelQueue(npfx, nk, nw, q0.size + n_new)
-            state = dataclasses.replace(state, queues=tuple(queues),
-                                        overflow=state.overflow | ovf)
+            state = dataclasses.replace(
+                state, queues=tuple(queues),
+                overflow=state.overflow | jnp.where(ovf, OVF_SEED, 0))
             if dcfg.balance:
                 from repro.core.balance import make_piece_queues
                 pieces = make_piece_queues(plan, dcfg)
@@ -546,7 +557,12 @@ def build_per_worker(plan: Plan, dcfg: DistConfig):
         count = jax.lax.psum(state.out_count, dcfg.axis)
         props = jax.lax.psum(state.proposals, dcfg.axis)
         isect = jax.lax.psum(state.intersections, dcfg.axis)
-        ovf = jax.lax.psum(state.overflow.astype(jnp.int32), dcfg.axis) > 0
+        # psum per BIT so distinct workers' overflow kinds OR (not add)
+        nbits = len(_KIND_BITS)
+        shifts = jnp.arange(nbits, dtype=jnp.int32)
+        bits = jax.lax.psum((state.overflow >> shifts) & 1, dcfg.axis)
+        ovf = jnp.where(bits > 0, jnp.int32(1) << shifts, 0
+                        ).sum().astype(jnp.int32)
         max_load = jax.lax.pmax(state.recv_load, dcfg.axis)
         sum_load = jax.lax.psum(state.recv_load, dcfg.axis)
         outs = (count, props, isect, steps, ovf, max_load, sum_load)
@@ -679,13 +695,15 @@ def run_program(program, w: int, collect: bool, indices,
                 seed: np.ndarray, weights: np.ndarray, width: int = 2,
                 seed_floor: int = 0):
     """Deal the seed, launch one compiled program, unpack psum'd outputs."""
+    faults.fire("dist.program")
     chunks, seed_n, wchunks = deal_seed(seed, weights, w, width,
                                         floor=seed_floor)
     out = program(indices, jnp.asarray(chunks), jnp.asarray(seed_n),
                   jnp.asarray(wchunks))
-    if bool(out[4]):
-        raise RuntimeError(
-            "distributed join overflow (raise batch/out_capacity)")
+    mask = int(out[4])
+    if mask:
+        raise CapacityOverflow(mask, where="distributed join",
+                               detail=f"w={w} seed_floor={seed_floor}")
     tuples = wts = None
     if collect:
         bufs, ws, ns = (np.asarray(out[7]), np.asarray(out[8]),
@@ -735,8 +753,8 @@ def distributed_join(plan: Plan, relations: Dict[str, np.ndarray],
     run = build_distributed_program(plan, cfg, mesh)
     out = run(indices, jnp.asarray(chunks), jnp.asarray(seed_n),
               jnp.ones((w, per), jnp.int32))
-    if bool(out[4]):
-        raise RuntimeError("distributed join overflow (raise capacities)")
+    if int(out[4]):
+        raise CapacityOverflow(int(out[4]), where="distributed static join")
     res = DistJoinResult(int(out[0]), int(out[1]), int(out[2]), int(out[3]),
                          int(out[5]), float(out[6]) / w)
     if cfg.base.mode == "collect":
@@ -866,11 +884,45 @@ class DistDeltaBigJoin(_delta.DeltaBigJoin):
                            self.dcfg.base.mode == "collect", indices,
                            seed, weights, width=width, seed_floor=floor)
 
+    def _escalate(self, exc) -> None:
+        """Mesh overflow recovery: grows the per-peer route tables too,
+        and rebuilds the shard_map programs on the escalated DistConfig
+        (program identity keys on the config, so the stale programs must
+        be dropped before the replay)."""
+        qn = self.query.name
+        r = self.store.ratchet
+        base, dcfg, changed = self.dcfg.base, self.dcfg, False
+        if exc.kinds & ESCALATES_OUT:
+            new_out = r.escalate(("cap", "out", qn),
+                                 floor=base.out_capacity)
+            base = dataclasses.replace(base, out_capacity=new_out)
+            changed = True
+        if exc.kinds & ESCALATES_BATCH:
+            new_b = r.escalate(("cap", "batch", qn), floor=base.batch)
+            base = dataclasses.replace(
+                base, batch=new_b, seed_chunk=max(base.seed_chunk, new_b))
+            changed = True
+        if exc.kinds & ESCALATES_ROUTE:
+            new_rt = r.escalate(("cap", "route", qn),
+                                floor=dcfg.route_capacity)
+            dcfg = dataclasses.replace(dcfg, route_capacity=new_rt)
+            changed = True
+        if not changed:
+            raise exc
+        if base is not self.dcfg.base:
+            dcfg = dataclasses.replace(dcfg, base=base)
+        self.dcfg = dcfg
+        self.cfg = base
+        self._programs.clear()
+        self.store.stats.escalations += 1
+        self._reprewarm()
+
     def prewarm(self, update_batch: int, horizon=None) -> int:
         """AOT-compile every (program, committed-rung) signature this
         engine's delta plans can request for batches ≤ ``update_batch``
         (the mesh half of ``GraphSession.prewarm``)."""
         ub = max(int(update_batch), 1)
+        self._prewarm_args = (ub, horizon)
         snap = compilestats.snapshot()
         for pi, plan in enumerate(self.plans):
             if pi not in self._programs:

@@ -14,6 +14,16 @@ before jax initializes (tests and benches must keep seeing 1 device):
     python -m repro.serve._serve_check --supervise --tenants 4 --workers 4 \
         --epochs 20 --kill-at 13
 
+    # Mode C: chaos — a seeded random fault schedule (repro.faults) armed
+    # across ALL eight fault points while N tenants serve; failed epochs
+    # roll back atomically, overflows escalate+replay transparently, and
+    # the final per-tenant state must be BIT-EXACT with a fault-free
+    # in-process oracle that applied exactly the batches that succeeded.
+    # Failed batches are excluded AND accounted (submitted == retired +
+    # failed); serving compiles beyond escalation re-prewarms must be 0.
+    python -m repro.serve._serve_check --chaos --tenants 4 --workers 4 \
+        --epochs 30 --tight-out 32
+
 Every tenant gets its OWN initial graph and update stream (derived from
 ``--seed`` + tenant index, so a resume child regenerates them exactly);
 batches are drawn with ``insert_frac=0.5`` so the live set stays within its
@@ -176,6 +186,185 @@ def worker(args) -> int:
     return 0 if ok else 1
 
 
+def chaos(args) -> int:
+    """Mode C: deterministic chaos run (module docstring).
+
+    Pump mode on purpose: prep+apply run inline on THIS thread, so the
+    fault registry's hit counters advance in one deterministic order and
+    a (seed, rate) pair — or a pinned ``--faults`` spec — reproduces the
+    exact same injection sequence every run.  The fault-free oracles run
+    in the same process under ``faults.disabled()`` and apply ONLY the
+    batches whose tickets resolved, so any torn commit (a rollback that
+    left partial state) or lost/duplicated batch shows up as a digest
+    mismatch."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.workers}")
+
+    import json
+    import shutil
+    import tempfile
+    import time
+
+    import numpy as np
+
+    from repro import faults
+    from repro.api import GraphSession, canon_signed as canon
+    from repro.data.synthetic import EdgeUpdateStream, uniform_graph
+    from repro.serve import SessionPool
+
+    t_start = time.time()
+
+    def note(msg):
+        sys.stderr.write(f"[chaos +{time.time() - t_start:7.1f}s] {msg}\n")
+        sys.stderr.flush()
+
+    names = [f"t{i}" for i in range(args.tenants)]
+    graphs = {n: uniform_graph(args.nv, args.ne, args.seed + i)
+              for i, n in enumerate(names)}
+    streams = {n: EdgeUpdateStream(args.nv, args.batch_size,
+                                   insert_frac=0.5, seed=args.seed + 100 + i)
+               for i, n in enumerate(names)}
+
+    oracles = {}
+    for n in names:
+        o = GraphSession(graphs[n], local=args.local,
+                         update_batch=args.update_batch)
+        o.register(args.query)
+        o.prewarm(horizon=args.update_batch * (args.epochs + 2))
+        oracles[n] = o
+    note(f"{len(oracles)} fault-free oracles prewarmed")
+
+    tmp = args.durable_dir or tempfile.mkdtemp(prefix="serve_chaos_")
+    pool = SessionPool(
+        local=args.local, update_batch=args.update_batch,
+        pipeline=False, durable_dir=tmp,
+        snapshot_every=args.snapshot_every, fsync=not args.no_fsync,
+        horizon=args.update_batch * (args.epochs + 2))
+    handles, lives = {}, {}
+    for n in names:
+        # --tight-out admits tenants with a deliberately small output
+        # rung so real overflows occur and must escalate+replay — the
+        # oracles keep default sizing, so exactness also proves the
+        # escalated replay path
+        handles[n] = pool.admit(
+            n, graphs[n], queries=(args.query,), coalesce=1,
+            out_capacity=args.tight_out or None,
+            update_batch=args.update_batch)
+        lives[n] = np.asarray(handles[n].session.edges)
+    note(f"admitted {args.tenants} tenants"
+         + (f" (tight out rung {args.tight_out})" if args.tight_out else ""))
+
+    if args.faults:
+        schedule = faults.parse_spec(args.faults)
+        note(f"pinned fault schedule: {args.faults}")
+    else:
+        schedule = faults.random_schedule(
+            args.seed + 777, horizon=args.chaos_horizon,
+            rate=args.chaos_rate)
+        note(f"random fault schedule: seed {args.seed + 777} "
+             f"rate {args.chaos_rate} over {sorted(schedule)}")
+    faults.install(schedule)
+
+    counts = {n: {"submitted": 0, "ok": 0, "failed": 0, "refused": 0}
+              for n in names}
+    digests = {n: {} for n in names}
+    exact = True
+    t0 = time.time()
+    try:
+        for step in range(args.epochs):
+            tickets = {}
+            for n in names:
+                upd, w = streams[n].batch_at(step, live=lives[n])
+                try:
+                    tk = handles[n].submit(upd, w)
+                except RuntimeError:  # quarantined: fence holds
+                    counts[n]["refused"] += 1
+                    continue
+                counts[n]["submitted"] += 1
+                tickets[n] = (tk, upd, w)
+            pool.pump()
+            applied = {}
+            for n, (tk, upd, w) in tickets.items():
+                try:
+                    res = tk.result(timeout=600)
+                except Exception as e:
+                    # failed epoch: rolled back, WAL record aborted —
+                    # state must be EXACTLY as if never submitted
+                    counts[n]["failed"] += 1
+                    note(f"step {step} {n}: failed "
+                         f"({type(e).__name__}: {e})")
+                    continue
+                counts[n]["ok"] += 1
+                lives[n] = res.advance(lives[n])
+                d = res.deltas[args.query]
+                applied[n] = (upd, w, canon(d.tuples, d.weights))
+                digests[n][str(res.epoch)] = _digest(applied[n][2])
+            # oracles apply ONLY the surviving batches, fault-free, on
+            # this same (now idle) thread — see worker() for why the
+            # mesh programs must not race the pool's dispatch
+            with faults.disabled():
+                for n, (upd, w, served) in applied.items():
+                    ores = oracles[n].update(upd, w)
+                    od = ores.deltas[args.query]
+                    exact = exact and served == canon(od.tuples, od.weights)
+        pool.drain()
+        stats = pool.stats()
+        final = {}
+        with faults.disabled():
+            for n in names:
+                s = handles[n].session
+                o = oracles[n]
+                final[n] = {
+                    "epoch": int(s.epoch),
+                    "num_edges": int(s.num_edges),
+                    "edges": _digest(np.asarray(s.edges).tobytes()),
+                    "net_change": int(s[args.query].net_change)}
+                exact = exact and (
+                    final[n]["edges"]
+                    == _digest(np.asarray(o.edges).tobytes())
+                    and final[n]["net_change"]
+                    == int(o[args.query].net_change))
+        injected = faults.injected()
+        pool.close()
+    finally:
+        faults.clear()
+        if not args.durable_dir:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    agg = stats.aggregate()
+    accounted = all(
+        c["submitted"] == c["ok"] + c["failed"] for c in counts.values())
+    # escalation re-prewarms are the ONE sanctioned serving-path compile
+    # source; everything else must stay zero
+    compiles_ok = (agg["serve_compiles"] - agg["escalation_compiles"]) <= 0
+    chaotic = len(injected) > 0  # a chaos run that injected nothing
+    #                              tested nothing — fail loudly
+    out = {
+        "mode": "chaos",
+        "workers": args.workers, "local": bool(args.local),
+        "tenants": args.tenants, "epochs": args.epochs,
+        "faults_injected": len(injected),
+        "injected": [f"{p}@{h}" for p, h in injected[:40]],
+        "counts": counts,
+        "escalations": agg["escalations"], "replays": agg["replays"],
+        "escalation_compiles": agg["escalation_compiles"],
+        "serve_compiles": agg["serve_compiles"],
+        "failed": agg["failed"],
+        "wal_errors": agg["wal_errors"],
+        "wal_degraded": agg["wal_degraded"],
+        "quarantined": agg["quarantined"],
+        "oracle_exact": bool(exact),
+        "accounted": bool(accounted),
+        "compiles_ok": bool(compiles_ok),
+        "elapsed_s": round(time.time() - t0, 2),
+        "final": final,
+    }
+    print(json.dumps(out))
+    ok = exact and accounted and compiles_ok and chaotic
+    return 0 if ok else 1
+
+
 def supervise(args) -> int:
     """Mode B parent: oracle run, victim run (killed mid-stream), resume
     run — then diff digests.  Spawns children of THIS module so the XLA
@@ -268,6 +457,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--supervise", action="store_true",
                     help="kill/resume failover differential (Mode B)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="deterministic fault-injection run (Mode C)")
+    ap.add_argument("--chaos-rate", type=float, default=0.05,
+                    help="per-hit fault probability for the seeded "
+                         "random schedule")
+    ap.add_argument("--chaos-horizon", type=int, default=400,
+                    help="hits per point covered by the random schedule")
+    ap.add_argument("--faults", default="",
+                    help="pinned fault spec (repro.faults.parse_spec "
+                         "syntax) instead of the seeded random schedule")
+    ap.add_argument("--tight-out", type=int, default=0,
+                    help="chaos: admit tenants with this small output "
+                         "rung to force escalate+replay")
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--local", action="store_true",
@@ -291,6 +493,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.supervise:
         return supervise(args)
+    if args.chaos:
+        return chaos(args)
     return worker(args)
 
 

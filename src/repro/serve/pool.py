@@ -56,7 +56,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.core import compilestats
+from repro.errors import WalError
 from repro.serve.stats import ServeStats, TenantStats
 from repro.serve.wal import Durability
 
@@ -106,6 +108,11 @@ class _Tenant:
         self.ingest = collections.deque()
         self.prepared = None  # (PreparedBatch, tickets, prep_ms)
         self.stats = TenantStats(name=name)
+        # robustness (DESIGN.md §10): durable=False after WAL degrade;
+        # consecutive_failures feeds the quarantine trip wire.
+        self.durable = durability is not None
+        self.consecutive_failures = 0
+        self.quarantined = False
 
 
 class TenantHandle:
@@ -141,7 +148,9 @@ class SessionPool:
                  pipeline: bool = True, durable_dir: Optional[str] = None,
                  snapshot_every: int = 8, keep_last: int = 3,
                  fsync: bool = True,
-                 on_logged: Optional[Callable[[str, int], None]] = None):
+                 on_logged: Optional[Callable[[str, int], None]] = None,
+                 quarantine_after: int = 3, wal_retries: int = 3,
+                 wal_backoff_s: float = 0.02):
         import jax
         if local is None:
             local = mesh is None and jax.device_count() == 1
@@ -161,6 +170,15 @@ class SessionPool:
         self.keep_last = int(keep_last)
         self.fsync = bool(fsync)
         self.on_logged = on_logged  # test hook: fires after WAL append
+        # robustness knobs (DESIGN.md §10): a tenant whose epochs fail
+        # ``quarantine_after`` times IN A ROW is fenced off (its queue
+        # failed, new submits refused) so a poisoned stream can't spin
+        # the shared apply thread forever; WAL appends retry
+        # ``wal_retries`` times with linear backoff, then the tenant
+        # LOUDLY degrades to non-durable serving rather than stalling.
+        self.quarantine_after = int(quarantine_after)
+        self.wal_retries = int(wal_retries)
+        self.wal_backoff_s = float(wal_backoff_s)
         self._cv = threading.Condition()
         self._tenants: Dict[str, _Tenant] = {}
         self._names: List[str] = []
@@ -260,6 +278,10 @@ class SessionPool:
         batch and returns None (``block=False`` / timeout expiry) — the
         mesh and the other tenants never wait on it."""
         t = self._tenants[name]
+        if t.quarantined:
+            raise RuntimeError(
+                f"tenant {name!r} is quarantined after "
+                f"{self.quarantine_after} consecutive epoch failures")
         batches = self._as_dict(t.session, updates, weights)
         deadline = None if timeout is None else \
             time.perf_counter() + timeout
@@ -294,7 +316,7 @@ class SessionPool:
         for k in range(n):
             i = (self._rr["prep"] + k) % n
             t = self._tenants[self._names[i]]
-            if not t.ingest or t.prepared is not None:
+            if not t.ingest or t.prepared is not None or t.quarantined:
                 continue
             self._rr["prep"] = i + 1
             group = [t.ingest.popleft()]
@@ -332,20 +354,55 @@ class SessionPool:
         tickets = [ticket for _b, ticket in group]
         t0 = time.perf_counter()
         try:
+            faults.fire("pool.prep")
             prep = t.session.prepare(self._merge(group))
         except Exception as e:  # bad batch: fail its tickets, keep serving
-            with self._cv:
-                t.stats.failed += len(tickets)
-                self._inflight -= len(tickets)
-                self._cv.notify_all()
-            for ticket in tickets:
-                ticket._resolve(error=e)
+            self._fail_group(t, tickets, e)
             return False
         ms = (time.perf_counter() - t0) * 1e3
         with self._cv:
-            t.prepared = (prep, tickets, ms)
+            if not t.quarantined:
+                t.prepared = (prep, tickets, ms)
+                self._cv.notify_all()
+                return True
+        # the fence tripped while we were preparing: fail, don't apply
+        err = RuntimeError(f"tenant {t.name!r} is quarantined")
+        self._fail_group(t, tickets, err, count_failure=False)
+        return False
+
+    def _fail_group(self, t: _Tenant, tickets, error, *,
+                    count_failure: bool = True) -> None:
+        """Fail one group's tickets; bump the consecutive-failure count
+        and trip the quarantine fence when it reaches the threshold
+        (failing everything still queued — a poisoned tenant must not
+        spin the shared apply thread forever)."""
+        dropped = []
+        with self._cv:
+            t.stats.failed += len(tickets)
+            self._inflight -= len(tickets)
+            if count_failure:
+                t.consecutive_failures += 1
+            if (not t.quarantined and self.quarantine_after > 0
+                    and t.consecutive_failures >= self.quarantine_after):
+                t.quarantined = True
+                t.stats.quarantined = True
+                while t.ingest:
+                    dropped.append(t.ingest.popleft()[1])
+                if t.prepared is not None:
+                    dropped.extend(t.prepared[1])
+                    t.prepared = None
+                t.stats.failed += len(dropped)
+                self._inflight -= len(dropped)
+                t.stats.queue_depth = 0
             self._cv.notify_all()
-        return True
+        for ticket in tickets:
+            ticket._resolve(error=error)
+        if dropped:
+            qerr = RuntimeError(
+                f"tenant {t.name!r} quarantined after "
+                f"{t.consecutive_failures} consecutive epoch failures")
+            for ticket in dropped:
+                ticket._resolve(error=qerr)
 
     def _next_apply(self):
         """Round-robin pick of one tenant with a prepared epoch; takes the
@@ -363,28 +420,87 @@ class SessionPool:
             return (t,) + job
         return None
 
-    def _apply_one(self, t: _Tenant, prep, tickets, prep_ms):
-        """Stage B for one prepared epoch: WAL append, device apply,
-        snapshot cadence, ticket resolution."""
-        t0 = time.perf_counter()
+    def _wal_log(self, t: _Tenant, raw) -> Optional[int]:
+        """Durably append one epoch's raw batches with bounded retry.
+
+        Each :class:`WalError` rolls back the partial record
+        (``abort_last``), counts in ``stats.wal_errors`` and retries
+        after a linear backoff; when ``wal_retries`` retries are
+        exhausted the tenant LOUDLY degrades to non-durable serving
+        (``stats.wal_degraded``) instead of stalling the shared apply
+        thread — epochs keep committing, recovery just can't replay
+        them.  Returns the logged epoch, or None once degraded."""
+        last: Optional[WalError] = None
+        for attempt in range(self.wal_retries + 1):
+            if last is not None:
+                try:
+                    t.durability.wal.abort_last()
+                except WalError:
+                    pass  # torn tail is tolerated by replay anyway
+                time.sleep(self.wal_backoff_s * attempt)
+            try:
+                return t.durability.log(raw)
+            except WalError as e:
+                last = e
+                with self._cv:
+                    t.stats.wal_errors += 1
         try:
-            if t.durability is not None:
-                epoch = t.durability.log(prep.raw)
-                if self.on_logged is not None:
+            t.durability.wal.abort_last()
+        except WalError:
+            pass
+        with self._cv:
+            t.durable = False
+            t.stats.wal_degraded = True
+        return None
+
+    def _sync_robustness(self, t: _Tenant, faults_before: int) -> None:
+        """Mirror the session store's escalation counters (absolute —
+        the store is per-tenant) and attribute newly injected faults."""
+        st = t.session.store.stats
+        with self._cv:
+            t.stats.escalations = st.escalations
+            t.stats.replays = st.replays
+            t.stats.escalation_compiles = st.escalation_compiles
+            t.stats.faults_injected += len(faults.injected()) - faults_before
+
+    def _apply_one(self, t: _Tenant, prep, tickets, prep_ms):
+        """Stage B for one prepared epoch: WAL append (bounded retry /
+        degrade), device apply (overflow escalation + replay happens
+        INSIDE ``session.update``), snapshot cadence, ticket resolution.
+        A failed apply aborts the epoch's WAL record so recovery never
+        replays a batch the live run rejected."""
+        t0 = time.perf_counter()
+        faults_before = len(faults.injected())
+        logged = False
+        try:
+            faults.fire("pool.apply")
+            if t.durability is not None and t.durable:
+                epoch = self._wal_log(t, prep.raw)
+                logged = epoch is not None
+                if logged and self.on_logged is not None:
                     self.on_logged(t.name, epoch)
             res = t.session.update(prepared=prep)
-            if t.durability is not None:
-                t.durability.maybe_snapshot()
+            if t.durability is not None and t.durable:
+                try:
+                    t.durability.maybe_snapshot()
+                except Exception:
+                    # the epoch is already durable in the WAL; a failed
+                    # snapshot only skips the cadence, never the commit
+                    with self._cv:
+                        t.stats.wal_errors += 1
         except Exception as e:
-            with self._cv:
-                t.stats.failed += len(tickets)
-                self._inflight -= len(tickets)
-                self._cv.notify_all()
-            for ticket in tickets:
-                ticket._resolve(error=e)
+            if logged:
+                try:
+                    t.durability.wal.abort_last()
+                except WalError:
+                    pass
+            self._sync_robustness(t, faults_before)
+            self._fail_group(t, tickets, e)
             return
         ms = (time.perf_counter() - t0) * 1e3
+        self._sync_robustness(t, faults_before)
         with self._cv:
+            t.consecutive_failures = 0
             t.stats.epochs += 1
             t.stats.retired += len(tickets)
             t.stats.coalesced_away += len(tickets) - 1

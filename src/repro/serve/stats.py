@@ -51,6 +51,20 @@ class TenantStats:
     snapshots: int = 0
     replayed: int = 0
     prewarm_compiles: int = 0
+    # -- robustness counters (DESIGN.md §10).  ``escalations`` counts
+    # capacity-rung bumps the engines made mid-serve; ``replays`` the
+    # epochs transparently re-run after one; ``escalation_compiles`` the
+    # jit traces those re-prewarms cost (excluded from the zero-compile
+    # serving gate).  ``wal_errors`` counts append attempts that failed
+    # and were retried; ``wal_degraded`` latches once retries were
+    # exhausted and the tenant now serves WITHOUT durability.
+    escalations: int = 0
+    replays: int = 0
+    escalation_compiles: int = 0
+    wal_errors: int = 0
+    wal_degraded: bool = False
+    quarantined: bool = False
+    faults_injected: int = 0
     prep_ms: List[float] = dataclasses.field(default_factory=list)
     apply_ms: List[float] = dataclasses.field(default_factory=list)
 
@@ -61,7 +75,9 @@ class TenantStats:
         d = {f: getattr(self, f) for f in
              ("name", "submitted", "retired", "shed", "failed", "epochs",
               "coalesced_away", "queue_depth", "snapshots", "replayed",
-              "prewarm_compiles")}
+              "prewarm_compiles", "escalations", "replays",
+              "escalation_compiles", "wal_errors", "wal_degraded",
+              "quarantined", "faults_injected")}
         d["latency_ms"] = self.latency()
         d["prep_ms_p50"] = float(np.median(self.prep_ms)) \
             if self.prep_ms else 0.0
@@ -99,6 +115,18 @@ class ServeStats:
             "latency_ms": percentiles(all_lat),
             "prewarm_compiles": self.prewarm_compiles,
             "serve_compiles": self.serve_compiles,
+            "escalations": sum(t.escalations for t in self.tenants.values()),
+            "replays": sum(t.replays for t in self.tenants.values()),
+            "escalation_compiles": sum(
+                t.escalation_compiles for t in self.tenants.values()),
+            "failed": sum(t.failed for t in self.tenants.values()),
+            "wal_errors": sum(t.wal_errors for t in self.tenants.values()),
+            "wal_degraded": sum(
+                1 for t in self.tenants.values() if t.wal_degraded),
+            "quarantined": sum(
+                1 for t in self.tenants.values() if t.quarantined),
+            "faults_injected": sum(
+                t.faults_injected for t in self.tenants.values()),
         }
 
     def render(self) -> str:
@@ -113,13 +141,32 @@ class ServeStats:
             f"{lat['p99_p50_ratio']:.1f}x); compile events: "
             f"{self.prewarm_compiles} admission + {self.serve_compiles} "
             "serving"]
+        if (agg["escalations"] or agg["failed"] or agg["wal_errors"]
+                or agg["quarantined"] or agg["faults_injected"]):
+            lines.append(
+                f"robustness: {agg['escalations']} escalations / "
+                f"{agg['replays']} replays "
+                f"({agg['escalation_compiles']} compiles), "
+                f"{agg['failed']} failed batches, {agg['wal_errors']} WAL "
+                f"errors ({agg['wal_degraded']} degraded tenants), "
+                f"{agg['quarantined']} quarantined, "
+                f"{agg['faults_injected']} faults injected")
         for name in sorted(self.tenants):
             t = self.tenants[name]
             tl = t.latency()
+            flags = ""
+            if t.escalations or t.failed or t.wal_errors:
+                flags = (f"; {t.escalations} escalations/"
+                         f"{t.replays} replays, {t.failed} failed, "
+                         f"{t.wal_errors} wal_errors")
+            if t.wal_degraded:
+                flags += " [NON-DURABLE]"
+            if t.quarantined:
+                flags += " [QUARANTINED]"
             lines.append(
                 f"  {name}: {t.epochs} epochs / {t.retired} batches "
                 f"({t.coalesced_away} coalesced, {t.shed} shed, depth "
                 f"{t.queue_depth}); apply p50 {tl['p50']:.1f} ms p99 "
                 f"{tl['p99']:.1f} ms; {t.snapshots} snapshots, "
-                f"{t.replayed} replayed")
+                f"{t.replayed} replayed" + flags)
         return "\n".join(lines)

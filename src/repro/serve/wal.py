@@ -24,10 +24,14 @@ from __future__ import annotations
 import base64
 import json
 import os
+import sys
 import zlib
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
+
+from repro import faults
+from repro.errors import SnapshotError, WalError
 
 Batches = Dict[str, Tuple[np.ndarray, np.ndarray]]
 
@@ -42,6 +46,7 @@ class WriteAheadLog:
         if parent:
             os.makedirs(parent, exist_ok=True)
         self._f = open(path, "ab")
+        self._last_offset: Optional[int] = None
 
     @staticmethod
     def _encode(epoch: int, batches: Batches) -> bytes:
@@ -60,11 +65,44 @@ class WriteAheadLog:
 
     def append(self, epoch: int, batches: Batches) -> None:
         """Durably log one epoch's raw batches (fsync'd by default) —
-        called BEFORE the device applies them."""
-        self._f.write(self._encode(epoch, batches))
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
+        called BEFORE the device applies them.
+
+        Raises :class:`WalError` on any I/O failure; the byte offset at
+        entry is remembered so ``abort_last`` can truncate away a record
+        whose epoch never applied (otherwise recovery would replay it).
+        """
+        try:
+            # record the offset BEFORE the fault point: a failed append
+            # must abort back to this record's start, never the previous
+            self._last_offset = self._f.tell()
+            faults.fire("wal.append")
+            self._f.write(self._encode(epoch, batches))
+            self._f.flush()
+            faults.fire("wal.fsync")
+            if self.fsync:
+                os.fsync(self._f.fileno())
+        except WalError:
+            raise
+        except (OSError, faults.FaultInjected) as exc:
+            raise WalError(f"WAL append failed for epoch {epoch}: {exc}") \
+                from exc
+
+    def abort_last(self) -> bool:
+        """Truncate the file back to just before the last ``append`` —
+        used when the device apply of that epoch failed for good, so a
+        later recovery does not replay a batch the live run rejected."""
+        if self._last_offset is None:
+            return False
+        off, self._last_offset = self._last_offset, None
+        try:
+            self._f.flush()
+            self._f.truncate(off)
+            self._f.seek(off)
+            if self.fsync:
+                os.fsync(self._f.fileno())
+        except OSError as exc:
+            raise WalError(f"WAL abort_last failed: {exc}") from exc
+        return True
 
     @staticmethod
     def _decode(line: bytes) -> Optional[Tuple[int, Batches]]:
@@ -124,6 +162,48 @@ class WriteAheadLog:
     def num_records(self) -> int:
         return sum(1 for _ in self.replay())
 
+    @classmethod
+    def verify(cls, path: str) -> Dict[str, object]:
+        """Classify a WAL file without mutating it.
+
+        Returns a dict with ``status`` one of:
+
+        - ``"clean"``       — every line decodes and CRC-checks;
+        - ``"torn_tail"``   — exactly the LAST line is bad (the expected
+          crash-mid-append shape; replay loses only that epoch);
+        - ``"corrupt_midfile"`` — a bad line is followed by more lines.
+          Replay still stops at the first bad record (the suffix may
+          depend on state from the lost record), but this shape means
+          real data loss beyond a torn tail, so recovery reports it.
+
+        Plus ``records`` (count of valid prefix records), ``lost``
+        (lines after the first bad one, incl. it), and ``first_epoch``/
+        ``last_epoch`` of the valid prefix (None when empty).
+        """
+        out: Dict[str, object] = {
+            "path": path, "status": "clean", "records": 0,
+            "lost": 0, "first_epoch": None, "last_epoch": None}
+        if not os.path.exists(path):
+            return out
+        lines = []
+        with open(path, "rb") as f:
+            lines = f.readlines()
+        bad_at = None
+        for i, line in enumerate(lines):
+            rec = cls._decode(line)
+            if rec is None:
+                bad_at = i
+                break
+            out["records"] = int(out["records"]) + 1
+            if out["first_epoch"] is None:
+                out["first_epoch"] = rec[0]
+            out["last_epoch"] = rec[0]
+        if bad_at is not None:
+            out["lost"] = len(lines) - bad_at
+            out["status"] = ("torn_tail" if bad_at == len(lines) - 1
+                             else "corrupt_midfile")
+        return out
+
     def close(self) -> None:
         if not self._f.closed:
             self._f.close()
@@ -160,10 +240,19 @@ class Durability:
         self.snapshots = 0
         self.replayed = 0
         self._last_snapshot_epoch = -1
+        self.wal_report: Optional[Dict[str, object]] = None
 
     def recover(self) -> bool:
         """Restore snapshot + replay WAL onto ``self.session``; returns
-        True when any durable state was recovered."""
+        True when any durable state was recovered.
+
+        The WAL is ``verify``-classified first: a torn tail is the
+        expected crash shape (silently dropped — that epoch never
+        returned to its client); mid-file corruption is remembered in
+        ``self.wal_report`` so callers can surface the loss, and replay
+        still stops at the first bad record.
+        """
+        self.wal_report = WriteAheadLog.verify(self.wal.path)
         got = self.manager.restore_latest_raw()
         if got is not None:
             leaves, manifest = got
@@ -174,7 +263,7 @@ class Durability:
             if epoch <= base:
                 continue  # already inside the snapshot
             if epoch != self.session.epoch + 1:
-                raise IOError(
+                raise WalError(
                     f"WAL gap: next record is epoch {epoch} but the "
                     f"session is at {self.session.epoch}")
             self.session.update(batches)
@@ -194,8 +283,15 @@ class Durability:
                         and epoch % self.snapshot_every == 0)
         if not due or epoch == self._last_snapshot_epoch:
             return False
-        leaves, meta = self.session.snapshot()
-        self.manager.save(leaves, step=epoch, extra=meta)
+        try:
+            faults.fire("snapshot.write")
+            leaves, meta = self.session.snapshot()
+            self.manager.save(leaves, step=epoch, extra=meta)
+        except SnapshotError:
+            raise
+        except (OSError, faults.FaultInjected) as exc:
+            raise SnapshotError(
+                f"snapshot at epoch {epoch} failed: {exc}") from exc
         self.wal.truncate_through(epoch)
         self._last_snapshot_epoch = epoch
         self.snapshots += 1
@@ -203,3 +299,24 @@ class Durability:
 
     def close(self) -> None:
         self.wal.close()
+
+
+def main(argv=None) -> int:
+    """``python -m repro.serve.wal verify <dir-or-file>`` — classify a
+    WAL (clean / torn_tail / corrupt_midfile).  Exit 0 for clean or a
+    torn tail (the tolerated crash shape), 2 for mid-file corruption."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 2 or argv[0] != "verify":
+        print("usage: python -m repro.serve.wal verify <dir-or-file>",
+              file=sys.stderr)
+        return 64
+    path = argv[1]
+    if os.path.isdir(path):
+        path = os.path.join(path, "wal.log")
+    rep = WriteAheadLog.verify(path)
+    print(json.dumps(rep, sort_keys=True))
+    return 2 if rep["status"] == "corrupt_midfile" else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

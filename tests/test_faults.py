@@ -1,0 +1,493 @@
+"""Robustness suite (DESIGN.md §10): typed overflow errors, the capacity
+escalate-and-replay loop, atomic commit/rollback under injected faults,
+WAL hardening (abort/verify/degrade) and pool-level quarantine.
+
+Everything state-changing is differential: after any recovered failure the
+engine/store/pool must be BIT-EXACT with a run that never failed — the
+signed-tuple oracle (``delta_oracle``) and the reference live-set model
+(``apply_net``) are the ground truth, as in test_delta_stream.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import query as Q
+from repro.core.bigjoin import BigJoinConfig
+from repro.core.capacity import Ratchet
+from repro.core.delta import DeltaBigJoin, delta_oracle
+from repro.errors import (OVF_OUT, OVF_QUEUE, OVF_ROUTE, OVF_SEED,
+                          CapacityOverflow, FaultInjected, ReproError,
+                          SnapshotError, WalError, overflow_kinds)
+
+from tests.test_delta import canon
+from tests.test_delta_stream import (_device_count, _mesh, _start_edges,
+                                     apply_net)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# typed errors + overflow bitmask
+# ---------------------------------------------------------------------------
+
+def test_overflow_kinds_and_error_types():
+    assert set(overflow_kinds(OVF_OUT)) == {"out"}
+    assert set(overflow_kinds(OVF_OUT | OVF_ROUTE)) == {"out", "route"}
+    assert set(overflow_kinds(OVF_QUEUE | OVF_SEED)) == {"queue", "seed"}
+    assert not overflow_kinds(0)
+    exc = CapacityOverflow(OVF_OUT | OVF_QUEUE, where="here", detail="d")
+    assert exc.mask == (OVF_OUT | OVF_QUEUE)
+    assert set(exc.kinds) == {"out", "queue"}
+    assert "here" in str(exc) and "out" in str(exc)
+    # back-compat: callers catching RuntimeError keep working
+    for cls in (CapacityOverflow, WalError, SnapshotError, FaultInjected):
+        assert issubclass(cls, ReproError) and issubclass(cls, RuntimeError)
+
+
+def test_ratchet_escalate_monotone():
+    r = Ratchet()
+    first = r.escalate(("cap", "out", "q"), floor=24)
+    assert first > 24
+    second = r.escalate(("cap", "out", "q"), floor=24)
+    assert second > first
+    assert r.peek(("cap", "out", "q")) == second
+    # a later smaller floor never shrinks the mark
+    assert r.escalate(("cap", "out", "q"), floor=4) > second
+
+
+# ---------------------------------------------------------------------------
+# fault registry
+# ---------------------------------------------------------------------------
+
+def test_faults_parse_install_fire():
+    sched = faults.parse_spec("wal.fsync@7,store.commit.fold@3-5,"
+                              "pool.apply@*")
+    assert sched["wal.fsync"] == {7}
+    assert sched["store.commit.fold"] == {3, 4, 5}
+    assert sched["pool.apply"] == {faults.EVERY}
+
+    faults.install({"pool.prep": {2}})
+    assert faults.active()
+    faults.fire("pool.prep")  # hit 1: clean
+    with pytest.raises(FaultInjected) as ei:
+        faults.fire("pool.prep")  # hit 2: scheduled
+    assert ei.value.point == "pool.prep" and ei.value.hit == 2
+    faults.fire("pool.prep")  # hit 3: clean again
+    assert faults.counts()["pool.prep"] == 3
+    assert faults.injected() == [("pool.prep", 2)]
+
+    with faults.disabled():  # oracle paths run fault-free
+        faults.install({"pool.prep": {4}})
+        faults.fire("pool.prep")
+    faults.clear()
+    assert not faults.active()
+
+
+def test_random_schedule_deterministic():
+    a = faults.random_schedule(11, rate=0.1)
+    b = faults.random_schedule(11, rate=0.1)
+    c = faults.random_schedule(12, rate=0.1)
+    assert a == b
+    assert a != c
+    assert all(p in faults.POINTS for p in a)
+
+
+# ---------------------------------------------------------------------------
+# escalate-and-replay: undersized rungs must transparently grow, and the
+# replayed epoch must stay bit-exact with the recompute oracle
+# ---------------------------------------------------------------------------
+
+def _zipf_batch(rng, nv, live, size, a=1.4):
+    """Insert-heavy zipf batch: hot endpoints pile work onto one vertex
+    (and, distributed, one worker) — the adversarial skew regime."""
+    u = (rng.zipf(a, size) % nv).astype(np.int32)
+    v = rng.integers(0, nv, size).astype(np.int32)
+    keep = u != v
+    rows = [np.stack([u[keep], v[keep]], 1)]
+    ws = [np.ones(int(keep.sum()), np.int32)]
+    n_del = min(size // 4, live.shape[0])
+    if n_del:
+        rows.append(live[rng.choice(live.shape[0], n_del, replace=False)])
+        ws.append(-np.ones(n_del, np.int32))
+    return np.concatenate(rows), np.concatenate(ws)
+
+
+def _drive_exact(q, engine, rng, nv, n_batches, size):
+    cur = engine.edges.copy()
+    for step in range(n_batches):
+        upd, w = _zipf_batch(rng, nv, cur, size)
+        res = engine.apply(upd, w)
+        after = apply_net(cur, upd, w)
+        np.testing.assert_array_equal(engine.edges, after)
+        ot, ow = delta_oracle(q, cur, after)
+        assert canon(res.tuples, res.weights) == canon(ot, ow), \
+            f"epoch {step}: signed tuple mismatch after escalation"
+        cur = after
+
+
+def test_local_escalate_replay_zipf_exact():
+    q = Q.triangle()
+    nv = 40
+    edges = _start_edges(nv, 150, 3)
+    # deliberately tiny rungs: the zipf stream MUST overflow them
+    cfg = BigJoinConfig(batch=16, seed_chunk=16, out_capacity=4)
+    engine = DeltaBigJoin(q, edges, cfg=cfg)
+    _drive_exact(q, engine, np.random.default_rng(5), nv,
+                 n_batches=8, size=24)
+    st = engine.store.stats
+    assert st.escalations >= 1, "tiny rungs never overflowed: not a test"
+    assert st.replays >= 1
+    assert engine.cfg.out_capacity > 4
+
+
+def test_local_escalation_bounded():
+    """With escalation disabled the same overflow surfaces as a TYPED
+    error naming the buffer — no silent truncation, no bare RuntimeError."""
+    q = Q.triangle()
+    nv = 40
+    edges = _start_edges(nv, 150, 3)
+    cfg = BigJoinConfig(batch=16, seed_chunk=16, out_capacity=4)
+    engine = DeltaBigJoin(q, edges, cfg=cfg)
+    engine.MAX_ESCALATIONS = 0
+    rng = np.random.default_rng(5)
+    with pytest.raises(CapacityOverflow) as ei:
+        for _ in range(8):
+            upd, w = _zipf_batch(rng, nv, engine.edges.copy(), 24)
+            engine.apply(upd, w)
+    assert ei.value.kinds, "overflow must name at least one buffer"
+
+
+@pytest.mark.parametrize("w", [2, 4])
+def test_mesh_escalate_replay_zipf_exact(w):
+    if _device_count() < w:
+        pytest.skip(f"needs {w} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    from repro.core.bigjoin import BigJoinConfig as BJC
+    from repro.core.distributed import DistConfig, DistDeltaBigJoin
+    q = Q.triangle()
+    nv = 40
+    edges = _start_edges(nv, 150, 3)
+    base = BJC(batch=16, seed_chunk=16, out_capacity=4)
+    dcfg = DistConfig(base, w, route_capacity=8)
+    engine = DistDeltaBigJoin(q, edges, mesh=_mesh(w), dcfg=dcfg)
+    _drive_exact(q, engine, np.random.default_rng(7), nv,
+                 n_batches=6, size=32)
+    assert engine.store.stats.escalations >= 1, \
+        "tiny mesh rungs never overflowed: not a test"
+
+
+def test_route_overflow_is_loud_not_silent():
+    """Satellite regression: a seed whose per-peer route slot overflows
+    must surface as OVF_ROUTE — the old behavior dropped the seed's
+    reply (``ok=False``) and silently undercounted.  Exercised through
+    the one plan shape with seed membership filters: an atom contained
+    in the seed prefix (tri(a,b,c) join edge(a,b), seeded by tri)."""
+    if _device_count() < 4:
+        pytest.skip("needs 4 devices")
+    from repro.core.bigjoin import BigJoinConfig as BJC
+    from repro.core.distributed import DistConfig, distributed_join
+    from repro.core.generic_join import generic_join
+    from repro.core.plan import make_plan
+
+    q = Q.Query("tri-edge", 3, (Q.Atom("tri", (0, 1, 2)),
+                                Q.Atom("edge", (0, 1))))
+    rng = np.random.default_rng(0)
+    # every tri shares a=0 and has a DISTINCT b (so request aggregation
+    # cannot dedup them): the edge filter keyed on (a) routes EVERY
+    # worker's whole seed chunk to ONE owner — far past the per-peer
+    # route slots
+    n = 200
+    tri = np.stack(
+        [np.zeros(n, np.int32),
+         np.arange(1, n + 1, dtype=np.int32),
+         (n + 1 + (np.arange(n) % 60)).astype(np.int32)], 1)
+    edge = np.unique(np.concatenate(
+        [np.stack([np.zeros(n // 2, np.int32),
+                   np.arange(1, n // 2 + 1, dtype=np.int32)], 1),
+         rng.integers(0, n, (100, 2)).astype(np.int32)]), axis=0)
+    rels = {"tri": tri, "edge": edge}
+    plan = make_plan(q, attr_order=(0, 1, 2), seed_atom=0, seed_width=3)
+    assert plan.seed_filters, "plan must carry a seed membership filter"
+
+    base = BJC(batch=256, mode="count")
+    with pytest.raises(CapacityOverflow) as ei:
+        distributed_join(plan, rels,
+                         cfg=DistConfig(base, 4, route_capacity=4))
+    assert "route" in ei.value.kinds
+
+    # with adequate route slots the same join completes and matches the
+    # serial oracle — proving the overflow above was real work, not noise
+    _, ref_count = generic_join(q, rels, plan=plan,
+                                enumerate_results=False)
+    res = distributed_join(plan, rels,
+                           cfg=DistConfig(base, 4, route_capacity=256))
+    assert res.count == ref_count
+
+
+# ---------------------------------------------------------------------------
+# atomic commit: a fault BETWEEN commit folds must roll back to a store
+# bit-identical with the pre-epoch snapshot
+# ---------------------------------------------------------------------------
+
+def _snap_equal(a, b):
+    la, ma = a
+    lb, mb = b
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        if np.asarray(x).shape != np.asarray(y).shape or \
+                not np.array_equal(np.asarray(x), np.asarray(y)):
+            return False
+    ka = {k: v for k, v in ma.items() if k != "stats"}
+    kb = {k: v for k, v in mb.items() if k != "stats"}
+    return ka == kb
+
+
+def test_commit_fault_rolls_back_bit_identical():
+    q = Q.triangle()
+    nv = 30
+    edges = _start_edges(nv, 120, 1)
+    engine = DeltaBigJoin(q, edges, cfg=BigJoinConfig(
+        batch=64, seed_chunk=64, out_capacity=1 << 12))
+    rng = np.random.default_rng(2)
+    upd1, w1 = _zipf_batch(rng, nv, engine.edges.copy(), 16)
+    engine.apply(upd1, w1)
+    pre = engine.store.snapshot()
+    pre_edges = engine.edges.copy()
+
+    upd2, w2 = _zipf_batch(rng, nv, engine.edges.copy(), 16)
+    faults.install({"store.commit.fold": {2}})
+    with pytest.raises(FaultInjected):
+        engine.apply(upd2, w2)
+    engine.store.rollback()
+    faults.clear()
+
+    post = engine.store.snapshot()
+    assert _snap_equal(pre, post), \
+        "mid-commit fault left partial state after rollback"
+    np.testing.assert_array_equal(engine.edges, pre_edges)
+    assert engine.store.stats.rollbacks >= 1
+
+    # the SAME batch replays cleanly and matches the oracle
+    cur = engine.edges.copy()
+    res = engine.apply(upd2, w2)
+    after = apply_net(cur, upd2, w2)
+    ot, ow = delta_oracle(q, cur, after)
+    assert canon(res.tuples, res.weights) == canon(ot, ow)
+
+
+def test_session_update_rolls_back_on_fault(tmp_path):
+    """GraphSession.update is transactional end-to-end: a failed epoch
+    leaves epoch counter, live set and store untouched; the retry
+    succeeds and matches the never-failed twin session."""
+    from repro.api import GraphSession
+    from repro.data.synthetic import uniform_graph
+    g = uniform_graph(24, 100, 3)
+    s = GraphSession(g, local=True)
+    s.register("triangle")
+    twin = GraphSession(g, local=True)
+    twin.register("triangle")
+
+    rng = np.random.default_rng(4)
+    batches = [_zipf_batch(rng, 24, np.asarray(s.edges), 12)
+               for _ in range(4)]
+    s.update(*batches[0])
+    twin.update(*batches[0])
+
+    faults.install({"store.normalize": {1}})  # fails s's NEXT update only
+    epoch_before = s.epoch
+    with pytest.raises(FaultInjected):
+        s.update(*batches[1])
+    faults.clear()
+    assert s.epoch == epoch_before
+    for upd, w in batches[1:]:
+        rs = s.update(upd, w)
+        rt = twin.update(upd, w)
+        dq, dt = rs.deltas["triangle"], rt.deltas["triangle"]
+        assert canon(dq.tuples, dq.weights) == canon(dt.tuples, dt.weights)
+    np.testing.assert_array_equal(np.asarray(s.edges),
+                                  np.asarray(twin.edges))
+    assert s.epoch == twin.epoch
+
+
+# ---------------------------------------------------------------------------
+# WAL hardening
+# ---------------------------------------------------------------------------
+
+def _mk_batches(k):
+    return {"edge": (np.full((2, 2), k, np.int32), np.ones(2, np.int32))}
+
+
+def test_wal_abort_last_and_verify(tmp_path):
+    from repro.serve.wal import WriteAheadLog
+    p = str(tmp_path / "wal.log")
+    w = WriteAheadLog(p, fsync=False)
+    for e in (1, 2, 3):
+        w.append(e, _mk_batches(e))
+    assert WriteAheadLog.verify(p)["status"] == "clean"
+
+    assert w.abort_last()          # epoch 3's apply failed: drop it
+    assert not w.abort_last()      # idempotent: nothing staged
+    rep = WriteAheadLog.verify(p)
+    assert rep["status"] == "clean" and rep["last_epoch"] == 2
+    w.append(3, _mk_batches(3))    # the retry re-appends cleanly
+    assert [e for e, _ in w.replay()] == [1, 2, 3]
+    w.close()
+
+
+def test_wal_verify_classification(tmp_path):
+    from repro.serve.wal import WriteAheadLog
+    p = str(tmp_path / "wal.log")
+    w = WriteAheadLog(p, fsync=False)
+    for e in (1, 2, 3):
+        w.append(e, _mk_batches(e))
+    w.close()
+
+    with open(p, "ab") as f:       # torn tail: crash mid-append
+        f.write(b'{"b": "{\\"e\\": 9')
+    rep = WriteAheadLog.verify(p)
+    assert rep["status"] == "torn_tail"
+    assert rep["records"] == 3 and rep["lost"] == 1
+
+    lines = open(p, "rb").read().splitlines(keepends=True)
+    lines[1] = lines[1][:22] + b"X" + lines[1][23:]  # corrupt record 2
+    with open(p, "wb") as f:
+        f.write(b"".join(lines))
+    rep = WriteAheadLog.verify(p)
+    assert rep["status"] == "corrupt_midfile"
+    assert rep["records"] == 1 and rep["lost"] == 3
+    # replay still stops at the first bad record — never resyncs past it
+    assert [e for e, _ in WriteAheadLog(p, fsync=False).replay()] == [1]
+
+
+def test_wal_verify_cli(tmp_path):
+    from repro.serve.wal import WriteAheadLog
+    p = str(tmp_path / "wal.log")
+    w = WriteAheadLog(p, fsync=False)
+    w.append(1, _mk_batches(1))
+    w.close()
+
+    env = {**os.environ, "PYTHONPATH": SRC}
+    r = subprocess.run([sys.executable, "-m", "repro.serve.wal",
+                        "verify", str(tmp_path)],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0 and '"clean"' in r.stdout
+
+    good = open(p, "rb").read()
+    bad = good[:22] + b"X" + good[23:]
+    with open(p, "ab") as f:
+        f.write(bad + good)        # bad line followed by a good one
+    r = subprocess.run([sys.executable, "-m", "repro.serve.wal",
+                        "verify", p],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 2 and '"corrupt_midfile"' in r.stdout
+
+
+def test_wal_append_fault_is_typed(tmp_path):
+    from repro.serve.wal import WriteAheadLog
+    p = str(tmp_path / "wal.log")
+    w = WriteAheadLog(p, fsync=False)
+    w.append(1, _mk_batches(1))
+    faults.install({"wal.append": {1}})  # install resets hit counters
+    with pytest.raises(WalError):
+        w.append(2, _mk_batches(2))
+    faults.clear()
+    w.abort_last()                 # roll off any partial bytes
+    w.append(2, _mk_batches(2))
+    assert [e for e, _ in w.replay()] == [1, 2]
+    w.close()
+
+
+# ---------------------------------------------------------------------------
+# pool: WAL degrade + quarantine (host-local sessions, synchronous pump)
+# ---------------------------------------------------------------------------
+
+def _mini_pool(tmp_path, **kw):
+    from repro.data.synthetic import uniform_graph
+    from repro.serve import SessionPool
+    pool = SessionPool(local=True, pipeline=False, prewarm=False,
+                       durable_dir=str(tmp_path / "dur"), fsync=False,
+                       **kw)
+    h = pool.admit("t0", uniform_graph(20, 80, 0), queries=("triangle",),
+                   coalesce=1)
+    return pool, h
+
+
+def test_pool_wal_degrade_serves_on(tmp_path):
+    pool, h = _mini_pool(tmp_path, wal_retries=2, wal_backoff_s=0.0)
+    rng = np.random.default_rng(0)
+    live = np.asarray(h.session.edges)
+    faults.install("wal.append@*")
+    for _ in range(3):
+        upd, w = _zipf_batch(rng, 20, live, 8)
+        tk = h.submit(upd, w)
+        pool.pump()
+        res = tk.result(timeout=60)     # epochs still commit, non-durable
+        live = res.advance(live)
+    faults.clear()
+    st = h.stats
+    assert st.wal_degraded and st.wal_errors >= 3
+    assert st.retired == 3 and st.failed == 0
+    np.testing.assert_array_equal(np.asarray(h.session.edges), live)
+    agg = pool.stats().aggregate()
+    assert agg["wal_degraded"] == 1
+    pool.close()
+
+
+def test_pool_quarantine_after_consecutive_failures(tmp_path):
+    pool, h = _mini_pool(tmp_path, quarantine_after=3)
+    rng = np.random.default_rng(1)
+    live = np.asarray(h.session.edges)
+    batches = [_zipf_batch(rng, 20, live, 6) for _ in range(5)]
+    faults.install("store.normalize@*")
+    tickets = [h.submit(u, w) for u, w in batches]
+    pool.pump()
+    faults.clear()
+    # first 3 fail on the fault; the last 2 are failed by the fence
+    for tk in tickets:
+        with pytest.raises((FaultInjected, RuntimeError)):
+            tk.result(timeout=60)
+    assert h.stats.quarantined and h.stats.failed == 5
+    with pytest.raises(RuntimeError, match="quarantined"):
+        h.submit(*batches[0])
+    agg = pool.stats().aggregate()
+    assert agg["quarantined"] == 1 and agg["failed"] == 5
+    pool.close(drain=False)
+
+
+def test_pool_apply_fault_aborts_wal_record(tmp_path):
+    """A failed apply must leave NO WAL record behind — recovery replay
+    must not re-apply a batch the live run rejected."""
+    from repro.serve.wal import WriteAheadLog
+    pool, h = _mini_pool(tmp_path)
+    rng = np.random.default_rng(2)
+    live = np.asarray(h.session.edges)
+    upd, w = _zipf_batch(rng, 20, live, 6)
+    tk = h.submit(upd, w)
+    pool.pump()
+    tk.result(timeout=60)
+
+    faults.install({"store.normalize": {1}})  # fail the NEXT apply only
+    upd2, w2 = _zipf_batch(rng, 20, live, 6)
+    tk2 = h.submit(upd2, w2)
+    pool.pump()
+    with pytest.raises(FaultInjected):
+        tk2.result(timeout=60)
+    faults.clear()
+
+    wal_path = str(tmp_path / "dur" / "t0" / "wal.log")
+    rep = WriteAheadLog.verify(wal_path)
+    assert rep["status"] == "clean" and rep["records"] == 1, \
+        "aborted epoch left a WAL record"
+    pool.close(drain=False)
