@@ -1,0 +1,164 @@
+"""Composite-key (2-word) kernel crossover sweep -> BENCH_composite_sweep.json.
+
+The PR-10 question, measured: at what probe-batch size B' does the
+composite-key Pallas path beat the pure-jnp fixed-depth searches, per
+kernel family (interpret mode off-TPU; numbers are comparable per-host):
+
+  member  — composite (hi, lo, val) membership probes: the 3-word-lex
+            two-level kernel vs ``csr.index_member``, B' sweep, for both
+            the narrow int32-hi (3-col) and the int64-pair (4-col) layout.
+  rank    — composite merge ranks (lt, le): the rank kernel vs the jnp
+            double search that drives every sorted-merge fold.
+  fold    — the per-relation commit fold: ONE fused pallas_call
+            (kernels/merge/fold.py) vs the five-stage jitted jnp chain,
+            per delta size — the per-epoch latency the serving path pays.
+
+Each family records the crossover: the smallest swept size at which the
+kernel path's throughput >= the jnp path's (None when the kernel never
+wins on this host — the JSON keeps the full curves either way).
+
+Run via ``python -m benchmarks.run --only composite_sweep`` (or directly).
+"""
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_composite_sweep.json")
+
+SWEEP_B = (256, 1024, 4096, 16384)
+SWEEP_DELTA = (64, 256, 1024)
+INDEX_N = 1 << 14
+
+
+def _composite_index(rng, n, nk, capacity=None):
+    from repro.core import csr
+    rows = rng.integers(0, 1 << 10, (n, nk + 1)).astype(np.int32)
+    return csr.build_index(rows, tuple(range(nk)), nk, capacity=capacity)
+
+
+def _probes(rng, B, nk):
+    import jax.numpy as jnp
+    from repro.core import csr
+    rows = rng.integers(0, 1 << 10, (B, nk + 1)).astype(np.int32)
+    qh, ql = csr.pack_key(tuple(rows[:, i] for i in range(nk)))
+    return jnp.asarray(qh), jnp.asarray(ql), jnp.asarray(rows[:, nk])
+
+
+def _crossover(curve):
+    for pt in curve:
+        if pt["kernel_qps"] >= pt["jnp_qps"]:
+            return pt["batch"]
+    return None
+
+
+def _bench_member(rec):
+    from repro.core import csr
+    from repro.kernels.intersect.ops import member as member_kernel
+    rec["member"] = {}
+    for nk in (3, 4):
+        rng = np.random.default_rng(nk)
+        idx = _composite_index(rng, INDEX_N, nk)
+        curve = []
+        for B in SWEEP_B:
+            qh, ql, qv = _probes(rng, B, nk)
+            t_j, m_j = timeit(lambda: np.asarray(
+                csr.index_member(idx, (qh, ql), qv)))
+            t_k, m_k = timeit(lambda: np.asarray(
+                member_kernel(idx.key, idx.val, idx.n, qh, qv,
+                              los=idx.lo, ql=ql)))
+            assert (m_j == m_k).all(), "composite member parity"
+            curve.append({"batch": B, "jnp_qps": B / t_j,
+                          "kernel_qps": B / t_k})
+        bp = _crossover(curve)
+        rec["member"][f"nk{nk}"] = {
+            "index_entries": int(idx.n), "hi_dtype": str(idx.key.dtype),
+            "curve": curve, "crossover_batch": bp}
+        row("composite_sweep", f"member_nk{nk}", 0.0,
+            f"B'={bp} ({'never' if bp is None else 'kernel wins'})")
+
+
+def _bench_rank(rec):
+    from repro.kernels.merge.merge import rank_counts
+    from repro.kernels.merge.ref import rank_ref
+    rec["rank"] = {}
+    for nk in (3, 4):
+        rng = np.random.default_rng(10 + nk)
+        idx = _composite_index(rng, INDEX_N, nk)
+        curve = []
+        for B in SWEEP_B:
+            qh, ql, qv = _probes(rng, B, nk)
+            t_j, rj = timeit(lambda: tuple(np.asarray(x) for x in rank_ref(
+                idx.key, idx.val, idx.n, qh, qv, lo=idx.lo, qlo=ql)))
+            t_k, rk = timeit(lambda: tuple(np.asarray(x) for x in
+                             rank_counts(idx.key, idx.val, idx.n, qh, qv,
+                                         interpret=True, lo=idx.lo,
+                                         qlo=ql)))
+            assert all((a == b).all() for a, b in zip(rj, rk))
+            curve.append({"batch": B, "jnp_qps": B / t_j,
+                          "kernel_qps": B / t_k})
+        bp = _crossover(curve)
+        rec["rank"][f"nk{nk}"] = {"curve": curve, "crossover_batch": bp}
+        row("composite_sweep", f"rank_nk{nk}", 0.0, f"B'={bp}")
+
+
+def _bench_fold(rec):
+    from repro.core import delta as D
+    rec["fold"] = {}
+    for nk in (3, 4):
+        rng = np.random.default_rng(20 + nk)
+        rows = np.unique(rng.integers(0, 1 << 8, (2048, nk)
+                                      ).astype(np.int32), axis=0)
+        ba = D._packed_index(rows, 0, nk, capacity=4096)
+        curve = []
+        for nd in SWEEP_DELTA:
+            def deltas():
+                d = np.unique(rng.integers(0, 1 << 8, (nd, nk)
+                                           ).astype(np.int32), axis=0)
+                return D._packed_index(d, 0, nk, capacity=max(nd, 64))
+            ci, cd, ui, ud = deltas(), deltas(), deltas(), deltas()
+            cap = 8192
+
+            def run(use_kernel):
+                # the undonated variant: timeit re-runs on the same buffers
+                out = D._commit_fold_safe(ba, ci, cd, ui, ud, cins_cap=cap,
+                                          cdel_cap=cap, sharded=False,
+                                          use_kernel=use_kernel)
+                return tuple(int(np.asarray(x.n)) for x in out)
+
+            t_j, nj = timeit(lambda: run(False))
+            t_k, nk_ = timeit(lambda: run(True))
+            assert nj == nk_, "fold parity"
+            curve.append({"delta": nd, "jnp_ms": t_j * 1e3,
+                          "kernel_ms": t_k * 1e3,
+                          "jnp_qps": nd / t_j, "kernel_qps": nd / t_k,
+                          "batch": nd})
+        bp = _crossover(curve)
+        rec["fold"][f"nk{nk}"] = {"base_entries": int(rows.shape[0]),
+                                  "curve": curve, "crossover_delta": bp}
+        row("composite_sweep", f"fold_nk{nk}", 0.0,
+            f"delta'={bp} "
+            f"jnp={curve[0]['jnp_ms']:.2f}ms "
+            f"kernel={curve[0]['kernel_ms']:.2f}ms @{SWEEP_DELTA[0]}")
+
+
+def main():
+    import jax
+    rec = {"bench": "composite_sweep",
+           "backend": jax.default_backend(),
+           "interpret_mode": jax.default_backend() != "tpu",
+           "index_entries": INDEX_N}
+    _bench_member(rec)
+    _bench_rank(rec)
+    _bench_fold(rec)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rec, f, indent=2)
+    row("composite_sweep", "json", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    main()

@@ -174,6 +174,25 @@ def render_multi_query(path):
               f"| {r['exact']} |")
 
 
+def render_composite_sweep(path):
+    """Render a BENCH_composite_sweep.json kernel-crossover record."""
+    rec = json.load(open(path))
+    print(f"backend: {rec.get('backend', '?')}  "
+          f"interpret: {rec.get('interpret_mode', '?')}  "
+          f"index n={rec.get('index_entries'):,}\n")
+    print("| family | layout | crossover B' | jnp @max B | kernel @max B |")
+    print("|" + "---|" * 5)
+    for fam in ("member", "rank", "fold"):
+        for nk, r in sorted(rec.get(fam, {}).items()):
+            last = r["curve"][-1]
+            bp = r.get("crossover_batch", r.get("crossover_delta"))
+            hi = r.get("hi_dtype")
+            print(f"| {fam} | {nk}{f' ({hi} hi)' if hi else ''} "
+                  f"| {bp if bp is not None else 'never (this host)'} "
+                  f"| {last['jnp_qps']:.0f} q/s "
+                  f"| {last['kernel_qps']:.0f} q/s |")
+
+
 def render_serve_load(path):
     """Render a BENCH_serve_load.json concurrent-serving record."""
     rec = json.load(open(path))
@@ -212,5 +231,7 @@ if __name__ == "__main__":
             render_epoch_latency(p)
         elif "BENCH_serve_load" in p:
             render_serve_load(p)
+        elif "BENCH_composite_sweep" in p:
+            render_composite_sweep(p)
         else:
             render(p)

@@ -14,13 +14,13 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: fig4,tab2_3,fig5,fig6,tab5,tab4,"
                     "intersect,delta_stream,multi_query,epoch_latency,"
-                    "nary_stream,serve_load")
+                    "nary_stream,serve_load,composite_sweep")
     args = ap.parse_args()
 
-    from benchmarks import (baseline_compare, batch_size, cost_table,
-                            delta_stream, epoch_latency, intersect_bench,
-                            multi_query, nary_stream, optimizations,
-                            scaling, serve_load, throughput)
+    from benchmarks import (baseline_compare, batch_size, composite_sweep,
+                            cost_table, delta_stream, epoch_latency,
+                            intersect_bench, multi_query, nary_stream,
+                            optimizations, scaling, serve_load, throughput)
     table = {
         "fig4": cost_table.main,
         "tab2_3": baseline_compare.main,
@@ -34,6 +34,8 @@ def main() -> None:
         "epoch_latency": epoch_latency.main,  # -> BENCH_epoch_latency.json
         "nary_stream": nary_stream.main,  # -> BENCH_nary_stream.json
         "serve_load": serve_load.main,  # -> BENCH_serve_load.json
+        "composite_sweep": composite_sweep.main,
+        # ^ -> BENCH_composite_sweep.json
     }
     picks = list(table) if args.only == "all" else args.only.split(",")
     print("table,name,us_per_call,derived")

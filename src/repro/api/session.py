@@ -302,6 +302,15 @@ class GraphSession:
         self.store._sync_compile_stats()
         return compilestats.since(snap)
 
+    def kernel_coverage(self) -> dict:
+        """Per-relation Pallas-dispatch evidence (``RegionStore.
+        kernel_coverage``): for each relation, the traced ``pallas_call``
+        count of the exact commit fold and probe the warm serving path
+        dispatches to.  The CI kernel-coverage gate asserts zero warm
+        compiles AND a fused (single-launch) fold on every composite
+        relation from this one dict."""
+        return self.store.kernel_coverage(self.update_batch)
+
     def query_by_name(self, name: str) -> QueryHandle:
         """Fetch a registered handle; registers the named motif on miss."""
         return self.handles.get(name) or self.register(name)

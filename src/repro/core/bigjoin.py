@@ -258,8 +258,7 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
         wweight = qu.weight[:W]
         valid = jnp.arange(W, dtype=jnp.int32) < qu.size
 
-        use_fused = cfg.use_kernel and \
-            all(len(b.key_attrs) <= 2 for b in lv.bindings)
+        use_fused = cfg.use_kernel
         if use_fused:
             from repro.kernels.intersect.ops import (default_interpret,
                                                      fused_fits)
@@ -267,12 +266,11 @@ def _level_branch(plan: Plan, cfg: BigJoinConfig, li: int):
                        for reg in (indices[b.index_id].pos
                                    + indices[b.index_id].neg)]
             # compiled path: drop to the jnp oracle when the level's regions
-            # cannot be VMEM-resident (DESIGN.md §3) or carry composite
-            # (hi, lo) keys the 1-word kernels don't speak, rather than
+            # (composite lo word tiles included — fused_fits counts their
+            # 8 B/slot) cannot be VMEM-resident (DESIGN.md §3), rather than
             # failing Mosaic
-            use_fused = all(r.lo is None for r in regions) and \
-                (default_interpret(cfg.kernel_interpret)
-                 or fused_fits(regions, B))
+            use_fused = (default_interpret(cfg.kernel_interpret)
+                         or fused_fits(regions, B))
         middle = middle_fused if use_fused else middle_jnp
         (cand, r, alive, allowed, consumed, n_proposed,
          n_isect) = middle(wprefix, wk, valid, indices)
@@ -369,8 +367,8 @@ def build_seed_step(plan: Plan, cfg: BigJoinConfig):
             idx = indices[b.index_id]
             qk = _binding_key(prefixes, bound, b.key_attrs, idx)
             qv = prefixes[:, bound.index(b.ext_attr)]
-            use_k = cfg.use_kernel and len(b.key_attrs) <= 2
-            alive = alive & idx.member(qk, qv, use_k, cfg.kernel_interpret)
+            alive = alive & idx.member(qk, qv, cfg.use_kernel,
+                                       cfg.kernel_interpret)
         for f in plan.seed_ineq:
             alive = alive & (prefixes[:, bound.index(f.lo)]
                              < prefixes[:, bound.index(f.hi)])

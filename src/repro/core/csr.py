@@ -58,9 +58,12 @@ class IndexData:
 
     With <= 2 bound columns the prefix packs into ``key`` alone (``lo`` is
     None).  3 or 4 bound columns use the generalized lexicographic composite
-    key: ``key = c0<<32|c1`` and ``lo = c2`` (3 cols) or ``lo = c2<<32|c3``
-    (4 cols); entries are lex-sorted by (key, lo, val) and every probe is a
-    fixed-depth two-word lex binary search (``lex_searchsorted_cols``).
+    key: ``key = c0`` and ``lo = c1<<32|c2`` (3 cols) or ``key = c0<<32|c1``
+    and ``lo = c2<<32|c3`` (4 cols); entries are lex-sorted by
+    (key, lo, val) and every probe is a fixed-depth two-word lex binary
+    search (``lex_searchsorted_cols``).  The 3-col split deliberately keeps
+    the hi word a SINGLE column so it stays eligible for the narrow (int32)
+    dtype — ``lo`` is always int64.
     """
 
     key: jax.Array
@@ -97,7 +100,9 @@ def pack_key(cols: Sequence) -> PackedKey:
 
     1 column  -> int64 key (may be narrowed to int32 by the index builders);
     2 columns -> ``c0<<32 | c1`` int64;
-    3/4 cols  -> the composite ``(hi, lo)`` int64 pair (see IndexData.lo).
+    3 columns -> the composite pair ``(c0, c1<<32|c2)`` — hi stays a single
+                 column so the builders may narrow it to int32;
+    4 columns -> the composite pair ``(c0<<32|c1, c2<<32|c3)``.
 
     THE one key-packing implementation — ``bigjoin._pack_cols``,
     ``generic_join``'s host indices, and the region stores all delegate
@@ -109,12 +114,12 @@ def pack_key(cols: Sequence) -> PackedKey:
         return cols[0].astype(xp.int64)
     if len(cols) == 2:
         return (cols[0].astype(xp.int64) << 32) | cols[1].astype(xp.int64)
-    hi = (cols[0].astype(xp.int64) << 32) | cols[1].astype(xp.int64)
     if len(cols) == 3:
-        return hi, cols[2].astype(xp.int64)
+        return cols[0].astype(xp.int64), ((cols[1].astype(xp.int64) << 32)
+                                          | cols[2].astype(xp.int64))
     if len(cols) == 4:
-        return hi, ((cols[2].astype(xp.int64) << 32)
-                    | cols[3].astype(xp.int64))
+        return ((cols[0].astype(xp.int64) << 32) | cols[1].astype(xp.int64),
+                (cols[2].astype(xp.int64) << 32) | cols[3].astype(xp.int64))
     raise ValueError(
         f"composite keys cover at most 4 int32 columns, got {len(cols)}")
 
@@ -130,12 +135,21 @@ def unpack_key(packed: PackedKey, num_cols: int) -> np.ndarray:
                          (p & M).astype(np.int32)], 1)
     hi, lo = (np.asarray(packed[0], np.int64), np.asarray(packed[1],
                                                           np.int64))
-    cols = [(hi >> 32).astype(np.int32), (hi & M).astype(np.int32)]
     if num_cols == 3:
-        cols.append(lo.astype(np.int32))
+        cols = [hi.astype(np.int32)]
     else:
-        cols.extend([(lo >> 32).astype(np.int32), (lo & M).astype(np.int32)])
+        cols = [(hi >> 32).astype(np.int32), (hi & M).astype(np.int32)]
+    cols.extend([(lo >> 32).astype(np.int32), (lo & M).astype(np.int32)])
     return np.stack(cols, 1)
+
+
+def single_word_hi(num_key_cols: int) -> bool:
+    """True when the packed hi word holds at most ONE bound column, i.e. a
+    single int32 id — the precondition for the narrow (int32) key dtype.
+    1 bound column packs into hi alone; 3 bound columns split (c0, c1<<32|c2)
+    so hi is again one column; 2/4 columns pack two ids into hi and need the
+    full 64 bits."""
+    return num_key_cols in (0, 1, 3)
 
 
 def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
@@ -164,10 +178,11 @@ def build_index(tuples: np.ndarray, key_pos: Tuple[int, ...], ext_pos: int,
         key, lo, val = kv[:, 0], None, kv[:, 1].astype(np.int32)
     n = key.shape[0]
     cap = round_capacity(max(int(capacity or n), n, 1))
-    # single-column keys fit int32 -> halve index bytes (perf: HBM traffic)
+    # single-column hi words fit int32 -> halve hi-word bytes (HBM traffic)
     if narrow is None:
-        narrow = len(key_pos) <= 1 and (n == 0 or key.max() < SENTINEL32)
-    narrow = narrow and lo is None
+        narrow = single_word_hi(len(key_pos)) and (n == 0
+                                                   or key.max() < SENTINEL32)
+    narrow = narrow and single_word_hi(len(key_pos))
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
     out_k = np.full(cap, sent, kdt)
     out_v = np.zeros(cap, np.int32)
@@ -277,9 +292,9 @@ def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
     cmax = int(counts.max()) if counts.size else 0
     cap = max(_pow2_capacity(cmax), round_capacity(int(capacity or 1)))
     if narrow is None:
-        narrow = len(key_pos) <= 1 and (key.size == 0
-                                        or key.max() < SENTINEL32)
-    narrow = narrow and klo is None
+        narrow = single_word_hi(len(key_pos)) and (key.size == 0
+                                                   or key.max() < SENTINEL32)
+    narrow = narrow and single_word_hi(len(key_pos))
     kdt, sent = (np.int32, SENTINEL32) if narrow else (np.int64, SENTINEL)
     out_k = np.full((w, cap), sent, kdt)
     out_v = np.zeros((w, cap), np.int32)
@@ -303,8 +318,11 @@ def build_sharded_index(tuples: np.ndarray, key_pos: Tuple[int, ...],
 
 def empty_index(capacity: int = 1, narrow: bool = True,
                 composite: bool = False) -> IndexData:
+    """Empty IndexData.  ``narrow`` applies to the hi word only (``lo`` is
+    always int64); composite indices may be narrow when the hi word is a
+    single column (the 3-col packing) — the caller decides, matching the
+    projection's build-time dtype."""
     cap = round_capacity(capacity)
-    narrow = narrow and not composite
     kdt, sent = (jnp.int32, SENTINEL32) if narrow else (jnp.int64, SENTINEL)
     return IndexData(jnp.full(cap, sent, kdt),
                      jnp.zeros(cap, jnp.int32),
@@ -398,8 +416,8 @@ def index_member(idx: IndexData, qkey: PackedKey, qval: jax.Array
     """Membership (qkey, qval) in the index, [B] bool — the pure-jnp oracle.
 
     Kernel routing happens one level up: ``VersionedIndex.signed_member``
-    fuses all regions into one Pallas launch; this stays the reference path
-    (and the ONLY path for composite keys, which the 1-word kernels skip).
+    fuses all regions — composite (hi, lo) keys included — into one Pallas
+    launch; this stays the bit-exact reference path.
     """
     qv = qval.astype(jnp.int32)
     if idx.lo is None:
@@ -440,11 +458,14 @@ def index_ranks(a: IndexData, qk: PackedKey, qv: jax.Array,
                 use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
     """(lt, le) int32 [B]: entries of ``a`` lexicographically < / <= each
     (qk[, qlo], qv) query.  ``use_kernel`` routes through the Pallas rank
-    kernel (`kernels/merge`), which stays 1-key-word — composite keys
-    always take the fixed-depth jnp searches."""
+    kernel (`kernels/merge`), composite (hi, lo) keys included — the jnp
+    fixed-depth searches stay the bit-exact reference path."""
     qv = qv.astype(jnp.int32)
     if a.lo is not None:
         qh, ql = qk
+        if use_kernel:
+            from repro.kernels.merge.ops import rank_lt_le
+            return rank_lt_le(a.key, a.val, a.n, qh, qv, lo=a.lo, qlo=ql)
         cols = (a.key, a.lo, a.val)
         qcols = (qh.astype(jnp.int64), ql.astype(jnp.int64), qv)
         return (lex_searchsorted_cols(cols, a.n, qcols, "left"),

@@ -100,8 +100,9 @@ class VersionedIndex:
     @staticmethod
     def _kernel_ok(interpret, regions) -> bool:
         from repro.kernels.intersect.ops import default_interpret, fused_fits
-        if any(r.lo is not None for r in regions):
-            return False  # composite keys: the 1-word kernels don't apply
+        composite = [r.lo is not None for r in regions]
+        if any(composite) and not all(composite):
+            return False  # mixed 1-word/2-word regions never share a launch
         return default_interpret(interpret) or fused_fits(regions)
 
     def signed_member(self, qkey: jax.Array, qval: jax.Array,
@@ -110,10 +111,11 @@ class VersionedIndex:
         """(membership, deletion) bits in ONE pass over all regions.
 
         With ``use_kernel`` this is a single fused ``pallas_call`` across
-        every positive and negative region (R launches collapse to 1); the
-        jnp path mirrors the same signed-weight reduction.  A compiled
-        (non-interpret) call whose regions exceed the VMEM budget falls
-        back to the jnp path rather than failing Mosaic compilation.
+        every positive and negative region (R launches collapse to 1) —
+        composite regions included, with ``qkey`` the (hi, lo) int64 probe
+        pair; the jnp path mirrors the same signed-weight reduction.  A
+        compiled (non-interpret) call whose regions exceed the VMEM budget
+        falls back to the jnp path rather than failing Mosaic compilation.
         """
         if use_kernel and self._kernel_ok(interpret, self.pos + self.neg):
             from repro.kernels.intersect.ops import signed_member

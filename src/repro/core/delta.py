@@ -82,15 +82,24 @@ Projection = Tuple[str, Tuple[int, ...], int]  # (rel, key_pos, ext_pos)
 STRICT_TRANSFERS = os.environ.get("REPRO_STRICT_TRANSFERS", "") not in ("",
                                                                         "0")
 
-# Merge-rank kernel routing for the fold inner loop: None = compiled Pallas
-# on TPU / pure jnp elsewhere; True/False force.  The sharded (vmapped)
-# folds always use the jnp path.
+# Merge/fold kernel routing for the commit path: None = ON everywhere
+# (compiled Pallas on TPU, interpret-mode Pallas — i.e. the same kernel
+# body lowered through XLA — on CPU, matching the intersect/extend ops);
+# True/False force.  REPRO_MERGE_KERNEL=0 disables from the environment.
+# The commit fold takes the single-launch fused kernel (kernels/merge/fold)
+# when its operands fit the VMEM budget, sharded meshes included (the
+# kernel grids over the worker axis); the compaction fold keeps the
+# rank-kernel-per-op chain, jnp when sharded (vmap-of-pallas is not a
+# supported production path).
 USE_MERGE_KERNEL: Optional[bool] = None
 
 
 def _merge_kernel_on() -> bool:
     if USE_MERGE_KERNEL is None:
-        return jax.default_backend() == "tpu"
+        env = os.environ.get("REPRO_MERGE_KERNEL", "")
+        if env != "":
+            return env not in ("0", "false", "off")
+        return True
     return bool(USE_MERGE_KERNEL)
 
 
@@ -316,15 +325,38 @@ def _commit_fold_impl(base: IndexData, cins: IndexData, cdel: IndexData,
     never alias a committed-rung output).  Exception: with the persistent
     compilation cache enabled donation is switched off entirely — see
     ``_COMMIT_DONATE`` above.
+
+    ``use_kernel`` routes the whole fold — both outputs — through ONE
+    fused ``pallas_call`` per relation (`kernels/merge/fold.py`): only the
+    delta-sized ``udel ∩ base`` probe stays a jnp search (its bit vector is
+    the kernel's ``in_ba`` input), so base never enters VMEM.  Folds the
+    fused kernel cannot serve (over-VMEM compiled calls) fall back to the
+    five-stage rank chain, bit-exactly.
     """
     compilestats.record("delta.commit_fold")
+    if use_kernel:
+        from repro.kernels.merge import fold as merge_fold
+        if merge_fold.commit_fold_ok(cins, cdel, uins, udel,
+                                     cins_cap, cdel_cap):
+            def in_ba_of(ba, ud):
+                lt, le = csr.index_ranks(ba, csr._qcols_of(ud), ud.val)
+                return (le > lt).astype(jnp.int32)
+
+            in_ba = (jax.vmap(in_ba_of)(base, udel) if sharded
+                     else in_ba_of(base, udel))
+            return merge_fold.commit_fold(
+                cins, cdel, uins, udel, in_ba,
+                cins_cap=cins_cap, cdel_cap=cdel_cap, sharded=sharded)
+    # the rank-kernel chain stays single-host only: under the sharded vmap
+    # each stage would relaunch per shard, which the fused path avoids
+    chain_k = use_kernel and not sharded
 
     def fold(ba, ci, cd, ui, ud):
-        kept = csr._select_core(ci, ud, ci.capacity, False, use_kernel)
-        fresh = csr._select_core(ui, cd, ui.capacity, False, use_kernel)
-        new_cins = csr._merge_core(kept, fresh, cins_cap, use_kernel)
-        dead = csr._select_core(ud, ba, ud.capacity, True, use_kernel)
-        new_cdel = csr._merge_core(cd, dead, cdel_cap, use_kernel)
+        kept = csr._select_core(ci, ud, ci.capacity, False, chain_k)
+        fresh = csr._select_core(ui, cd, ui.capacity, False, chain_k)
+        new_cins = csr._merge_core(kept, fresh, cins_cap, chain_k)
+        dead = csr._select_core(ud, ba, ud.capacity, True, chain_k)
+        new_cdel = csr._merge_core(cd, dead, cdel_cap, chain_k)
         return new_cins, new_cdel
 
     if sharded:
@@ -1093,8 +1125,10 @@ class RegionStore:
         rows = self._rel_rows(rel)
         # narrow is decided ONCE per projection (merges must keep one
         # dtype): auto-widen when an id already collides with the int32
-        # sentinel, like build_index's per-build check did
-        narrow = len(key_pos) <= 1 and \
+        # sentinel, like build_index's per-build check did.  Composite
+        # projections with a single-column hi word (3 bound columns)
+        # narrow too — the lo word is always int64.
+        narrow = csr.single_word_hi(len(key_pos)) and \
             (rows.size == 0 or int(rows.max()) < int(csr.SENTINEL32))
         reg = _Regions(key_pos, ext_pos, rel=rel, rel_arity=st.arity,
                        shard_w=self.shard_w,
@@ -1204,7 +1238,12 @@ class RegionStore:
         ub = max(int(update_batch), 1)
         P = self.pin_delta_marks(ub)
         sharded = bool(self.shard_w)
-        use_k = _merge_kernel_on() and not sharded
+        # statics must match the runtime call sites EXACTLY or the warm
+        # epoch recompiles: commit runs the fused fold kernel on every
+        # platform (sharded included — grid=(w,), no vmap), compaction
+        # keeps the single-host-only rank chain
+        commit_k = _merge_kernel_on()
+        compact_k = _merge_kernel_on() and not sharded
         S = jax.ShapeDtypeStruct
         pv = S((P,), jnp.int32)
         for rel, st in self._rels.items():
@@ -1237,15 +1276,69 @@ class RegionStore:
                         _warm_call(
                             _commit_fold, b_sds, ci, ci, d_sds, d_sds,
                             cins_cap=out, cdel_cap=out, sharded=sharded,
-                            use_kernel=use_k)
+                            use_kernel=commit_k)
                     for out in b_outs:
                         _warm_call(
                             _compact_fold, b_sds, ci, ci, out_cap=out,
-                            sharded=sharded, use_kernel=use_k)
+                            sharded=sharded, use_kernel=compact_k)
         spent = compilestats.since(snap)
         self.stats.prewarm_compiles += spent
         self._sync_compile_stats()
         return spent
+
+    def kernel_coverage(self, update_batch: int = 64) -> dict:
+        """Per-relation kernel-dispatch evidence for the CI coverage gate.
+
+        Traces the EXACT jitted entry points a warm epoch dispatches to —
+        the commit fold with the runtime statics (``_merge_kernel_on``,
+        current committed rung, pinned delta capacity) and one projection's
+        OLD-version signed-membership probe — and counts their
+        ``pallas_call`` equations.  Runtime launch counting would need host
+        callbacks (banned on the serving path); tracing the same (function,
+        statics, shapes) the warm jit cache serves is the static equivalent:
+        what the trace contains is what every warm epoch executes.  Pure
+        introspection — no ratchet observation, no store mutation."""
+        from repro.kernels import count_pallas_calls
+        if not self.device_resident:
+            return {}
+        use_k = _merge_kernel_on()
+        sharded = bool(self.shard_w)
+        P = self.pin_delta_marks(max(int(update_batch), 1))
+        out = {}
+        for rel, st in self._rels.items():
+            cc = int(st.lc_ins.key.shape[-1])  # current committed rung
+            li = _packed_index(np.zeros((0, st.arity), np.int32),
+                               self.shard_w, st.arity, capacity=P)
+            fold_calls = count_pallas_calls(
+                lambda ba, ci, cd, ui, ud: _commit_fold_impl(
+                    ba, ci, cd, ui, ud, cins_cap=cc, cdel_cap=cc,
+                    sharded=sharded, use_kernel=use_k),
+                st.lb, st.lc_ins, st.lc_del, li, li)
+            probe_calls = 0
+            for reg in self.projections.values():
+                if reg.rel != rel or reg.derived:
+                    continue
+                vi = reg.versioned("old")
+                shard0 = (lambda d: jax.tree_util.tree_map(
+                    lambda x: x[0], d)) if sharded else (lambda d: d)
+                vi = VersionedIndex(tuple(map(shard0, vi.pos)),
+                                    tuple(map(shard0, vi.neg)))
+                composite = vi.pos[0].lo is not None
+                qk = ((jnp.zeros(P, jnp.int64), jnp.zeros(P, jnp.int64))
+                      if composite else jnp.zeros(P, jnp.int64))
+                qv = jnp.zeros(P, jnp.int32)
+                probe_calls = count_pallas_calls(
+                    lambda a, b: vi.signed_member(a, b, use_kernel=True),
+                    qk, qv)
+                break
+            out[rel] = {
+                "composite": st.lb.lo is not None,
+                "key_dtype": str(st.lb.key.dtype),
+                "fold_pallas_calls": int(fold_calls),
+                "fused_fold": bool(use_k and fold_calls == 1),
+                "probe_pallas_calls": int(probe_calls),
+            }
+        return out
 
     def indices_sds_for(self, plan: Plan, rung,
                         update_batch: int) -> Indices:
@@ -1632,7 +1725,7 @@ class RegionStore:
             self._commit_host(batches)
             self._sync_compile_stats()
             return
-        use_k = _merge_kernel_on() and not self.shard_w
+        use_k = _merge_kernel_on()
         # donation would kill the old committed buffers the moment a fold
         # runs, stranding the rollback target — take the undonated variant
         # whenever a fault could abort the commit midway

@@ -77,48 +77,93 @@ def _lex_member(key: jax.Array, val: jax.Array, n: jax.Array,
     return hit.astype(jnp.int32)
 
 
-def make_extend_kernel(num_pos, num_neg, batch: int):
+def _lex_member3(key: jax.Array, lo: jax.Array, val: jax.Array,
+                 n: jax.Array, qh: jax.Array, ql: jax.Array,
+                 qv: jax.Array) -> jax.Array:
+    """Composite-key membership: (qh, ql, qv) in the lex-sorted
+    (key, lo, val) triples — same construction as :func:`_lex_member`,
+    through the generalized ``csr.lex_searchsorted_cols``."""
+    from repro.core.csr import lex_searchsorted_cols
+    cap = key.shape[0]
+    pos = lex_searchsorted_cols((key, lo, val), n, (qh, ql, qv))
+    pc = jnp.clip(pos, 0, cap - 1)
+    hit = ((key[pc] == qh) & (lo[pc] == ql) & (val[pc] == qv)
+           & (pos < n))
+    return hit.astype(jnp.int32)
+
+
+def _lex_range2(key: jax.Array, lo: jax.Array, qh: jax.Array,
+                ql: jax.Array, side: str) -> jax.Array:
+    """2-word lex bound over the FULL capacity (sentinel padding sorts
+    above every live pair) — the in-kernel twin of the composite branch of
+    ``csr.index_range``, via the same ``lex_searchsorted_cols``."""
+    from repro.core.csr import lex_searchsorted_cols
+    cap_n = jnp.asarray(key.shape[0], jnp.int32)
+    return lex_searchsorted_cols((key, lo), cap_n, (qh, ql), side
+                                 ).astype(jnp.int32)
+
+
+def make_extend_kernel(num_pos, num_neg, batch: int, has_lo=None):
     """Build the fused kernel for a level with ``len(num_pos)`` bindings;
     binding b has ``num_pos[b]`` positive / ``num_neg[b]`` negative regions.
 
     Ref layout (inputs): per binding, per region (positives then negatives):
-    key [cap], val [cap], n [1]; then per binding qk [W]; then wk [W],
-    valid [W].  Outputs: cand [B], row [B], alive [B], allowed [W],
-    consumed [W], counters [2] = (n_proposed, n_intersections).
+    key [cap], val [cap], n [1] — with a lo [cap] word after key when
+    ``has_lo[b]`` (composite 2-word keys); then per binding qk [W] (or
+    qk [W], ql [W] when composite); then wk [W], valid [W].  Outputs:
+    cand [B], row [B], alive [B], allowed [W], consumed [W],
+    counters [2] = (n_proposed, n_intersections).
     """
     NB = len(num_pos)
     B = batch
+    has_lo = tuple(has_lo) if has_lo else (False,) * NB
 
     def kernel(*refs):
         # ---- unpack the static ref layout --------------------------------
         pos_refs, neg_refs = [], []
         i = 0
         for b in range(NB):
-            pos_refs.append([refs[i + 3 * r: i + 3 * r + 3]
+            per = 4 if has_lo[b] else 3
+            pos_refs.append([refs[i + per * r: i + per * (r + 1)]
                              for r in range(num_pos[b])])
-            i += 3 * num_pos[b]
-            neg_refs.append([refs[i + 3 * r: i + 3 * r + 3]
+            i += per * num_pos[b]
+            neg_refs.append([refs[i + per * r: i + per * (r + 1)]
                              for r in range(num_neg[b])])
-            i += 3 * num_neg[b]
-        qk_refs = refs[i: i + NB]
-        wk_ref, valid_ref = refs[i + NB], refs[i + NB + 1]
+            i += per * num_neg[b]
+        qk_refs = []
+        for b in range(NB):
+            if has_lo[b]:
+                qk_refs.append((refs[i], refs[i + 1]))
+                i += 2
+            else:
+                qk_refs.append((refs[i],))
+                i += 1
+        wk_ref, valid_ref = refs[i], refs[i + 1]
         (cand_ref, row_ref, alive_ref, allowed_ref, consumed_ref,
-         counters_ref) = refs[i + NB + 2:]
+         counters_ref) = refs[i + 2:]
 
         wk = wk_ref[...]
         valid = valid_ref[...] > 0
         W = wk.shape[0]
 
+        def qwords(b):
+            return tuple(q[...] for q in qk_refs[b])
+
         # ---- count minimization (Fig 2 "Count") --------------------------
         starts, counts, totals = [], [], []
         for b in range(NB):
-            qk = qk_refs[b][...]
+            qw = qwords(b)
             ss, cc = [], []
             tot_b = jnp.zeros((W,), jnp.int32)
-            for key_ref, _val_ref, _n_ref in pos_refs[b]:
-                key = key_ref[...]
-                s = _searchsorted(key, qk, "left")
-                e = _searchsorted(key, qk, "right")
+            for reg in pos_refs[b]:
+                if has_lo[b]:
+                    key, lo = reg[0][...], reg[1][...]
+                    s = _lex_range2(key, lo, qw[0], qw[1], "left")
+                    e = _lex_range2(key, lo, qw[0], qw[1], "right")
+                else:
+                    key = reg[0][...]
+                    s = _searchsorted(key, qw[0], "left")
+                    e = _searchsorted(key, qw[0], "right")
                 ss.append(s)
                 cc.append(e - s)
                 tot_b = tot_b + (e - s)
@@ -150,7 +195,8 @@ def make_extend_kernel(num_pos, num_neg, batch: int):
         for b in range(NB):
             off = k_off
             v = jnp.zeros((B,), jnp.int32)
-            for r, (key_ref, val_ref, _n_ref) in enumerate(pos_refs[b]):
+            for r, reg in enumerate(pos_refs[b]):
+                key_ref, val_ref = reg[0], reg[-2]
                 cap = key_ref.shape[0]
                 c_r = counts[b][r][row]
                 s_r = starts[b][r][row]
@@ -164,15 +210,25 @@ def make_extend_kernel(num_pos, num_neg, batch: int):
         alive = pvalid
         n_isect = jnp.zeros((), jnp.int32)
         for b in range(NB):
-            qkb = qk_refs[b][...][row]
+            qw = qwords(b)
+            qkb = tuple(q[row] for q in qw)
             wpos = jnp.zeros((B,), jnp.int32)
             wneg = jnp.zeros((B,), jnp.int32)
-            for key_ref, val_ref, n_ref in pos_refs[b]:
-                wpos = wpos + _lex_member(key_ref[...], val_ref[...],
-                                          n_ref[0], qkb, cand)
-            for key_ref, val_ref, n_ref in neg_refs[b]:
-                wneg = wneg + _lex_member(key_ref[...], val_ref[...],
-                                          n_ref[0], qkb, cand)
+
+            def hits(reg):
+                if has_lo[b]:
+                    key_ref, lo_ref, val_ref, n_ref = reg
+                    return _lex_member3(key_ref[...], lo_ref[...],
+                                        val_ref[...], n_ref[0],
+                                        qkb[0], qkb[1], cand)
+                key_ref, val_ref, n_ref = reg
+                return _lex_member(key_ref[...], val_ref[...], n_ref[0],
+                                   qkb[0], cand)
+
+            for reg in pos_refs[b]:
+                wpos = wpos + hits(reg)
+            for reg in neg_refs[b]:
+                wneg = wneg + hits(reg)
             is_min = min_i[row] == b
             ok = jnp.where(is_min, ~(wneg > 0), (wpos - wneg) > 0)
             n_isect = n_isect + (alive & ~is_min).sum().astype(jnp.int32)
@@ -193,16 +249,20 @@ def make_extend_kernel(num_pos, num_neg, batch: int):
                                              "interpret"))
 def _extend_call(operands, qks, wk, valid, structure, batch: int,
                  interpret: bool = True):
-    """operands: flat tuple of (key, val, n[1]) per region, binding-major
-    with positives before negatives; structure: tuple of (num_pos, num_neg)
-    per binding."""
+    """operands: flat tuple of (key[, lo], val, n[1]) per region,
+    binding-major with positives before negatives; qks: per-binding packed
+    query words — one array, or a (hi, lo) pair for composite bindings;
+    structure: tuple of (num_pos, num_neg, has_lo) per binding."""
     num_pos = tuple(s[0] for s in structure)
     num_neg = tuple(s[1] for s in structure)
+    has_lo = tuple(bool(s[2]) if len(s) > 2 else False for s in structure)
     W = wk.shape[0]
     flat = []
-    for key, val, n in operands:
-        flat += [key, val, n]
-    flat += list(qks) + [wk, valid]
+    for reg in operands:
+        flat += list(reg)
+    for q in qks:
+        flat += list(q) if isinstance(q, tuple) else [q]
+    flat += [wk, valid]
     out_shape = (
         jax.ShapeDtypeStruct((batch,), jnp.int32),  # cand
         jax.ShapeDtypeStruct((batch,), jnp.int32),  # row
@@ -212,7 +272,7 @@ def _extend_call(operands, qks, wk, valid, structure, batch: int,
         jax.ShapeDtypeStruct((2,), jnp.int32),      # counters
     )
     return pl.pallas_call(
-        make_extend_kernel(num_pos, num_neg, batch),
+        make_extend_kernel(num_pos, num_neg, batch, has_lo=has_lo),
         out_shape=out_shape,
         interpret=interpret,
     )(*flat)

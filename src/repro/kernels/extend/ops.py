@@ -17,26 +17,40 @@ from repro.kernels.intersect.ops import default_interpret
 def fused_extend(pos, neg, qks, wk, valid, batch: int, interpret=None):
     """Run one fused extension step.
 
-    pos/neg: per-binding tuples of sorted-index regions (.key/.val/.n);
-    qks: per-binding packed lookup keys [W]; wk: rem-ext cursors [W];
-    valid: live-row mask [W]; batch: the proposal budget B'.
+    pos/neg: per-binding tuples of sorted-index regions (.key/.val/.n, with
+    the composite .lo word when the binding's prefix packs 2 lex words);
+    qks: per-binding packed lookup keys [W] — one array, or a (hi, lo)
+    int64 pair for composite bindings; wk: rem-ext cursors [W]; valid:
+    live-row mask [W]; batch: the proposal budget B'.
 
     Returns (cand [B], row [B], alive [B] bool, allowed [W],
     consumed [W] bool, counters [2] = (proposed, intersections)).
     """
-    structure = tuple((len(p), len(n)) for p, n in zip(pos, neg))
+    structure = []
     operands = []
     qks_cast = []
     for b, (p_regions, n_regions) in enumerate(zip(pos, neg)):
         regions = tuple(p_regions) + tuple(n_regions)
-        key_dtype = jnp.result_type(qks[b].dtype,
+        composite = isinstance(qks[b], tuple)
+        structure.append((len(p_regions), len(n_regions), composite))
+        qh = qks[b][0] if composite else qks[b]
+        key_dtype = jnp.result_type(qh.dtype,
                                     *[r.key.dtype for r in regions])
         for r in regions:
-            operands.append((r.key.astype(key_dtype), r.val,
-                             r.n.reshape(1).astype(jnp.int32)))
-        qks_cast.append(qks[b].astype(key_dtype))
+            if composite:
+                operands.append((r.key.astype(key_dtype),
+                                 r.lo.astype(jnp.int64), r.val,
+                                 r.n.reshape(1).astype(jnp.int32)))
+            else:
+                operands.append((r.key.astype(key_dtype), r.val,
+                                 r.n.reshape(1).astype(jnp.int32)))
+        if composite:
+            qks_cast.append((qh.astype(key_dtype),
+                             qks[b][1].astype(jnp.int64)))
+        else:
+            qks_cast.append(qh.astype(key_dtype))
     cand, row, alive, allowed, consumed, counters = _extend_call(
         tuple(operands), tuple(qks_cast), wk.astype(jnp.int32),
-        valid.astype(jnp.int32), structure=structure, batch=batch,
+        valid.astype(jnp.int32), structure=tuple(structure), batch=batch,
         interpret=default_interpret(interpret))
     return (cand, row, alive > 0, allowed, consumed > 0, counters)

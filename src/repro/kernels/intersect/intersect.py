@@ -60,15 +60,25 @@ def _router_depth(num_segments: int) -> int:
 
 
 def _two_level_hits(keys2d: jax.Array, vals2d: jax.Array, n: jax.Array,
-                    qk: jax.Array, qv: jax.Array) -> jax.Array:
-    """Vectorized two-level membership of (qk, qv) in a segment-major index.
+                    qk: jax.Array, qv: jax.Array,
+                    los2d: jax.Array | None = None,
+                    ql: jax.Array | None = None) -> jax.Array:
+    """Vectorized two-level membership of (qk[, ql], qv) in a segment-major
+    index.
 
     keys2d/vals2d: [num_segments, SEG] sorted lexicographically row-major
     with sentinel padding; n: [] live entries; qk/qv: [BQ].  Returns int32
-    [BQ] hit bits.  Column 0 of keys2d/vals2d *is* the router.
+    [BQ] hit bits.  Column 0 of keys2d/vals2d *is* the router.  For a
+    composite 2-word key, ``los2d`` [num_segments, SEG] int64 carries the
+    secondary word (sentinel padding sorts above all live entries, like the
+    hi word) and ``ql`` [BQ] the query lo word — the router compare and the
+    lane compare become 3-word lexicographic, same tile shapes, one extra
+    [BQ, SEG] row gather.
     """
     num_segments = keys2d.shape[0]
+    composite = los2d is not None
     rk = keys2d[:, 0]
+    rl = los2d[:, 0] if composite else None
     rv = vals2d[:, 0]
 
     # ---- level 1: vectorized binary search over the implicit router -------
@@ -82,7 +92,12 @@ def _two_level_hits(keys2d: jax.Array, vals2d: jax.Array, n: jax.Array,
         mk = rk[mc]
         mv = rv[mc]
         # segment leader less-or-equal than query -> go right
-        le = (mk < qk) | ((mk == qk) & (mv <= qv))
+        if composite:
+            ml = rl[mc]
+            le = (mk < qk) | ((mk == qk)
+                             & ((ml < ql) | ((ml == ql) & (mv <= qv))))
+        else:
+            le = (mk < qk) | ((mk == qk) & (mv <= qv))
         sel = lo < hi
         lo = jnp.where(le & sel, mid + 1, lo)
         hi = jnp.where(~le & sel, mid, hi)
@@ -97,6 +112,8 @@ def _two_level_hits(keys2d: jax.Array, vals2d: jax.Array, n: jax.Array,
     col = jax.lax.broadcasted_iota(jnp.int32, kseg.shape, 1)
     idx = seg[:, None] * SEG + col
     hit = (kseg == qk[:, None]) & (vseg == qv[:, None]) & (idx < n)
+    if composite:
+        hit = hit & (los2d[seg] == ql[:, None])
     return hit.max(axis=1).astype(jnp.int32)
 
 
@@ -110,53 +127,80 @@ def member_kernel(keys_ref, vals_ref, n_ref, qk_ref, qv_ref, out_ref):
                                    qk_ref[...], qv_ref[...])
 
 
+def member_kernel_lex(keys_ref, los_ref, vals_ref, n_ref, qk_ref, ql_ref,
+                      qv_ref, out_ref):
+    """Composite-key variant: BQ (qk, ql, qv) queries, 3-word lex compare."""
+    out_ref[...] = _two_level_hits(keys_ref[...], vals_ref[...], n_ref[0],
+                                   qk_ref[...], qv_ref[...],
+                                   los2d=los_ref[...], ql=ql_ref[...])
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _member_call(keys2d, vals2d, n, qk, qv, interpret: bool = True):
+def _member_call(keys2d, vals2d, n, qk, qv, interpret: bool = True,
+                 los2d=None, ql=None):
     B = qk.shape[0]
     num_segments = keys2d.shape[0]
     grid = (B // BQ,)
+    composite = los2d is not None
+    full = pl.BlockSpec((num_segments, SEG), lambda i: (0, 0))
+    in_specs = [full] + ([full] if composite else []) + [
+        full,
+        pl.BlockSpec((1,), lambda i: (0,)),
+        pl.BlockSpec((BQ,), lambda i: (i,)),  # query tile
+    ] + ([pl.BlockSpec((BQ,), lambda i: (i,))] if composite else []) + [
+        pl.BlockSpec((BQ,), lambda i: (i,)),
+    ]
+    operands = ((keys2d, los2d, vals2d, n, qk, ql, qv) if composite
+                else (keys2d, vals2d, n, qk, qv))
     return pl.pallas_call(
-        member_kernel,
+        member_kernel_lex if composite else member_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((num_segments, SEG), lambda i: (0, 0)),  # full index
-            pl.BlockSpec((num_segments, SEG), lambda i: (0, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((BQ,), lambda i: (i,)),  # query tile
-            pl.BlockSpec((BQ,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BQ,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
         interpret=interpret,
-    )(keys2d, vals2d, n, qk, qv)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
 # multi-region membership: every region of a VersionedIndex in one launch
 # ---------------------------------------------------------------------------
 
-def _make_multi_member_kernel(num_pos: int, num_neg: int):
+def _make_multi_member_kernel(num_pos: int, num_neg: int,
+                              composite: bool = False):
     """Kernel over ``num_pos`` positive + ``num_neg`` negative regions.
 
-    Ref layout: [keys2d, vals2d, n] per region (positives first), then
-    qk, qv; outputs (wpos, wneg) — int32 hit counts over the positive /
-    negative regions, from which membership is ``wpos - wneg > 0`` and
-    deletion is ``wneg > 0``.
+    Ref layout: [keys2d, vals2d, n] per region (positives first) — or
+    [keys2d, los2d, vals2d, n] when ``composite`` — then qk[, ql], qv;
+    outputs (wpos, wneg) — int32 hit counts over the positive / negative
+    regions, from which membership is ``wpos - wneg > 0`` and deletion is
+    ``wneg > 0``.
     """
     R = num_pos + num_neg
+    per = 4 if composite else 3
+    nq = 3 if composite else 2
 
     def kernel(*refs):
-        region_refs = refs[:3 * R]
-        qk_ref, qv_ref = refs[3 * R], refs[3 * R + 1]
-        wpos_ref, wneg_ref = refs[3 * R + 2], refs[3 * R + 3]
-        qk = qk_ref[...]
-        qv = qv_ref[...]
+        region_refs = refs[:per * R]
+        qrefs = refs[per * R: per * R + nq]
+        wpos_ref, wneg_ref = refs[per * R + nq], refs[per * R + nq + 1]
+        if composite:
+            qk, ql, qv = (q[...] for q in qrefs)
+        else:
+            (qk, qv), ql = (q[...] for q in qrefs), None
         wpos = jnp.zeros(qk.shape, jnp.int32)
         wneg = jnp.zeros(qk.shape, jnp.int32)
         for r in range(R):
-            keys_ref, vals_ref, n_ref = region_refs[3 * r: 3 * r + 3]
-            hits = _two_level_hits(keys_ref[...], vals_ref[...], n_ref[0],
-                                   qk.astype(keys_ref.dtype), qv)
+            regs = region_refs[per * r: per * (r + 1)]
+            if composite:
+                keys_ref, los_ref, vals_ref, n_ref = regs
+                hits = _two_level_hits(keys_ref[...], vals_ref[...], n_ref[0],
+                                       qk.astype(keys_ref.dtype), qv,
+                                       los2d=los_ref[...], ql=ql)
+            else:
+                keys_ref, vals_ref, n_ref = regs
+                hits = _two_level_hits(keys_ref[...], vals_ref[...], n_ref[0],
+                                       qk.astype(keys_ref.dtype), qv)
             if r < num_pos:
                 wpos = wpos + hits
             else:
@@ -169,26 +213,28 @@ def _make_multi_member_kernel(num_pos: int, num_neg: int):
 
 @functools.partial(jax.jit, static_argnames=("num_pos", "interpret"))
 def _multi_member_call(regions, qk, qv, num_pos: int,
-                       interpret: bool = True):
-    """regions: flat tuple of (keys2d [S_r, SEG], vals2d, n [1]) triples,
+                       interpret: bool = True, ql=None):
+    """regions: flat tuple of (keys2d [S_r, SEG], vals2d, n [1]) triples —
+    or (keys2d, los2d, vals2d, n) quads with ``ql`` for composite keys —
     positives first.  Returns (wpos, wneg) int32 [B]."""
     B = qk.shape[0]
     grid = (B // BQ,)
+    composite = ql is not None
     in_specs = []
     operands = []
-    for keys2d, vals2d, n in regions:
+    for reg in regions:
+        keys2d = reg[0]
         s = keys2d.shape[0]
-        in_specs += [
-            pl.BlockSpec((s, SEG), lambda i: (0, 0)),
-            pl.BlockSpec((s, SEG), lambda i: (0, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ]
-        operands += [keys2d, vals2d, n]
-    in_specs += [pl.BlockSpec((BQ,), lambda i: (i,)),
-                 pl.BlockSpec((BQ,), lambda i: (i,))]
-    operands += [qk, qv]
+        full = pl.BlockSpec((s, SEG), lambda i: (0, 0))
+        in_specs += [full] * (len(reg) - 1) + [
+            pl.BlockSpec((1,), lambda i: (0,))]
+        operands += list(reg)
+    qspec = pl.BlockSpec((BQ,), lambda i: (i,))
+    in_specs += [qspec] * (3 if composite else 2)
+    operands += [qk, ql, qv] if composite else [qk, qv]
     return pl.pallas_call(
-        _make_multi_member_kernel(num_pos, len(regions) - num_pos),
+        _make_multi_member_kernel(num_pos, len(regions) - num_pos,
+                                  composite=composite),
         grid=grid,
         in_specs=in_specs,
         out_specs=(pl.BlockSpec((BQ,), lambda i: (i,)),

@@ -45,9 +45,13 @@ def fused_fits(regions, batch: int = 0) -> bool:
     """Static check that a fused kernel over ``regions`` (.key/.val arrays,
     VMEM-resident) plus ~48 B/proposal of pipeline vectors fits the budget.
 
-    Only relevant to the compiled path — interpret mode has no VMEM."""
+    Composite regions carry the extra int64 ``lo`` word tile (8 B/slot) on
+    top of the hi word and the int32 val.  Only relevant to the compiled
+    path — interpret mode has no VMEM."""
     idx_bytes = sum(
-        r.key.shape[0] * (jnp.dtype(r.key.dtype).itemsize + 4)
+        r.key.shape[-1] * (jnp.dtype(r.key.dtype).itemsize + 4
+                           + (8 if getattr(r, "lo", None) is not None
+                              else 0))
         for r in regions)
     return idx_bytes + 48 * batch <= FUSED_VMEM_BUDGET
 
@@ -74,56 +78,100 @@ def _segment_major(keys: jax.Array, vals: jax.Array):
     return keys2d, vals2d
 
 
-def _pad_queries(qk: jax.Array, qv: jax.Array, key_dtype):
+def _segment_major_lo(los: jax.Array) -> jax.Array:
+    """The composite lo word as segment-major [num_segments, SEG] int64
+    tiles, sentinel (int64-max) padded — the companion of the hi-word tiles
+    from :func:`_segment_major` (same row split, column 0 joins the
+    router)."""
+    lmax = jnp.asarray(np.iinfo(np.int64).max, jnp.int64)
+    padded = max(((los.shape[0] + SEG - 1) // SEG) * SEG, SEG)
+    return _pad_to(los.astype(jnp.int64), padded, lmax).reshape(-1, SEG)
+
+
+def _pad_queries(qk: jax.Array, qv: jax.Array, key_dtype, ql=None):
     kmax = jnp.asarray(_key_max(jnp.dtype(key_dtype)), key_dtype)
     vmax = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
     B = qk.shape[0]
     Bp = max(((B + BQ - 1) // BQ) * BQ, BQ)
-    return (_pad_to(qk.astype(key_dtype), Bp, kmax),
-            _pad_to(qv.astype(jnp.int32), Bp, vmax))
+    qk_p = _pad_to(qk.astype(key_dtype), Bp, kmax)
+    qv_p = _pad_to(qv.astype(jnp.int32), Bp, vmax)
+    if ql is None:
+        return qk_p, qv_p
+    lmax = jnp.asarray(np.iinfo(np.int64).max, jnp.int64)
+    return qk_p, qv_p, _pad_to(ql.astype(jnp.int64), Bp, lmax)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _member_jit(keys, vals, n, qk, qv, interpret: bool):
+def _member_jit(keys, vals, n, qk, qv, interpret: bool, los=None, ql=None):
     keys2d, vals2d = _segment_major(keys, vals)
-    qk_p, qv_p = _pad_queries(qk, qv, keys.dtype)
+    if los is None:
+        qk_p, qv_p = _pad_queries(qk, qv, keys.dtype)
+        los2d = ql_p = None
+    else:
+        qk_p, qv_p, ql_p = _pad_queries(qk, qv, keys.dtype, ql=ql)
+        los2d = _segment_major_lo(los)
     bits = _member_call(keys2d, vals2d, n.reshape(1).astype(jnp.int32),
-                        qk_p, qv_p, interpret=interpret)
+                        qk_p, qv_p, interpret=interpret,
+                        los2d=los2d, ql=ql_p)
     return bits[:qk.shape[0]] > 0
 
 
 def member(keys: jax.Array, vals: jax.Array, n: jax.Array,
-           qk: jax.Array, qv: jax.Array, interpret=None) -> jax.Array:
-    """[B] bool membership via the Pallas two-level search kernel."""
+           qk: jax.Array, qv: jax.Array, interpret=None,
+           los=None, ql=None) -> jax.Array:
+    """[B] bool membership via the Pallas two-level search kernel.
+
+    Pass the index's ``los`` word and the query ``ql`` word for composite
+    (hi, lo) keys — same single launch, 3-word lex compares."""
     return _member_jit(keys, vals, n, qk, qv,
-                       interpret=default_interpret(interpret))
+                       interpret=default_interpret(interpret),
+                       los=los, ql=ql)
 
 
 @functools.partial(jax.jit, static_argnames=("num_pos", "interpret"))
-def _signed_member_jit(regions, qk, qv, num_pos: int, interpret: bool):
-    key_dtype = jnp.result_type(*[k.dtype for k, _, _ in regions])
-    prepped = tuple(
-        _segment_major(k.astype(key_dtype), v)
-        + (n.reshape(1).astype(jnp.int32),)
-        for k, v, n in regions)
-    qk_p, qv_p = _pad_queries(qk, qv, key_dtype)
+def _signed_member_jit(regions, qk, qv, num_pos: int, interpret: bool,
+                       ql=None):
+    key_dtype = jnp.result_type(*[reg[0].dtype for reg in regions])
+    composite = ql is not None
+    if composite:
+        def quad(k, lo, v, n):
+            k2d, v2d = _segment_major(k.astype(key_dtype), v)
+            return (k2d, _segment_major_lo(lo), v2d,
+                    n.reshape(1).astype(jnp.int32))
+        prepped = tuple(quad(*reg) for reg in regions)
+        qk_p, qv_p, ql_p = _pad_queries(qk, qv, key_dtype, ql=ql)
+    else:
+        prepped = tuple(
+            _segment_major(k.astype(key_dtype), v)
+            + (n.reshape(1).astype(jnp.int32),)
+            for k, v, n in regions)
+        qk_p, qv_p = _pad_queries(qk, qv, key_dtype)
+        ql_p = None
     wpos, wneg = _multi_member_call(prepped, qk_p, qv_p, num_pos=num_pos,
-                                    interpret=interpret)
+                                    interpret=interpret, ql=ql_p)
     B = qk.shape[0]
     return wpos[:B], wneg[:B]
 
 
-def signed_member(pos, neg, qk: jax.Array, qv: jax.Array,
-                  interpret=None):
+def signed_member(pos, neg, qk, qv: jax.Array, interpret=None):
     """Fused membership over all regions of a versioned index.
 
-    ``pos``/``neg``: sequences of sorted-index triples (objects with
-    .key/.val/.n, e.g. :class:`repro.core.csr.IndexData`).  One
-    ``pallas_call`` total.  Returns (wpos, wneg) int32 [B]: hit counts over
-    the positive / negative regions."""
-    regions = tuple((r.key, r.val, r.n) for r in tuple(pos) + tuple(neg))
+    ``pos``/``neg``: sequences of sorted-index regions (objects with
+    .key/.val/.n and optionally the composite .lo word, e.g.
+    :class:`repro.core.csr.IndexData`).  ``qk`` is one packed array, or a
+    (hi, lo) pair when the regions are composite.  One ``pallas_call``
+    total.  Returns (wpos, wneg) int32 [B]: hit counts over the positive /
+    negative regions."""
+    all_regions = tuple(pos) + tuple(neg)
+    if isinstance(qk, tuple):
+        qk, ql = qk
+        regions = tuple((r.key, r.lo, r.val, r.n) for r in all_regions)
+    else:
+        ql = None
+        regions = tuple((r.key, r.val, r.n) for r in all_regions)
     if not regions:
         z = jnp.zeros(qk.shape, jnp.int32)
         return z, z
     return _signed_member_jit(regions, qk, qv, num_pos=len(tuple(pos)),
-                              interpret=default_interpret(interpret))
+                              interpret=default_interpret(interpret),
+                              ql=ql)

@@ -1,0 +1,278 @@
+"""Pallas kernel: the fused per-relation commit fold — ONE launch per epoch.
+
+The committed-region fold of one epoch (``delta._commit_fold_impl``)
+
+    cins' = (cins \\ udel) ∪ (uins \\ cdel)
+    cdel' = cdel ∪ (udel ∩ base)
+
+is a chain of five rank-based select/merge folds; run as separate jitted jnp
+stages every stage round-trips its delta-sized operands through HBM and
+re-issues its own fixed-depth searches.  This kernel computes BOTH outputs
+in a single ``pallas_call``: the four committed/staged regions live in VMEM
+for the whole fold, the select stages become keep-mask + cumsum compaction
+gathers, and the merge stages become rank gathers — no scatters anywhere;
+every output slot locates its source by binary search, which keeps the body
+in the same fixed-depth-search vocabulary as the intersect/extend kernels.
+
+``base`` is deliberately NOT a kernel input: it is the one region whose
+size is O(|E|) rather than O(|Δ| + |committed|) and would blow the VMEM
+budget.  Its only role in the fold is the membership probe ``udel ∩ base``,
+which the caller precomputes with the jnp fixed-depth search (a delta-sized
+bit vector, O(|Δ|·log|base|)) and passes in as ``in_ba`` — the fold itself
+stays one launch per relation.
+
+Select (keep-mask compaction, gather form):
+
+    kc     = inclusive cumsum of keep;  n_out = kc[cap-1]
+    out[t] = src[first i with kc[i] == t+1]   for t < n_out, sentinel after
+
+Disjoint merge (rank-gather form) of sentinel-padded A [capA], B [capB]
+(B pre-deduplicated against A, so live entries are disjoint):
+
+    rank_a[i] = i + |{B < A[i]}|    (searched over the FULL padded B with
+    rank_b[j] = j + |{A <= B[j]}|    side left/right, so A's sentinel
+                                     padding ranks land in
+                                     [n_a+n_b, capA-1+n_b] and B's in
+                                     [capA+n_b, ∞) — both rank arrays are
+                                     strictly increasing and collision-free)
+    out[t] = A[ia] if rank_a[ia] == t else B[ib] if rank_b[ib] == t
+             else sentinel,   ia/ib = searchsorted(rank_*, t, left)
+
+Sentinel slots gather sentinel sources, so the outputs carry exactly the
+``csr._empty_like_caps`` padding and both outputs are bit-identical to the
+jnp chain (tests/test_merge_kernel.py).  Composite 2-word keys ride along
+as one extra int64 column in every compare — ``csr.lex_searchsorted_cols``
+runs unchanged inside the kernel body, so parity is by construction.
+
+Sharded stores run the SAME kernel over ``grid=(w,)`` with (1, cap) blocks:
+ownership is by packed key, so every shard's fold is local and the
+distributed commit needs no vmap over per-shard launches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.csr import IndexData, SENTINEL, lex_searchsorted_cols
+from repro.kernels.extend.extend import _searchsorted
+from repro.kernels.intersect.ops import FUSED_VMEM_BUDGET, default_interpret
+
+
+def _iota(n: int) -> jax.Array:
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+
+
+def _sentinels(cols):
+    """Per-column padding values of the IndexData layout: key sentinel by
+    dtype, int64 sentinel for the composite lo word, 0 for val — exactly
+    ``csr._empty_like_caps``."""
+    key = cols[0]
+    sent = jnp.asarray(np.iinfo(np.dtype(key.dtype.name)).max, key.dtype)
+    if len(cols) == 3:
+        return (sent, jnp.asarray(SENTINEL, jnp.int64), jnp.int32(0))
+    return (sent, jnp.int32(0))
+
+
+def _member(cols, n, qcols):
+    """[B] bool: is each qcols row among the first ``n`` rows of the
+    lex-sorted ``cols``?  One fixed-depth search + equality check."""
+    cap = cols[0].shape[0]
+    pos = lex_searchsorted_cols(cols, n, qcols)
+    pc = jnp.clip(pos, 0, cap - 1)
+    hit = pos < n
+    for c, q in zip(cols, qcols):
+        hit = hit & (c[pc] == q)
+    return hit
+
+
+def _compact(cols, keep, sents):
+    """Gather the kept rows of ``cols`` to a dense sentinel-padded prefix."""
+    cap = keep.shape[0]
+    kc = jnp.cumsum(keep.astype(jnp.int32))
+    n_out = kc[cap - 1]
+    t = _iota(cap)
+    src = jnp.clip(_searchsorted(kc, t + 1, "left"), 0, cap - 1)
+    valid = t < n_out
+    return tuple(jnp.where(valid, c[src], s)
+                 for c, s in zip(cols, sents)), n_out
+
+
+def _rank_merge(a_cols, b_cols, n_a, n_b, out_cap: int, sents):
+    """Disjoint sorted merge by rank gather (see module docstring)."""
+    capA = a_cols[0].shape[0]
+    capB = b_cols[0].shape[0]
+    rank_a = _iota(capA) + lex_searchsorted_cols(
+        b_cols, jnp.asarray(capB, jnp.int32), a_cols, "left")
+    rank_b = _iota(capB) + lex_searchsorted_cols(
+        a_cols, jnp.asarray(capA, jnp.int32), b_cols, "right")
+    t = _iota(out_cap)
+    ia = jnp.clip(_searchsorted(rank_a, t, "left"), 0, capA - 1)
+    ib = jnp.clip(_searchsorted(rank_b, t, "left"), 0, capB - 1)
+    hit_a = rank_a[ia] == t
+    hit_b = rank_b[ib] == t
+    outs = tuple(jnp.where(hit_a, ac[ia], jnp.where(hit_b, bc[ib], s))
+                 for ac, bc, s in zip(a_cols, b_cols, sents))
+    return outs, n_a + n_b
+
+
+def make_fold_kernel(composite: bool):
+    """Build the fused commit-fold kernel.
+
+    Ref layout (inputs): per region in (cins, cdel, uins, udel) order:
+    key [1, cap], lo [1, cap] (composite only), val [1, cap], n [1];
+    then in_ba [1, cap_udel] int32 (``udel ∩ base`` bits, precomputed).
+    Outputs: cins' then cdel', each key[, lo], val as [1, out_cap] plus
+    n [1].
+    """
+    per = 4 if composite else 3
+
+    def kernel(*refs):
+        regs = [refs[per * r: per * (r + 1)] for r in range(4)]
+        in_ba_ref = refs[per * 4]
+        out_refs = refs[per * 4 + 1:]
+
+        def load(reg):
+            return tuple(r[...][0] for r in reg[:-1]), reg[-1][0]
+
+        (ci, n_ci), (cd, n_cd), (ui, n_ui), (ud, n_ud) = \
+            (load(r) for r in regs)
+        in_ba = in_ba_ref[...][0]
+        sents = _sentinels(ci)
+
+        # ---- cins' = (cins \ udel) ∪ (uins \ cdel \ kept) -----------------
+        keep_ci = (_iota(ci[0].shape[0]) < n_ci) & ~_member(ud, n_ud, ci)
+        kept, n_kept = _compact(ci, keep_ci, sents)
+        keep_ui = ((_iota(ui[0].shape[0]) < n_ui)
+                   & ~_member(cd, n_cd, ui) & ~_member(kept, n_kept, ui))
+        fresh, n_fresh = _compact(ui, keep_ui, sents)
+        cins_cap = out_refs[0].shape[-1]
+        new_ci, n_new_ci = _rank_merge(kept, fresh, n_kept, n_fresh,
+                                       cins_cap, sents)
+
+        # ---- cdel' = cdel ∪ (udel ∩ base, deduped vs cdel) ----------------
+        keep_ud = ((_iota(ud[0].shape[0]) < n_ud) & (in_ba > 0)
+                   & ~_member(cd, n_cd, ud))
+        dead, n_dead = _compact(ud, keep_ud, sents)
+        cdel_cap = out_refs[per].shape[-1]
+        new_cd, n_new_cd = _rank_merge(cd, dead, n_cd, n_dead,
+                                       cdel_cap, sents)
+
+        o = 0
+        for cols, n_out in ((new_ci, n_new_ci), (new_cd, n_new_cd)):
+            for c in cols:
+                out_refs[o][...] = c[None, :]
+                o += 1
+            out_refs[o][...] = n_out.reshape(1)
+            o += 1
+
+    return kernel
+
+
+def fold_fits(cins: IndexData, cdel: IndexData, uins: IndexData,
+              udel: IndexData, cins_cap: int, cdel_cap: int) -> bool:
+    """Static check that one grid step's working set — the four regions,
+    the in_ba bits, both outputs, and the int32 cumsum/rank temporaries
+    (bounded by a 2x factor) — fits the compiled kernel's VMEM budget."""
+    composite = cins.lo is not None
+    extra = 8 if composite else 0
+
+    def b(cap, dt):
+        return int(cap) * (jnp.dtype(dt).itemsize + 4 + extra)
+
+    regions = (cins, cdel, uins, udel)
+    total = sum(b(r.key.shape[-1], r.key.dtype) for r in regions)
+    total += 4 * udel.key.shape[-1]  # in_ba
+    total += b(cins_cap, cins.key.dtype) + b(cdel_cap, cdel.key.dtype)
+    return 2 * total <= FUSED_VMEM_BUDGET
+
+
+def commit_fold_ok(cins: IndexData, cdel: IndexData, uins: IndexData,
+                   udel: IndexData, cins_cap: int, cdel_cap: int,
+                   interpret=None) -> bool:
+    """Can the fused kernel serve this fold?  Regions must agree on the
+    key layout (all composite or none, one hi-word dtype — true by
+    construction for the regions of one RegionStore), and a compiled
+    (non-interpret) call must fit the VMEM budget."""
+    regions = (cins, cdel, uins, udel)
+    if len({r.lo is None for r in regions}) > 1:
+        return False
+    if len({jnp.dtype(r.key.dtype) for r in regions}) > 1:
+        return False
+    return default_interpret(interpret) or fold_fits(
+        cins, cdel, uins, udel, cins_cap, cdel_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cins_cap", "cdel_cap",
+                                             "sharded", "interpret"))
+def _fold_call(cins, cdel, uins, udel, in_ba, cins_cap: int, cdel_cap: int,
+               sharded: bool, interpret: bool):
+    composite = cins.lo is not None
+    G = cins.key.shape[0] if sharded else 1
+
+    def pack(d):
+        def lead(a):
+            return a if sharded else a[None]
+        cols = [lead(d.key)] + ([lead(d.lo)] if composite else []) \
+            + [lead(d.val)]
+        return cols + [d.n.reshape(G).astype(jnp.int32)]
+
+    flat = pack(cins) + pack(cdel) + pack(uins) + pack(udel)
+    flat.append(in_ba.astype(jnp.int32).reshape(G, -1))
+    in_specs = [
+        pl.BlockSpec((1, a.shape[-1]), lambda i: (i, 0)) if a.ndim == 2
+        else pl.BlockSpec((1,), lambda i: (i,))
+        for a in flat]
+    kd = cins.key.dtype
+
+    def outset(cap):
+        shapes = [jax.ShapeDtypeStruct((G, cap), kd)]
+        if composite:
+            shapes.append(jax.ShapeDtypeStruct((G, cap), jnp.int64))
+        shapes.append(jax.ShapeDtypeStruct((G, cap), jnp.int32))
+        shapes.append(jax.ShapeDtypeStruct((G,), jnp.int32))
+        return shapes
+
+    out_shape = tuple(outset(cins_cap) + outset(cdel_cap))
+    out_specs = tuple(
+        pl.BlockSpec((1, s.shape[-1]), lambda i: (i, 0))
+        if len(s.shape) == 2 else pl.BlockSpec((1,), lambda i: (i,))
+        for s in out_shape)
+    outs = pl.pallas_call(
+        make_fold_kernel(composite),
+        grid=(G,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*flat)
+    per = 4 if composite else 3
+
+    def unpack(tup):
+        key, val, n = tup[0], tup[-2], tup[-1]
+        lo = tup[1] if composite else None
+        if not sharded:
+            key, val, n = key[0], val[0], n[0]
+            lo = None if lo is None else lo[0]
+        return IndexData(key, val, n, lo)
+
+    return unpack(outs[:per]), unpack(outs[per:])
+
+
+def commit_fold(cins: IndexData, cdel: IndexData, uins: IndexData,
+                udel: IndexData, in_ba: jax.Array, *, cins_cap: int,
+                cdel_cap: int, sharded: bool = False, interpret=None):
+    """(cins', cdel') of one epoch in a single ``pallas_call``.
+
+    ``in_ba``: int32/bool [cap_udel] (leading [w] axis when ``sharded``)
+    membership bits of udel's rows in the base region, precomputed by the
+    caller with the jnp fixed-depth probe.  Caller is responsible for
+    gating via :func:`commit_fold_ok`.
+    """
+    return _fold_call(cins, cdel, uins, udel, in_ba,
+                      cins_cap=int(cins_cap), cdel_cap=int(cdel_cap),
+                      sharded=bool(sharded),
+                      interpret=default_interpret(interpret))

@@ -1,11 +1,13 @@
-"""Routing for the merge rank kernel: compiled Mosaic on TPU, jnp oracle
-elsewhere.
+"""Routing for the merge rank kernel: compiled Mosaic on TPU, interpreted
+kernel elsewhere.
 
-Unlike the membership kernels, interpret mode is NOT a production fallback
-here — the rank pass sits on the per-epoch commit path, where interpret
-overhead would swamp the merge win — so off-TPU the jnp oracle runs
-directly and the interpreted kernel exists only for parity tests
-(``interpret=True``).
+Platform gating matches the intersect kernels (``default_interpret``): on a
+TPU backend the compiled kernel runs IF the VMEM-resident index fits the
+budget (an over-budget index falls back to the jnp oracle instead of
+failing Mosaic compilation); off-TPU the interpreted kernel is the
+*production* path — interpret mode lowers the kernel body through XLA, so
+the 4-device CPU CI lane exercises the same fused commit-fold code path the
+TPU runs, with bit-exact results (tests/test_merge_kernel.py).
 """
 from __future__ import annotations
 
@@ -16,22 +18,24 @@ from repro.kernels.merge.ref import rank_ref
 
 
 def rank_lt_le(keys: jax.Array, vals: jax.Array, n: jax.Array,
-               qk: jax.Array, qv: jax.Array, interpret=None):
-    """(lt, le) merge ranks of each (qk, qv) in the sorted index arrays.
+               qk: jax.Array, qv: jax.Array, lo=None, qlo=None,
+               interpret=None):
+    """(lt, le) merge ranks of each (qk[, qlo], qv) in the sorted index.
 
-    ``interpret=None``: compiled kernel on a TPU backend — IF the
-    VMEM-resident index fits the budget (compaction folds pass the full
-    base region here; an over-budget index falls back to the jnp oracle
-    instead of failing Mosaic, same policy as the intersect kernels) —
-    jnp oracle elsewhere.  ``interpret=True`` forces the interpreted
-    kernel (parity tests only); ``interpret=False`` forces compiled
-    Mosaic.
+    ``lo``/``qlo``: the int64 secondary words when the index carries
+    composite 2-word keys.  ``interpret=None`` defers to platform
+    detection: compiled kernel on TPU when the index fits the VMEM budget,
+    jnp oracle when it does not, interpreted kernel off-TPU.  An explicit
+    bool forces that kernel mode.
     """
     if interpret is None:
-        from repro.kernels.intersect.ops import FUSED_VMEM_BUDGET
-        idx_bytes = keys.shape[-1] * (keys.dtype.itemsize + 4)
-        if jax.default_backend() != "tpu" or \
-                idx_bytes > FUSED_VMEM_BUDGET:
-            return rank_ref(keys, vals, n, qk, qv)
-        interpret = False
-    return rank_counts(keys, vals, n, qk, qv, interpret=interpret)
+        from repro.kernels.intersect.ops import (FUSED_VMEM_BUDGET,
+                                                 default_interpret)
+        interpret = default_interpret(None)
+        if not interpret:
+            idx_bytes = keys.shape[-1] * (keys.dtype.itemsize + 4
+                                          + (8 if lo is not None else 0))
+            if idx_bytes > FUSED_VMEM_BUDGET:
+                return rank_ref(keys, vals, n, qk, qv, lo=lo, qlo=qlo)
+    return rank_counts(keys, vals, n, qk, qv, interpret=bool(interpret),
+                       lo=lo, qlo=qlo)

@@ -1,22 +1,33 @@
 """Pure-jnp oracle for the merge rank kernel.
 
-Two fixed-depth lexicographic binary searches over the sorted (key, val)
-dual arrays — exactly ``csr.lex_searchsorted`` with both sides.  The Pallas
-kernel (`merge.py`) must match this bit-exactly (tests/test_merge_kernel.py).
+Two fixed-depth lexicographic binary searches over the sorted dual (or, for
+composite 2-word keys, triple) arrays — exactly ``csr.lex_searchsorted_cols``
+with both sides.  The Pallas kernel (`merge.py`) must match this bit-exactly
+(tests/test_merge_kernel.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.csr import lex_searchsorted
+from repro.core.csr import lex_searchsorted, lex_searchsorted_cols
 
 
 def rank_ref(keys: jax.Array, vals: jax.Array, n: jax.Array,
-             qk: jax.Array, qv: jax.Array):
-    """(lt, le) int32 [B]: entries lexicographically < / <= each query."""
-    qk = qk.astype(keys.dtype)
+             qk: jax.Array, qv: jax.Array, lo=None, qlo=None):
+    """(lt, le) int32 [B]: entries lexicographically < / <= each query.
+
+    ``lo``/``qlo`` carry the int64 secondary words for composite keys.  The
+    hi-word compare promotes mixed widths (``lex_searchsorted_cols`` never
+    truncates), matching the kernel wrapper's promotion.
+    """
     qv = qv.astype(jnp.int32)
+    if lo is not None:
+        cols = (keys, lo.astype(jnp.int64), vals)
+        qcols = (qk, qlo.astype(jnp.int64), qv)
+        return (lex_searchsorted_cols(cols, n, qcols, side="left"),
+                lex_searchsorted_cols(cols, n, qcols, side="right"))
+    # mixed widths promote inside the column compares — never downcast qk
     lt = lex_searchsorted(keys, vals, n, qk, qv, side="left")
     le = lex_searchsorted(keys, vals, n, qk, qv, side="right")
     return lt, le

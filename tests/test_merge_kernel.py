@@ -50,6 +50,64 @@ def test_rank_kernel_is_single_launch():
     assert calls == 1
 
 
+@pytest.mark.parametrize("nk", [3, 4])
+@pytest.mark.parametrize("n", [0, 1, 40, 250])
+def test_rank_kernel_composite_matches_ref(nk, n):
+    """Composite (hi, lo) keys: 3-word lex ranks, kernel == jnp oracle.
+    nk=3 builds a narrow int32 hi word, nk=4 a full int64 pair."""
+    rng = np.random.default_rng(100 + nk + n)
+    t = rng.integers(0, 25, (n, nk + 1)).astype(np.int32)
+    idx = csr.build_index(t, tuple(range(nk)), nk)
+    assert idx.composite
+    assert idx.key.dtype == (jnp.int32 if csr.single_word_hi(nk)
+                             else jnp.int64)
+    B = 97
+    probes = rng.integers(0, 30, (B, nk + 1)).astype(np.int32)
+    qh, ql = csr.pack_key(tuple(probes[:, i] for i in range(nk)))
+    qh, ql = jnp.asarray(qh), jnp.asarray(ql)
+    qv = jnp.asarray(probes[:, nk])
+    lt_r, le_r = rank_ref(idx.key, idx.val, idx.n, qh, qv,
+                          lo=idx.lo, qlo=ql)
+    lt_k, le_k = rank_counts(idx.key, idx.val, idx.n, qh, qv,
+                             interpret=True, lo=idx.lo, qlo=ql)
+    np.testing.assert_array_equal(np.asarray(lt_r), np.asarray(lt_k))
+    np.testing.assert_array_equal(np.asarray(le_r), np.asarray(le_k))
+    member = np.asarray(csr.index_member(idx, (qh, ql), qv))
+    np.testing.assert_array_equal(np.asarray(le_k) > np.asarray(lt_k),
+                                  member)
+
+
+def test_rank_kernel_narrow_promote_resentinels_padding():
+    """int32 index probed with int64 queries above SENTINEL32: the widened
+    padding must still sort above every query or the router walks into it."""
+    rng = np.random.default_rng(9)
+    idx = _index(rng, 60, True)  # narrow, padding = SENTINEL32
+    big = np.int64(csr.SENTINEL32) + np.int64(5)
+    qk = jnp.asarray(np.array([0, 10, big, csr.SENTINEL - 1], np.int64))
+    qv = jnp.asarray(np.array([1, 1, 1, 1], np.int32))
+    lt_r, le_r = rank_ref(idx.key, idx.val, idx.n, qk, qv)
+    lt_k, le_k = rank_counts(idx.key, idx.val, idx.n, qk, qv,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(lt_r), np.asarray(lt_k))
+    np.testing.assert_array_equal(np.asarray(le_r), np.asarray(le_k))
+    # queries above every live key rank at exactly n, not into the padding
+    assert int(np.asarray(lt_k)[2]) == int(idx.n)
+
+
+def test_rank_kernel_composite_is_single_launch():
+    rng = np.random.default_rng(11)
+    t = rng.integers(0, 25, (150, 4)).astype(np.int32)
+    idx = csr.build_index(t, (0, 1, 2), 3)
+    probes = rng.integers(0, 25, (64, 4)).astype(np.int32)
+    qh, ql = csr.pack_key(tuple(probes[:, i] for i in range(3)))
+    calls = count_pallas_calls(
+        lambda k, l, v, n, a, b, c: rank_counts(
+            k, v, n, a, c, interpret=True, lo=l, qlo=b),
+        idx.key, idx.lo, idx.val, idx.n,
+        jnp.asarray(qh), jnp.asarray(ql), jnp.asarray(probes[:, 3]))
+    assert calls == 1
+
+
 def test_merge_fold_through_kernel_matches_jnp():
     """csr.merge_index(use_kernel=True) (interpret) == the jnp rank path."""
     rng = np.random.default_rng(8)
@@ -67,3 +125,77 @@ def test_merge_fold_through_kernel_matches_jnp():
     np.testing.assert_array_equal(np.asarray(m_k.key), np.asarray(m_j.key))
     np.testing.assert_array_equal(np.asarray(m_k.val), np.asarray(m_j.val))
     assert int(m_k.n) == int(m_j.n)
+
+
+# ---------------------------------------------------------------------------
+# fused commit fold: ONE pallas_call per relation == the five-stage chain
+# ---------------------------------------------------------------------------
+
+from repro.core import delta as D  # noqa: E402
+
+
+def _regions(rng, arity, shard_w, sizes=(120, 30, 20, 25, 15)):
+    """(base, cins, cdel, uins, udel) random packed regions, one dtype."""
+    def mk(n, cap):
+        rows = rng.integers(0, 30, (n, arity)).astype(np.int32)
+        rows = np.unique(rows, axis=0)
+        return D._packed_index(rows, shard_w, arity, capacity=cap)
+    nb, nci, ncd, nui, nud = sizes
+    return (mk(nb, 256), mk(nci, 128), mk(ncd, 128),
+            mk(nui, 64), mk(nud, 64))
+
+
+def _assert_index_equal(a, b):
+    assert a.key.dtype == b.key.dtype
+    np.testing.assert_array_equal(np.asarray(a.key), np.asarray(b.key))
+    np.testing.assert_array_equal(np.asarray(a.val), np.asarray(b.val))
+    np.testing.assert_array_equal(np.asarray(a.n), np.asarray(b.n))
+    assert (a.lo is None) == (b.lo is None)
+    if a.lo is not None:
+        np.testing.assert_array_equal(np.asarray(a.lo), np.asarray(b.lo))
+
+
+@pytest.mark.parametrize("shard_w", [0, 4], ids=["local", "w4"])
+@pytest.mark.parametrize("arity", [2, 3, 4])
+def test_fused_commit_fold_matches_chain(arity, shard_w):
+    """use_kernel=True (fused pallas fold) == use_kernel=False (jnp chain)
+    bit-exactly over every key layout: int64 single word (arity 2), narrow
+    int32 hi composite (arity 3), int64 pair composite (arity 4)."""
+    rng = np.random.default_rng(40 + arity + shard_w)
+    for trial in range(3):
+        ba, ci, cd, ui, ud = _regions(rng, arity, shard_w)
+        kw = dict(cins_cap=256, cdel_cap=256, sharded=bool(shard_w))
+        k_ci, k_cd = D._commit_fold_impl(ba, ci, cd, ui, ud,
+                                         use_kernel=True, **kw)
+        j_ci, j_cd = D._commit_fold_impl(ba, ci, cd, ui, ud,
+                                         use_kernel=False, **kw)
+        _assert_index_equal(k_ci, j_ci)
+        _assert_index_equal(k_cd, j_cd)
+
+
+def test_fused_commit_fold_empty_regions():
+    """Zero-filled prototypes (the AOT prewarm inputs) run the fused fold
+    without error and produce empty outputs."""
+    for arity in (2, 3, 4):
+        empty = np.zeros((0, arity), np.int32)
+        ba = D._packed_index(empty, 0, arity, capacity=256)
+        ci = D._packed_index(empty, 0, arity, capacity=128)
+        ui = D._packed_index(empty, 0, arity, capacity=64)
+        k_ci, k_cd = D._commit_fold_impl(
+            ba, ci, ci, ui, ui, cins_cap=256, cdel_cap=256,
+            sharded=False, use_kernel=True)
+        assert int(k_ci.n) == 0 and int(k_cd.n) == 0
+
+
+@pytest.mark.parametrize("arity", [2, 3, 4])
+def test_fused_commit_fold_is_one_launch(arity):
+    """The whole commit fold — both outputs — is ONE pallas_call; only the
+    delta-sized udel ∩ base rank probe stays outside the kernel."""
+    rng = np.random.default_rng(50 + arity)
+    ba, ci, cd, ui, ud = _regions(rng, arity, 0)
+    calls = count_pallas_calls(
+        lambda *r: D._commit_fold_impl(
+            *r, cins_cap=256, cdel_cap=256, sharded=False,
+            use_kernel=True),
+        ba, ci, cd, ui, ud)
+    assert calls == 1

@@ -97,7 +97,9 @@ def test_composite_build_member_range_match_sets(nk):
     t = _rand_rel(rng, 15, 300, nk + 1)
     idx = csr.build_index(t, tuple(range(nk)), nk)
     assert idx.composite and idx.lo is not None
-    assert idx.key.dtype == jnp.int64
+    # single-column hi words (nk=3) narrow to int32; packed pairs stay int64
+    assert idx.key.dtype == (jnp.int32 if csr.single_word_hi(nk)
+                             else jnp.int64)
     # membership: random probes + every live tuple
     probes = np.concatenate([_rand_rel(rng, 17, 200, nk + 1), t[:50]])
     qk = csr.pack_key(tuple(probes[:, i] for i in range(nk)))
@@ -121,7 +123,8 @@ def test_composite_build_member_range_match_sets(nk):
     trip = np.stack([k, lo, v], 1)
     assert (np.diff([tuple(r) for r in trip.tolist()], axis=0) != 0).any(1) \
         .all() if n > 1 else True
-    assert (np.asarray(idx.key)[n:] == csr.SENTINEL).all()
+    hi_sent = csr.SENTINEL32 if idx.key.dtype == jnp.int32 else csr.SENTINEL
+    assert (np.asarray(idx.key)[n:] == hi_sent).all()
     assert (np.asarray(idx.lo)[n:] == csr.SENTINEL).all()
     # pack/unpack roundtrip
     np.testing.assert_array_equal(csr.unpack_key(qk, nk), probes[:, :nk])
